@@ -1,0 +1,35 @@
+"""Benchmark timing helpers (paper §VII.A: median of N after warmup)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import jax
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, warmup: int = 3, iters: int = 20) -> Dict:
+    """Median/IQR wall-clock of ``fn(*args)`` (blocks on the result)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times = np.asarray(times)
+    return {
+        "median_s": float(np.median(times)),
+        "p25_s": float(np.percentile(times, 25)),
+        "p75_s": float(np.percentile(times, 75)),
+        "iters": iters,
+    }
+
+
+def fmt_table(headers, rows) -> str:
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows))
+              for i, h in enumerate(headers)]
+    fmt = lambda row: " | ".join(str(c).ljust(w)
+                                 for c, w in zip(row, widths))
+    sep = "-+-".join("-" * w for w in widths)
+    return "\n".join([fmt(headers), sep] + [fmt(r) for r in rows])

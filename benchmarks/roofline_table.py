@@ -1,0 +1,108 @@
+"""Benchmark 3 — the roofline table (§Roofline of EXPERIMENTS.md).
+
+Aggregates the dry-run artifacts (results/dryrun/*.json) into the
+per-(arch × shape × mesh) three-term roofline table, flags the dominant
+term, and emits the markdown EXPERIMENTS.md embeds.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.common import fmt_table
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def load_cells(tag: str = "baseline",
+               directory: Optional[str] = None) -> List[Dict]:
+    directory = directory or DRYRUN_DIR
+    cells = []
+    for f in sorted(glob.glob(os.path.join(directory, f"{tag}_*.json"))):
+        cells.append(json.load(open(f)))
+    return cells
+
+
+def _fmt_cell(r: Dict) -> List:
+    t = r["roofline"]
+    coll = r["collectives"]
+    return [
+        r["arch"], r["shape"], r["mesh"],
+        f"{t['t_compute_s']:.4f}",
+        f"{t['t_memory_s']:.4f}",
+        f"{t['t_collective_s']:.4f}",
+        t["dominant"],
+        f"{t['roofline_fraction']:.3f}",
+        f"{t['model_vs_hlo_flops']:.2f}",
+        f"{coll['total_wire_bytes'] / 1e9:.1f}",
+    ]
+
+
+def render(cells: List[Dict], title: str = "Roofline (baseline)") -> str:
+    ok = [c for c in cells if c.get("status") == "ok"]
+    rows = [_fmt_cell(c) for c in ok]
+    headers = ["arch", "shape", "mesh", "t_comp(s)", "t_mem(s)",
+               "t_coll(s)", "dominant", "roofline_frac",
+               "model/hlo", "wire GB/chip"]
+    out = [f"== {title}: {len(ok)} cells ==", fmt_table(headers, rows)]
+    errs = [c for c in cells if c.get("status") == "error"]
+    if errs:
+        out.append(f"\nERROR cells ({len(errs)}):")
+        out += [f"  {c['arch']} x {c['shape']} x {c['mesh']}: "
+                f"{c.get('error', '')[:100]}" for c in errs]
+    return "\n".join(out)
+
+
+def render_markdown(cells: List[Dict]) -> str:
+    ok = [c for c in cells if c.get("status") == "ok"]
+    lines = ["| arch | shape | mesh | compute s | memory s | collective s"
+             " | dominant | roofline frac | model/HLO FLOPs |"
+             " wire GB/chip |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for c in ok:
+        v = _fmt_cell(c)
+        lines.append("| " + " | ".join(str(x) for x in v) + " |")
+    return "\n".join(lines)
+
+
+def summarize(cells: List[Dict]) -> Dict:
+    ok = [c for c in cells if c.get("status") == "ok"]
+    dom: Dict[str, int] = {}
+    for c in ok:
+        d = c["roofline"]["dominant"]
+        dom[d] = dom.get(d, 0) + 1
+    worst = sorted(ok, key=lambda c: c["roofline"]["roofline_fraction"])
+    most_coll = sorted(
+        ok, key=lambda c: -(c["roofline"]["t_collective_s"]
+                            / max(c["roofline"]["step_lower_bound_s"],
+                                  1e-12)))
+    return {
+        "n_ok": len(ok),
+        "dominant_histogram": dom,
+        "worst_fraction": [(c["arch"], c["shape"], c["mesh"],
+                            c["roofline"]["roofline_fraction"])
+                           for c in worst[:5]],
+        "most_collective_bound": [(c["arch"], c["shape"], c["mesh"])
+                                  for c in most_coll[:5]],
+    }
+
+
+def run(tag: str = "baseline") -> Dict:
+    cells = load_cells(tag)
+    if not cells:
+        print(f"(no dry-run artifacts under {DRYRUN_DIR} for tag {tag!r} "
+              f"— run python -m repro.launch.dryrun first)")
+        return {"n_ok": 0}
+    print(render(cells, title=f"Roofline ({tag})"))
+    s = summarize(cells)
+    print(f"\ndominant-term histogram: {s['dominant_histogram']}")
+    print("worst roofline fractions:")
+    for a, sh, m, f in s["worst_fraction"]:
+        print(f"  {a} x {sh} x {m}: {f:.4f}")
+    return s
+
+
+if __name__ == "__main__":
+    run()

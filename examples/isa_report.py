@@ -1,0 +1,9 @@
+"""Render the paper's mapping analysis (Fig. 3 + Tables II/III) and the
+TPU adaptation table from the live registry.
+
+  PYTHONPATH=src python examples/isa_report.py
+"""
+from repro.core import mapping
+
+if __name__ == "__main__":
+    print(mapping.full_report())

@@ -1,0 +1,83 @@
+"""End-to-end driver: train a ~100M-param dense LM for a few hundred
+steps on CPU with the full production stack — sharded AdamW, grad
+accumulation, checkpointing (async), straggler monitor, resumable data.
+
+~100M params: 12L, d=512, 8H, d_ff=2048, vocab=32000 -> ~115M.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+Interrupt with Ctrl-C and re-run: it resumes from the last checkpoint
+(the fault-tolerance path, exercised for real).
+"""
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, SyntheticLMDataset
+from repro.models import build_model
+from repro.models.config import ModelConfig, ParallelConfig
+from repro.train import OptConfig, build_train_step, init_opt_state
+from repro.train.loop import (LoopConfig, PreemptionGuard, resume_or_init,
+                              train_loop)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/uisa_train_lm")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="lm-100m", family="dense", num_layers=12, d_model=512,
+        num_heads=8, num_kv_heads=4, d_ff=2048, vocab_size=32000,
+        dtype="float32")
+    n = cfg.param_count()
+    print(f"[train_lm] {cfg.name}: {n / 1e6:.0f}M params")
+
+    par = ParallelConfig(remat="none", grad_accum=2)
+    model = build_model(cfg, par)
+    opt_cfg = OptConfig(lr=6e-4, total_steps=args.steps,
+                        warmup_steps=args.steps // 10)
+    step_fn, _ = build_train_step(model, opt_cfg)
+    step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    dataset = SyntheticLMDataset(DataConfig(
+        global_batch=args.batch, seq_len=args.seq,
+        vocab_size=cfg.vocab_size)).start()
+    ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+
+    def init_fn():
+        params = model.init_params(jax.random.PRNGKey(0))
+        return params, init_opt_state(params, opt_cfg)
+
+    params, opt_state, start = resume_or_init(ckpt, init_fn)
+    if start:
+        print(f"[train_lm] resumed at step {start}")
+
+    def sink(step, rec):
+        print(f"  step {step:4d}  loss={rec['loss']:.4f}  "
+              f"lr={rec['lr']:.2e}  {rec['step_time_s'] * 1e3:.0f} ms"
+              + ("  STRAGGLER" if rec.get("straggler") else ""))
+
+    guard = PreemptionGuard()
+    params, opt_state, report = train_loop(
+        step_fn, params, opt_state, dataset,
+        LoopConfig(total_steps=args.steps, checkpoint_every=100,
+                   log_every=20),
+        ckpt, start_step=start, metrics_sink=sink, preemption=guard,
+        batch_put=lambda b: {k: jnp.asarray(v) for k, v in b.items()})
+    dataset.stop()
+
+    losses = [h["loss"] for h in report["history"]]
+    print(f"[train_lm] finished at step {report['final_step']}; "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}"
+          f"{' (preempted, resumable)' if report['preempted'] else ''}")
+
+
+if __name__ == "__main__":
+    main()

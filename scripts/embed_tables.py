@@ -1,0 +1,57 @@
+"""Splice the generated dry-run / roofline / optimized tables into
+EXPERIMENTS.md at the <!-- *_TABLE --> markers.
+
+  PYTHONPATH=src python scripts/embed_tables.py
+"""
+import re
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.roofline_table import load_cells, render_markdown  # noqa: E402
+
+
+def dryrun_table(cells):
+    ok = [c for c in cells if c.get("status") == "ok"]
+    lines = ["| arch | shape | mesh | kind | compile s | temp GB/dev |"
+             " state GB/dev | HLO flops/chip | wire GB/chip | coll ops |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for c in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        mem = c.get("memory", {})
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | {c['kind']} "
+            f"| {c.get('compile_s', 0):.0f} "
+            f"| {(mem.get('temp_size_in_bytes') or 0) / 1e9:.2f} "
+            f"| {(mem.get('argument_size_in_bytes') or 0) / 1e9:.2f} "
+            f"| {c['flops_per_chip']:.2e} "
+            f"| {c['collectives']['total_wire_bytes'] / 1e9:.1f} "
+            f"| {c['collectives']['n_ops']} |")
+    return "\n".join(lines)
+
+
+def splice(text, marker, table):
+    pattern = re.compile(rf"<!-- {marker} -->.*?(?=\n## |\n---|\Z)",
+                         re.DOTALL)
+    block = f"<!-- {marker} -->\n\n{table}\n"
+    if f"<!-- {marker} -->" in text:
+        return pattern.sub(block, text, count=1)
+    return text
+
+
+def main():
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    base = load_cells("baseline")
+    if base:
+        text = splice(text, "DRYRUN_TABLE", dryrun_table(base))
+        text = splice(text, "ROOFLINE_TABLE", render_markdown(base))
+    opt = load_cells("optimized")
+    if opt:
+        text = splice(text, "OPTIMIZED_TABLE", render_markdown(opt))
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print(f"embedded: baseline={len(base)} opt={len(opt)} cells")
+
+
+if __name__ == "__main__":
+    main()

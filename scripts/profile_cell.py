@@ -1,0 +1,68 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (must precede jax import — see launch/dryrun.py)
+
+"""Per-op collective profile of one dry-run cell: the §Perf 'profiler'.
+
+Prints the top collectives by loop-trip-multiplied wire bytes, with
+shapes — the evidence the hypothesis loop needs.
+
+  PYTHONPATH=src python scripts/profile_cell.py qwen3-32b prefill_32k \\
+      single [key=value par overrides...]
+"""
+import json
+import sys
+from collections import defaultdict
+
+from repro.launch import cells as cells_lib
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.hlo_parser import HloModule
+
+
+def parse_overrides(args):
+    out = {}
+    for a in args:
+        k, v = a.split("=", 1)
+        if v in ("True", "False"):
+            v = v == "True"
+        elif v.isdigit():
+            v = int(v)
+        out[k] = v
+    return out
+
+
+def main():
+    arch, shape, mesh_kind = sys.argv[1:4]
+    overrides = parse_overrides(sys.argv[4:])
+    multi = mesh_kind == "multi"
+    chips = 512 if multi else 256
+    mesh = make_production_mesh(multi_pod=multi)
+    cell = cells_lib.build_cell(arch, shape, mesh,
+                                par_overrides=overrides or None)
+    with mesh:
+        compiled = cell.lower().compile()
+    mod = HloModule(compiled.as_text(), chips)
+    entry = mod.entry or next(iter(mod.comps))
+    recs = mod.comp_collectives(entry)
+
+    # aggregate identical (op, shape, group) records
+    agg = defaultdict(lambda: {"count": 0, "wire": 0.0})
+    for r in recs:
+        k = (r["op"], r["shape"], r["group_size"])
+        agg[k]["count"] += r["count"]
+        agg[k]["wire"] += r["wire_bytes"]
+    top = sorted(agg.items(), key=lambda kv: -kv[1]["wire"])[:25]
+    total = sum(v["wire"] for v in agg.values())
+    print(f"cell {arch} x {shape} x {mesh_kind} overrides={overrides}")
+    print(f"total wire {total / 1e9:.1f} GB/chip, "
+          f"{int(sum(v['count'] for v in agg.values()))} ops")
+    print(f"{'op':18s} {'shape':34s} {'grp':>4s} {'count':>7s} "
+          f"{'wire GB':>9s} {'%':>5s}")
+    for (op, shape_s, g), v in top:
+        print(f"{op:18s} {shape_s:34s} {g:4d} {v['count']:7.0f} "
+              f"{v['wire'] / 1e9:9.2f} {100 * v['wire'] / total:5.1f}")
+    print(f"flops/chip {mod.comp_flops(entry):.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Regenerate the data tables embedded in EXPERIMENTS.md from the
+dry-run artifacts, so prose and numbers cannot drift.
+
+  PYTHONPATH=src python scripts/render_experiments.py > results/tables.md
+"""
+import glob
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.roofline_table import load_cells, render_markdown, summarize  # noqa: E402
+
+
+def dryrun_section(cells):
+    ok = [c for c in cells if c.get("status") == "ok"]
+    lines = ["| arch | shape | mesh | kind | compile s | temp GB/dev |"
+             " args GB/dev | HLO flops/chip | wire GB/chip | coll ops |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for c in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        mem = c.get("memory", {})
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | {c['kind']} "
+            f"| {c.get('compile_s', 0):.0f} "
+            f"| {(mem.get('temp_size_in_bytes') or 0) / 1e9:.2f} "
+            f"| {(mem.get('argument_size_in_bytes') or 0) / 1e9:.2f} "
+            f"| {c['flops_per_chip']:.2e} "
+            f"| {c['collectives']['total_wire_bytes'] / 1e9:.1f} "
+            f"| {c['collectives']['n_ops']} |")
+    return "\n".join(lines)
+
+
+def main():
+    tag = sys.argv[1] if len(sys.argv) > 1 else "baseline"
+    cells = load_cells(tag)
+    print(f"## §Dry-run table ({tag}, {len(cells)} artifacts)\n")
+    print(dryrun_section(cells))
+    print(f"\n## §Roofline table ({tag})\n")
+    print(render_markdown(cells))
+    print("\n## summary\n")
+    print("```json")
+    print(json.dumps(summarize(cells), indent=1))
+    print("```")
+
+
+if __name__ == "__main__":
+    main()

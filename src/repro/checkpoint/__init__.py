@@ -1,0 +1,4 @@
+"""Checkpointing: atomic, async, retention-managed, reshard-on-restore."""
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

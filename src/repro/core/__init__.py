@@ -1,0 +1,31 @@
+"""UISA core: the paper's contribution as a composable layer.
+
+- :mod:`repro.core.dialect` — parameterizable dialects (Table III), queryable.
+- :mod:`repro.core.primitives` — the 11 primitives (Table II + §VII.C) and
+  the kernel-contract validator behind the native/abstract methodology.
+- :mod:`repro.core.execution_model` — thread hierarchy, Eq. 1 occupancy.
+- :mod:`repro.core.memory_model` — scoped acquire/release (Fig. 2).
+- :mod:`repro.core.mapping` — Fig. 3 mapping reports.
+"""
+from repro.core.dialect import (Dialect, DIALECTS, TARGET, TPU_V5E,
+                                get_dialect, gpu_dialects, mxu_align, align_up)
+from repro.core.primitives import (Primitive, IsaMode, KernelContract,
+                                   ContractViolation, validate_contract,
+                                   UNIVERSAL_SET, UNIVERSAL_PLUS_SHUFFLE,
+                                   SPECS, Classification)
+from repro.core.execution_model import (LaunchGeometry, LaunchError,
+                                        validate_launch, occupancy,
+                                        tpu_pipeline_occupancy,
+                                        choose_block_bytes, grid_for)
+from repro.core.memory_model import (Scope, Ordering, fence, requires_fence,
+                                     MANDATORY_HIERARCHY)
+
+__all__ = [
+    "Dialect", "DIALECTS", "TARGET", "TPU_V5E", "get_dialect", "gpu_dialects",
+    "mxu_align", "align_up", "Primitive", "IsaMode", "KernelContract",
+    "ContractViolation", "validate_contract", "UNIVERSAL_SET",
+    "UNIVERSAL_PLUS_SHUFFLE", "SPECS", "Classification", "LaunchGeometry",
+    "LaunchError", "validate_launch", "occupancy", "tpu_pipeline_occupancy",
+    "choose_block_bytes", "grid_for", "Scope", "Ordering", "fence",
+    "requires_fence", "MANDATORY_HIERARCHY",
+]

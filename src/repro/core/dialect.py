@@ -1,0 +1,261 @@
+"""Parameterizable dialects (paper Table III) as queryable constants.
+
+The paper's central mechanism for spanning vendors is that six dimensions
+are *parameterizable*: identical concepts, vendor-specific parameters.
+Programs must never hardcode them — they query a :class:`Dialect`.
+
+We register the four GPU vendors from the paper plus the TPU v5e dialect
+this framework targets (the hardware-adaptation of the same concepts; see
+DESIGN.md §2).  All kernel block-shape / occupancy decisions in
+``repro.kernels`` are derived from the active dialect, never from literals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+# Register width w in bytes (paper Table I, "typically 4").
+REGISTER_WIDTH_BYTES = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class MatrixUnit:
+    """Opaque-but-queryable matrix capability (paper Table IV resolution).
+
+    The paper resolves the matrix-unit divergence by making tiles queryable
+    rather than prescribed.  ``tile`` is the native (M, N, K) the unit
+    consumes; ``dtypes`` the supported input precisions.
+    """
+
+    tile: Tuple[int, int, int]
+    dtypes: Tuple[str, ...]
+    throughput_flops: Optional[float] = None  # peak FLOP/s, if public
+
+
+@dataclasses.dataclass(frozen=True)
+class Dialect:
+    """One vendor's parameter set for the universal execution model.
+
+    Fields mirror paper Tables I & III:
+      W  wave width (threads per lockstep group); a range for Intel.
+      R  max registers per thread (32-bit).
+      S  scratchpad bytes visible to one workgroup.
+      F  register-file bytes per core (for Eq. 1 occupancy).
+      max_workgroup  threads per workgroup.
+      named_barriers number of independently addressable barriers.
+      native_fp64    hardware double support.
+    """
+
+    name: str
+    vendor: str
+    wave_width: Tuple[int, ...]           # admissible W values
+    max_regs_per_thread: int              # R
+    scratchpad_bytes: int                 # S
+    regfile_bytes_per_core: int           # F
+    max_workgroup: int
+    named_barriers: int
+    native_fp64: bool
+    memory_levels: Tuple[str, ...]
+    divergence_mechanism: str
+    matrix_unit: Optional[MatrixUnit] = None
+    has_hw_atomics: bool = True
+    has_lane_shuffle: bool = True         # the paper's 11th primitive
+    hbm_bandwidth: Optional[float] = None  # bytes/s
+    peak_flops_bf16: Optional[float] = None
+    # TPU-only: VMEM plays the register-file role in the occupancy tradeoff
+    # (DESIGN.md §2, primitive 3).
+    notes: str = ""
+
+    @property
+    def W(self) -> int:  # noqa: N802 - paper notation
+        return self.wave_width[0]
+
+    @property
+    def R(self) -> int:  # noqa: N802
+        return self.max_regs_per_thread
+
+    @property
+    def S(self) -> int:  # noqa: N802
+        return self.scratchpad_bytes
+
+    @property
+    def F(self) -> int:  # noqa: N802
+        return self.regfile_bytes_per_core
+
+    def occupancy(self, regs_per_thread: int, wave_width: Optional[int] = None,
+                  reg_width: int = REGISTER_WIDTH_BYTES) -> int:
+        """Paper Eq. 1: O = floor(F / (R × W × w)).
+
+        Resident waves per core given a per-thread register demand.  The
+        invariant (primitive 3) is the *tradeoff*, not the constants.
+        """
+        w_width = self.W if wave_width is None else wave_width
+        if regs_per_thread <= 0:
+            raise ValueError("regs_per_thread must be positive")
+        if regs_per_thread > self.R:
+            return 0
+        return self.F // (regs_per_thread * w_width * reg_width)
+
+    def buffer_occupancy(self, block_bytes: int, n_buffers: int = 2) -> int:
+        """TPU re-derivation of Eq. 1 (DESIGN.md §2 primitive 3/5).
+
+        On a single-threaded systolic core, latency is hidden by resident
+        DMA *buffers* instead of resident *waves*; the same fixed-SRAM-area
+        algebra bounds how many block-sized pipeline stages fit:
+        ``O = floor(S / (n_buffers × block_bytes))``.
+        """
+        if block_bytes <= 0 or n_buffers <= 0:
+            raise ValueError("block_bytes and n_buffers must be positive")
+        return self.S // (n_buffers * block_bytes)
+
+    def validate_workgroup(self, size: int) -> bool:
+        return 0 < size <= self.max_workgroup
+
+    def query(self, key: str):
+        """String-keyed query API — 'we do not prescribe W; we query it'."""
+        table = {
+            "W": self.W,
+            "wave_widths": self.wave_width,
+            "R": self.R,
+            "S": self.S,
+            "F": self.F,
+            "max_workgroup": self.max_workgroup,
+            "named_barriers": self.named_barriers,
+            "native_fp64": self.native_fp64,
+            "matrix_tile": self.matrix_unit.tile if self.matrix_unit else None,
+            "matrix_dtypes": self.matrix_unit.dtypes if self.matrix_unit else (),
+            "has_hw_atomics": self.has_hw_atomics,
+            "has_lane_shuffle": self.has_lane_shuffle,
+            "memory_levels": self.memory_levels,
+        }
+        if key not in table:
+            raise KeyError(f"unknown dialect query {key!r}")
+        return table[key]
+
+
+# ---------------------------------------------------------------------------
+# Registry: the four vendors from the paper (Tables II/III) + TPU v5e.
+# ---------------------------------------------------------------------------
+
+NVIDIA_SM89 = Dialect(
+    name="nvidia-ada-sm89",
+    vendor="NVIDIA",
+    wave_width=(32,),
+    max_regs_per_thread=255,
+    scratchpad_bytes=228 * 1024,
+    regfile_bytes_per_core=256 * 1024,
+    max_workgroup=1024,
+    named_barriers=16,
+    native_fp64=True,
+    memory_levels=("reg", "shared", "L1", "L2", "DRAM"),
+    divergence_mechanism="per-thread PC + predicates (hardware)",
+    matrix_unit=MatrixUnit(tile=(16, 16, 16), dtypes=("f16", "bf16", "tf32", "i8")),
+    notes="PTX virtual ISA; per-thread scalar semantics.",
+)
+
+AMD_RDNA3 = Dialect(
+    name="amd-rdna3",
+    vendor="AMD",
+    wave_width=(32, 64),
+    max_regs_per_thread=256,
+    scratchpad_bytes=128 * 1024,
+    regfile_bytes_per_core=192 * 1024,
+    max_workgroup=1024,
+    named_barriers=32,
+    native_fp64=True,  # rate varies; capability present
+    memory_levels=("reg", "LDS", "L0", "L1", "L2", "VRAM"),
+    divergence_mechanism="EXEC mask (compiler-managed)",
+    matrix_unit=MatrixUnit(tile=(16, 16, 16), dtypes=("f16", "bf16", "i8")),
+    notes="SALU/VALU split; compiler hoists uniform ops to scalar unit.",
+)
+
+INTEL_XE_HPG = Dialect(
+    name="intel-xe-hpg",
+    vendor="Intel",
+    wave_width=(8, 16),
+    max_regs_per_thread=128,
+    scratchpad_bytes=512 * 1024,
+    regfile_bytes_per_core=64 * 1024,
+    max_workgroup=1024,
+    named_barriers=1,
+    native_fp64=False,  # HPC parts only
+    memory_levels=("reg", "SLM", "L1", "L2", "DRAM"),
+    divergence_mechanism="predicated SIMD (compiler-managed)",
+    matrix_unit=MatrixUnit(tile=(8, 16, 16), dtypes=("f16", "bf16", "i8")),
+    notes="SIMD-register ISA; fixed-function via SEND messages.",
+)
+
+APPLE_G13 = Dialect(
+    name="apple-g13",
+    vendor="Apple",
+    wave_width=(32,),
+    max_regs_per_thread=128,
+    scratchpad_bytes=60 * 1024,          # ~60 KB threadgroup memory
+    regfile_bytes_per_core=208 * 1024,
+    max_workgroup=1024,
+    named_barriers=1,
+    native_fp64=False,
+    memory_levels=("reg", "threadgroup", "L1", "L2", "L3", "DRAM"),
+    divergence_mechanism="hardware execution stack in r0l",
+    matrix_unit=None,  # absent capability (paper §VI): queryable as None
+    notes="reverse-engineered (flagged confidence); unified memory.",
+)
+
+# The framework's target dialect.  Same queryable schema, TPU semantics:
+#   - 'wave' = 128-lane vreg minor dimension (fetch amortization constraint)
+#   - scratchpad S = VMEM; F also = VMEM (it plays the register-file role in
+#     the occupancy tradeoff — see Dialect.buffer_occupancy)
+#   - no HW atomics, no thread-level zero-cost switch (documented divergences)
+#   - matrix unit = 128x128x128 MXU systolic tile, queryable
+TPU_V5E = Dialect(
+    name="tpu-v5e",
+    vendor="Google",
+    wave_width=(128,),                    # vreg lanes (8 sublanes x 128 lanes)
+    max_regs_per_thread=64,               # vregs per scalar core context (approx.)
+    scratchpad_bytes=64 * 1024 * 1024,    # VMEM budget we tile against
+    regfile_bytes_per_core=64 * 1024 * 1024,
+    max_workgroup=1,                      # single-threaded core: grid supplies parallelism
+    named_barriers=32,                    # DMA/barrier semaphores
+    native_fp64=False,
+    memory_levels=("vreg", "VMEM", "HBM"),
+    divergence_mechanism="predication (@pl.when / lane masks)",
+    matrix_unit=MatrixUnit(tile=(128, 128, 128), dtypes=("bf16", "f32", "i8"),
+                           throughput_flops=197e12),
+    has_hw_atomics=False,
+    has_lane_shuffle=True,                # intra-vreg lane rotate/permute
+    hbm_bandwidth=819e9,
+    peak_flops_bf16=197e12,
+    notes="systolic+VLIW; latency hidden by async DMA buffers, not waves.",
+)
+
+DIALECTS: Dict[str, Dialect] = {
+    d.name: d for d in (NVIDIA_SM89, AMD_RDNA3, INTEL_XE_HPG, APPLE_G13, TPU_V5E)
+}
+
+#: the dialect every kernel in this framework is compiled against
+TARGET = TPU_V5E
+
+
+def get_dialect(name: str) -> Dialect:
+    try:
+        return DIALECTS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown dialect {name!r}; known: {sorted(DIALECTS)}") from None
+
+
+def gpu_dialects() -> Tuple[Dialect, ...]:
+    """The four vendors analysed by the paper (excludes the TPU target)."""
+    return (NVIDIA_SM89, AMD_RDNA3, INTEL_XE_HPG, APPLE_G13)
+
+
+def align_up(x: int, multiple: int) -> int:
+    return ((x + multiple - 1) // multiple) * multiple
+
+
+def mxu_align(dim: int, dialect: Dialect = TARGET) -> int:
+    """Round ``dim`` up to the dialect's matrix-tile edge (query, not assume)."""
+    if dialect.matrix_unit is None:
+        return dim
+    return align_up(dim, dialect.matrix_unit.tile[0])

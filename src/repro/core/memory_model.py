@@ -1,0 +1,72 @@
+"""Scoped memory model (paper Fig. 2 + Table IV 'memory order' resolution).
+
+The paper resolves the axiomatic/counter/scoreboard/async divergence with
+scoped acquire/release at four scopes: wave, workgroup, device, system.
+On the TPU target the scopes lower to:
+
+  wave       -> program order within a vreg expression (vacuous)
+  workgroup  -> program order within one core's kernel body / grid-step
+                sequencing (Pallas grids are sequential per core unless
+                annotated 'parallel')
+  device     -> XLA schedule on one chip (DMA semaphores in Pallas)
+  system     -> cross-chip collectives / jax.experimental multihost sync
+
+``fence`` is a no-op *value barrier* on CPU/TPU single-core semantics but is
+kept in the API so kernels written against the model carry their ordering
+intent — the validator uses it to check that abstract kernels never assume
+ordering the model does not grant.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Tuple
+
+
+class Scope(enum.Enum):
+    WAVE = "wave"
+    WORKGROUP = "workgroup"
+    DEVICE = "device"
+    SYSTEM = "system"
+
+    @property
+    def rank(self) -> int:
+        return {"wave": 0, "workgroup": 1, "device": 2, "system": 3}[self.value]
+
+
+class Ordering(enum.Enum):
+    RELAXED = "relaxed"
+    ACQUIRE = "acquire"
+    RELEASE = "release"
+    ACQ_REL = "acq_rel"
+
+
+@dataclasses.dataclass(frozen=True)
+class MemorySpace:
+    """One level of the mandatory 3-level hierarchy (+ optional levels)."""
+
+    name: str
+    scope: Scope        # widest scope at which this space is coherent
+    explicit: bool      # programmer-managed placement (scratchpad) or not
+
+
+REGISTERS = MemorySpace("registers", Scope.WAVE, explicit=True)
+SCRATCHPAD = MemorySpace("scratchpad", Scope.WORKGROUP, explicit=True)
+DEVICE_MEMORY = MemorySpace("device", Scope.SYSTEM, explicit=False)
+
+MANDATORY_HIERARCHY: Tuple[MemorySpace, ...] = (
+    REGISTERS, SCRATCHPAD, DEVICE_MEMORY)
+
+
+def fence(scope: Scope, ordering: Ordering = Ordering.ACQ_REL) -> None:
+    """Ordering intent marker.  On the TPU/XLA lowering all four scopes are
+    satisfied by program order + the collective/DMA semantics already
+    implied by the op stream, so this is an (auditable) no-op."""
+    assert isinstance(scope, Scope) and isinstance(ordering, Ordering)
+
+
+def requires_fence(producer_scope: Scope, consumer_scope: Scope) -> bool:
+    """True when a release/acquire pair is needed for the handoff: any
+    communication at a scope wider than WAVE needs one at >= that scope."""
+    widest = max(producer_scope.rank, consumer_scope.rank)
+    return widest >= Scope.WORKGROUP.rank

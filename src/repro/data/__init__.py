@@ -1,0 +1,5 @@
+"""Data substrate: deterministic synthetic LM pipeline."""
+from repro.data.pipeline import (DataConfig, SyntheticLMDataset,
+                                 make_batch_specs)
+
+__all__ = ["DataConfig", "SyntheticLMDataset", "make_batch_specs"]

@@ -1,0 +1,8 @@
+"""UISA Pallas kernels (paper Table V + framework hot-spots).
+
+Each kernel ships abstract / abstract+shuffle / native variants under a
+validated :class:`repro.core.KernelContract`, a jit'd dispatcher in
+:mod:`repro.kernels.ops`, and a pure-jnp oracle in
+:mod:`repro.kernels.ref`.
+"""
+from repro.kernels import ops  # noqa: F401

@@ -1,0 +1,197 @@
+"""Flash attention Pallas kernel — the framework's compound hot-spot.
+
+The paper lists attention as future work ("compound workloads ... remain
+as future work", §VII.D); this framework supplies it because every
+assigned architecture's serving/training path is attention- (or SSD-)
+dominated.  Built entirely from UISA primitives + native features:
+
+- online-softmax accumulators live in VMEM scratch (managed scratchpad),
+- the KV loop is the sequential ('arbitrary') grid dimension with async
+  block pipelining (async memory + barrier primitives),
+- causal block *skipping* is masked-divergence predication lifted to the
+  grid level (a native feature: it exploits dimension_semantics),
+- the two matmuls route through the queried MXU tile.
+
+Variants:
+- ``native``: block-skip + MXU-aligned blocks.
+- ``abstract``: same algorithm, no block-skip (mask-only, every block
+  visited), scratch-budget-derived square-ish blocks.
+
+The jnp chunked oracle used by models for CPU dry-runs lives in
+models/layers.py; the dense oracle is kernels/ref.py:attention.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import (IsaMode, KernelContract, Primitive,
+                        validate_contract)
+
+NEG_INF = -1e30  # finite sentinel: keeps exp() NaN-free on fully-masked rows
+
+ABSTRACT_CONTRACT = KernelContract(
+    kernel="flash_attention", mode=IsaMode.ABSTRACT,
+    primitives=frozenset({
+        Primitive.LOCKSTEP_GROUP, Primitive.MASKED_DIVERGENCE,
+        Primitive.MANAGED_SCRATCHPAD, Primitive.WORKGROUP_BARRIER,
+        Primitive.HIERARCHICAL_MEMORY, Primitive.IDENTITY_REGISTERS,
+        Primitive.ASYNC_MEMORY, Primitive.REGISTER_OCCUPANCY,
+    }))
+NATIVE_CONTRACT = KernelContract(
+    kernel="flash_attention", mode=IsaMode.NATIVE,
+    primitives=frozenset(Primitive),
+    native_features=frozenset({"mxu_aligned_tiles", "dimension_semantics",
+                               "multi_buffering"}))
+validate_contract(ABSTRACT_CONTRACT)
+validate_contract(NATIVE_CONTRACT)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, kv_offset: int,
+                  block_q: int, block_kv: int, n_kv: int, skip: bool):
+    qi, ki = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def body():
+        q = q_ref[0, 0].astype(jnp.float32)              # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bkv, d)
+        v = v_ref[0, 0].astype(jnp.float32)              # (bkv, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bkv)
+        if causal:
+            rows = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 0) + kv_offset
+            cols = ki * block_kv + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 1)
+            s = jnp.where(cols <= rows, s, NEG_INF)
+
+        m_prev = m_ref[...]                               # (bq, 1)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        corr = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    if causal and skip:
+        # Native: grid-level predication — skip blocks entirely above the
+        # diagonal (first kv column of the block vs last q row).
+        first_col = ki * block_kv
+        last_row = qi * block_q + block_q - 1 + kv_offset
+        @pl.when(first_col <= last_row)
+        def _():
+            body()
+    else:
+        body()
+
+    @pl.when(ki == n_kv - 1)
+    def _store():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)                   # fully-masked rows
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "mode", "interpret", "block_q", "block_kv", "kv_offset"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, kv_offset: int | None = None,
+                    mode: str = "native", interpret: bool = True,
+                    block_q: int = 256, block_kv: int = 256) -> jax.Array:
+    """q: [B,H,Sq,D]; k/v: [B,Hkv,Skv,D] (GQA via index-map head folding)."""
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    if kv_offset is None:
+        kv_offset = skv - sq
+    scale = 1.0 / (d ** 0.5)
+
+    block_q = min(block_q, _round_up(sq))
+    block_kv = min(block_kv, _round_up(skv))
+    q_p = _pad_seq(q, block_q)
+    k_p = _pad_seq(k, block_kv)
+    v_p = _pad_seq(v, block_kv)
+    sqp, skvp = q_p.shape[2], k_p.shape[2]
+    grid = (b, h, sqp // block_q, skvp // block_kv)
+    skip = (mode == "native")
+
+    params = None
+    if mode == "native":
+        params = pltpu.CompilerParams(dimension_semantics=(
+            "parallel", "parallel", "parallel", "arbitrary"))
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, causal=causal, kv_offset=kv_offset,
+            block_q=block_q, block_kv=block_kv, n_kv=grid[3], skip=skip),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda bb, hh, qi, ki, g=group: (bb, hh // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda bb, hh, qi, ki, g=group: (bb, hh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q_p.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # l
+            pltpu.VMEM((block_q, d), jnp.float32),   # acc
+        ],
+        compiler_params=params,
+        interpret=interpret,
+        name=f"uisa_flash_attention_{mode.replace('+', '_')}",
+    )(q_p, k_p, v_p)
+    return out[:, :, :sq, :]
+
+
+def _round_up(dim: int, granule: int = 128) -> int:
+    return ((dim + granule - 1) // granule) * granule
+
+
+def _pad_seq(x: jax.Array, block: int) -> jax.Array:
+    pad = (-x.shape[2]) % block
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    return x
+
+
+def structural_cost(b: int, h: int, sq: int, skv: int, d: int,
+                    causal: bool, mode: str,
+                    block_q: int = 256, block_kv: int = 256) -> dict:
+    """Visited-block accounting: quantifies what grid-level predication
+    (native block-skip) saves vs. the abstract mask-everything variant."""
+    nq = -(-sq // block_q)
+    nk = -(-skv // block_kv)
+    total = nq * nk
+    if causal and mode == "native":
+        offset = skv - sq
+        visited = sum(
+            1 for qi in range(nq) for ki in range(nk)
+            if ki * block_kv <= qi * block_q + block_q - 1 + offset)
+    else:
+        visited = total
+    flops_per_block = 4 * block_q * block_kv * d
+    return {
+        "blocks_total": b * h * total,
+        "blocks_visited": b * h * visited,
+        "flops": b * h * visited * flops_per_block,
+        "flops_dense": b * h * total * flops_per_block,
+        "skip_fraction": 1.0 - visited / total,
+    }

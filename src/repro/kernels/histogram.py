@@ -1,0 +1,138 @@
+"""Histogram — the paper's atomic-contention benchmark (Table V, row 3).
+
+The GPU versions differ in *where* atomics land: the native CUDA kernel
+privatizes one histogram per warp; the abstract kernel hammers a single
+shared-scratchpad histogram.  The paper found them tied (100.4% / 102.1%)
+because contention was insufficient for privatization to pay.
+
+TPU transposition: the dialect has **no hardware atomics** (a true
+divergence — core/primitives.py).  Both variants therefore lower
+ATOMIC_RMW through the paper's own divergence resolution: *privatize +
+deterministic reduce*:
+
+- ``abstract``: one shared accumulator per grid step — a single one-hot
+  comparison tensor summed over all block elements (vector-unit compare +
+  add only; universal primitives).
+- ``native``: per-sublane-group privatized counts produced by a one-hot
+  **matmul** against a ones vector — routing the accumulation through the
+  queried MXU tile (mxu_aligned_tiles) exactly like per-warp privatization
+  routes it through warp-local shared memory — then a cross-private
+  reduce.
+
+Output accumulation across grid steps is sequential (workgroup-barrier
+semantics), so results are deterministic, unlike GPU atomics.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import (IsaMode, KernelContract, Primitive, TARGET,
+                        validate_contract)
+
+LANES = TARGET.W
+_BLOCK_ROWS = 32          # 32×128 = 4096 values per grid step
+
+ABSTRACT_CONTRACT = KernelContract(
+    kernel="histogram", mode=IsaMode.ABSTRACT,
+    primitives=frozenset({
+        Primitive.LOCKSTEP_GROUP, Primitive.MASKED_DIVERGENCE,
+        Primitive.MANAGED_SCRATCHPAD, Primitive.WORKGROUP_BARRIER,
+        Primitive.HIERARCHICAL_MEMORY, Primitive.IDENTITY_REGISTERS,
+        Primitive.ASYNC_MEMORY, Primitive.ATOMIC_RMW,
+    }))
+NATIVE_CONTRACT = KernelContract(
+    kernel="histogram", mode=IsaMode.NATIVE,
+    primitives=frozenset(Primitive),
+    native_features=frozenset({"mxu_aligned_tiles", "dimension_semantics",
+                               "multi_buffering"}))
+validate_contract(ABSTRACT_CONTRACT)
+validate_contract(NATIVE_CONTRACT)
+
+
+def _histogram_kernel(x_ref, o_ref, *, mode: str, num_bins: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    vals = x_ref[...]                                    # (rows, LANES) int32
+    bins = jax.lax.broadcasted_iota(jnp.int32, (1, num_bins), 1)
+    if mode == "abstract":
+        # Single shared accumulator: every element compared against every
+        # bin (masked-divergence compare), summed straight into one (1, B)
+        # histogram — vector unit only.
+        onehot = (vals.reshape(-1, 1) == bins).astype(jnp.float32)
+        counts = jnp.sum(onehot, axis=0, keepdims=True)  # (1, B)
+    elif mode == "native":
+        # Privatized: one histogram per sublane-row of the block (the
+        # 'wave-local' copy), produced by a ones-vector matmul through the
+        # MXU, then reduced across privates.
+        onehot = (vals.reshape(vals.shape[0], -1, 1) == bins[None]
+                  ).astype(jnp.float32)                  # (rows, LANES, B)
+        ones = jnp.ones((1, onehot.shape[1]), jnp.float32)
+        private = jax.vmap(
+            lambda oh: jnp.dot(ones, oh, preferred_element_type=jnp.float32)
+        )(onehot)                                        # (rows, 1, B)
+        counts = jnp.sum(private, axis=0)                # (1, B)
+    else:
+        raise ValueError(mode)
+    o_ref[...] += counts.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_bins", "mode", "interpret"))
+def histogram(values: jax.Array, num_bins: int = 256, *,
+              mode: str = "native", interpret: bool = True) -> jax.Array:
+    """Counts of int values in [0, num_bins); out-of-range values clipped."""
+    if mode == "library":
+        clipped = jnp.clip(values.astype(jnp.int32), 0, num_bins - 1)
+        return jnp.zeros((num_bins,), jnp.int32).at[clipped.reshape(-1)].add(1)
+    if mode == "abstract+shuffle":
+        mode = "abstract"  # shuffle does not participate in histogram
+    assert num_bins % LANES == 0 or num_bins <= LANES, num_bins
+
+    flat = jnp.clip(values.astype(jnp.int32).reshape(-1), 0, num_bins - 1)
+    n = flat.shape[0]
+    per_block = _BLOCK_ROWS * LANES
+    pad = (-n) % per_block
+    if pad:
+        # Padding sentinel = -1: matches no bin in the compare.
+        flat = jnp.pad(flat, (0, pad), constant_values=-1)
+    rows = flat.shape[0] // LANES
+    x2d = flat.reshape(rows, LANES)
+    grid = (rows // _BLOCK_ROWS,)
+    bins_padded = max(num_bins, LANES)
+
+    params = None
+    if mode == "native":
+        params = pltpu.CompilerParams(dimension_semantics=("arbitrary",))
+
+    out = pl.pallas_call(
+        functools.partial(_histogram_kernel, mode=mode, num_bins=bins_padded),
+        grid=grid,
+        in_specs=[pl.BlockSpec((_BLOCK_ROWS, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, bins_padded), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, bins_padded), jnp.int32),
+        compiler_params=params,
+        interpret=interpret,
+        name=f"uisa_histogram_{mode}",
+    )(x2d)
+    return out[0, :num_bins]
+
+
+def structural_cost(n: int, num_bins: int, mode: str) -> dict:
+    """Contention / privatization structure for the benchmark report."""
+    per_block = _BLOCK_ROWS * LANES
+    blocks = -(-n // per_block)
+    private_copies = _BLOCK_ROWS if mode == "native" else 1
+    return {
+        "hbm_bytes": n * 4 + num_bins * 4,
+        "private_histograms_per_block": private_copies,
+        "compare_ops": n * num_bins,            # identical across variants
+        "mxu_routed": mode == "native",
+        "atomic_free": True,                    # deterministic by design
+        "blocks": blocks,
+    }

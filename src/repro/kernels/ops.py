@@ -1,0 +1,110 @@
+"""Public kernel API with ISA-mode dispatch — the Table V switchboard.
+
+Everything above this layer (models, train/serve steps) calls these
+wrappers; the active :class:`repro.core.IsaMode` decides which variant
+runs.  ``interpret`` defaults to True off-TPU so the same code path is
+exercised (and allclose-tested) on CPU; on a real TPU backend the Mosaic
+kernels compile natively.
+
+``ParallelConfig.use_pallas_attn`` gates whether models route their
+attention hot-spot through the Pallas flash kernel: the multi-pod
+dry-run lowers the pure-jnp chunked implementation (compilable for the
+CPU placeholder backend), while TPU execution and the kernel-equivalence
+tests use the Pallas path.  See DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import IsaMode
+from repro.kernels import attention as _attention
+from repro.kernels import gemm as _gemm
+from repro.kernels import histogram as _histogram
+from repro.kernels import reduction as _reduction
+from repro.kernels import rmsnorm as _rmsnorm
+from repro.kernels import ref as ref  # noqa: F401 (re-export for tests)
+
+MODES = tuple(m.value for m in IsaMode)
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode everywhere except a real TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+def _norm_mode(mode) -> str:
+    if isinstance(mode, IsaMode):
+        return mode.value
+    if mode not in MODES:
+        raise ValueError(f"unknown isa mode {mode!r}; valid: {MODES}")
+    return mode
+
+
+def matmul(a: jax.Array, b: jax.Array, *, mode="native",
+           out_dtype=jnp.float32, interpret: Optional[bool] = None):
+    mode = _norm_mode(mode)
+    if mode == "abstract+shuffle":
+        mode = "abstract"  # shuffle does not participate in GEMM
+    interpret = default_interpret() if interpret is None else interpret
+    return _gemm.gemm(a, b, mode=mode, out_dtype=out_dtype,
+                      interpret=interpret)
+
+
+def reduce_sum(x: jax.Array, *, mode="native",
+               interpret: Optional[bool] = None):
+    mode = _norm_mode(mode)
+    interpret = default_interpret() if interpret is None else interpret
+    return _reduction.reduce_sum(x, mode=mode, interpret=interpret)
+
+
+def histogram(values: jax.Array, num_bins: int = 256, *, mode="native",
+              interpret: Optional[bool] = None):
+    mode = _norm_mode(mode)
+    interpret = default_interpret() if interpret is None else interpret
+    return _histogram.histogram(values, num_bins, mode=mode,
+                                interpret=interpret)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    kv_offset: Optional[int] = None, mode="native",
+                    interpret: Optional[bool] = None,
+                    block_q: int = 256, block_kv: int = 256):
+    mode = _norm_mode(mode)
+    interpret = default_interpret() if interpret is None else interpret
+    if mode == "library":
+        return ref.attention(q, k, v, causal=causal)
+    if mode == "abstract+shuffle":
+        mode = "abstract"
+    return _attention.flash_attention(
+        q, k, v, causal=causal, kv_offset=kv_offset, mode=mode,
+        interpret=interpret, block_q=block_q, block_kv=block_kv)
+
+
+def rmsnorm(x, weight, *, eps: float = 1e-6, mode="native",
+            interpret: Optional[bool] = None):
+    mode = _norm_mode(mode)
+    interpret = default_interpret() if interpret is None else interpret
+    return _rmsnorm.rmsnorm(x, weight, eps=eps, mode=mode,
+                            interpret=interpret)
+
+
+STRUCTURAL_COSTS = {
+    "gemm": _gemm.structural_cost,
+    "reduction": _reduction.structural_cost,
+    "histogram": _histogram.structural_cost,
+    "flash_attention": _attention.structural_cost,
+}
+
+CONTRACTS = {
+    "gemm": (_gemm.ABSTRACT_CONTRACT, _gemm.NATIVE_CONTRACT),
+    "reduction": (_reduction.ABSTRACT_CONTRACT, _reduction.SHUFFLE_CONTRACT,
+                  _reduction.NATIVE_CONTRACT),
+    "histogram": (_histogram.ABSTRACT_CONTRACT, _histogram.NATIVE_CONTRACT),
+    "flash_attention": (_attention.ABSTRACT_CONTRACT,
+                        _attention.NATIVE_CONTRACT),
+    "rmsnorm": (_rmsnorm.ABSTRACT_CONTRACT, _rmsnorm.NATIVE_CONTRACT),
+}

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+Each Pallas kernel variant (abstract / abstract+shuffle / native) must be
+allclose to the oracle here across the shape/dtype sweeps in
+``tests/test_kernels_*.py``.  Oracles are written for clarity, not speed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm(a: jax.Array, b: jax.Array,
+         out_dtype=jnp.float32) -> jax.Array:
+    """C = A @ B with f32 accumulation."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def reduce_sum(x: jax.Array) -> jax.Array:
+    """Scalar sum with f32 accumulation (paper's reduction benchmark)."""
+    return jnp.sum(x.astype(jnp.float32))
+
+
+def histogram(values: jax.Array, num_bins: int) -> jax.Array:
+    """Counts of int32 values in [0, num_bins) (paper's histogram bench)."""
+    clipped = jnp.clip(values.astype(jnp.int32), 0, num_bins - 1)
+    return jnp.zeros((num_bins,), jnp.int32).at[clipped.reshape(-1)].add(1)
+
+
+def rmsnorm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * weight.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              causal: bool = True, scale: float | None = None) -> jax.Array:
+    """Softmax attention oracle. q: [B,H,Sq,D], k/v: [B,Hkv,Skv,D].
+
+    GQA handled by repeating kv heads.  f32 softmax.
+    """
+    b, h, sq, d = q.shape
+    hkv = k.shape[1]
+    if hkv != h:
+        assert h % hkv == 0
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        skv = k.shape[2]
+        qi = jnp.arange(sq)[:, None] + (skv - sq)  # align cache offsets
+        ki = jnp.arange(skv)[None, :]
+        logits = jnp.where(ki <= qi, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,97 @@
+"""Fused RMSNorm — the fused-epilogue example kernel.
+
+Exercises the remaining native feature (``fused_epilogue``): the native
+variant computes moment + normalization + weight application in one VMEM
+residency; the abstract variant makes two explicit passes through the
+scratchpad with a barrier between them (moment pass, then normalize pass),
+mirroring how a universal-primitives kernel without fusion guarantees
+would be written.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import (IsaMode, KernelContract, Primitive,
+                        validate_contract)
+
+_BLOCK_ROWS = 64
+
+ABSTRACT_CONTRACT = KernelContract(
+    kernel="rmsnorm", mode=IsaMode.ABSTRACT,
+    primitives=frozenset({
+        Primitive.LOCKSTEP_GROUP, Primitive.MANAGED_SCRATCHPAD,
+        Primitive.WORKGROUP_BARRIER, Primitive.HIERARCHICAL_MEMORY,
+        Primitive.IDENTITY_REGISTERS, Primitive.ASYNC_MEMORY,
+    }))
+NATIVE_CONTRACT = KernelContract(
+    kernel="rmsnorm", mode=IsaMode.NATIVE,
+    primitives=frozenset(Primitive),
+    native_features=frozenset({"fused_epilogue", "dimension_semantics",
+                               "multi_buffering"}))
+validate_contract(ABSTRACT_CONTRACT)
+validate_contract(NATIVE_CONTRACT)
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, scratch_ref, *, eps: float,
+                    mode: str):
+    x = x_ref[...].astype(jnp.float32)                    # (rows, d)
+    w = w_ref[...].astype(jnp.float32)                    # (1, d)
+    if mode == "native":
+        # Fused: single residency.
+        var = jnp.mean(x * x, axis=-1, keepdims=True)
+        o_ref[...] = (x * jax.lax.rsqrt(var + eps) * w).astype(o_ref.dtype)
+    else:
+        # Abstract: pass 1 writes moments to scratch; barrier; pass 2
+        # reloads them and normalizes.  Same arithmetic, one extra
+        # scratchpad round-trip per block.
+        scratch_ref[...] = jnp.mean(x * x, axis=-1, keepdims=True)
+        var = scratch_ref[...]                            # round-trip
+        o_ref[...] = (x * jax.lax.rsqrt(var + eps) * w).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "eps", "interpret"))
+def rmsnorm(x: jax.Array, weight: jax.Array, *, eps: float = 1e-6,
+            mode: str = "native", interpret: bool = True) -> jax.Array:
+    """RMSNorm over the last axis; x: [..., D], weight: [D]."""
+    if mode == "library":
+        xf = x.astype(jnp.float32)
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        return ((xf * jax.lax.rsqrt(var + eps)) *
+                weight.astype(jnp.float32)).astype(x.dtype)
+    if mode == "abstract+shuffle":
+        mode = "abstract"
+    *lead, d = x.shape
+    rows = 1
+    for s in lead:
+        rows *= s
+    x2d = x.reshape(rows, d)
+    block = min(_BLOCK_ROWS, rows)
+    pad = (-rows) % block
+    if pad:
+        x2d = jnp.pad(x2d, ((0, pad), (0, 0)))
+    grid = (x2d.shape[0] // block,)
+
+    params = None
+    if mode == "native":
+        params = pltpu.CompilerParams(dimension_semantics=("parallel",))
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps, mode=mode),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2d.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((block, 1), jnp.float32)],
+        compiler_params=params,
+        interpret=interpret,
+        name=f"uisa_rmsnorm_{mode}",
+    )(x2d, weight.reshape(1, d))
+    return out[:rows].reshape(x.shape)

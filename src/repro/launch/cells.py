@@ -1,0 +1,168 @@
+"""Cell builder: (architecture × input-shape × mesh) -> lowerable step.
+
+One "cell" is the unit of the dry-run matrix: it binds a full-size model
+config, the assigned input shape, a mesh, and the parallelism policy, and
+returns the jitted-but-not-yet-lowered step function plus the
+ShapeDtypeStruct arguments and explicit in/out shardings.
+
+Shape kinds map to step functions per the assignment:
+  train_4k     -> train_step   (fwd + bwd + sharded AdamW)
+  prefill_32k  -> prefill_step (fwd building the decode cache)
+  decode_32k   -> serve_step   (one token against a seq_len cache)
+  long_500k    -> serve_step   (sub-quadratic archs only)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch.mesh import make_ctx
+from repro.models import build_model
+from repro.models.config import (ModelConfig, ParallelConfig, ShapeConfig,
+                                 SHAPES, shape_applicable)
+from repro.parallel.sharding import ShardCtx, sanitize_tree, tree_shardings
+from repro.train.optim import OptConfig, init_opt_state
+from repro.train.step import build_train_step
+
+
+def _model_axis_size(mesh) -> int:
+    if mesh is None:
+        return 1
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+
+
+def default_parallel(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
+                     **overrides) -> ParallelConfig:
+    """Paper-faithful baseline parallelism policy per shape kind.
+
+    Cache layout: heads-sharded when num_kv_heads divides the model axis
+    (the low-communication layout), else seq-sharded (GQA few-heads);
+    batch=1 long-context shards seq over the whole chip plane.
+    """
+    if shape.name == "long_500k":
+        layout = "seq_all"
+    elif cfg.num_kv_heads and \
+            cfg.num_kv_heads % max(_model_axis_size(mesh), 1) == 0:
+        layout = "batch_heads"
+    else:
+        layout = "batch_seq"
+    base = dict(
+        fsdp=True,
+        seq_shard_acts=True,
+        cache_layout=layout,
+        remat="full" if shape.kind == "train" else "none",
+        grad_accum=1,
+        grad_compression="none",
+    )
+    base.update(overrides)
+    return ParallelConfig(**base)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeConfig
+    cfg: ModelConfig
+    par: ParallelConfig
+    ctx: ShardCtx
+    model: Any
+    fn: Any                       # jitted (AOT-lowerable) step
+    args: Tuple                   # ShapeDtypeStruct pytrees
+    kind: str
+
+    def lower(self):
+        return self.fn.lower(*self.args)
+
+
+def _batch_shardings(ctx: ShardCtx, batch_tree):
+    def leaf(x):
+        axes = ("act_batch",) + (None,) * (len(x.shape) - 1)
+        return ctx.sharding(axes)
+    return jax.tree.map(leaf, batch_tree)
+
+
+def build_cell(arch: str, shape_name: str, mesh,
+               opt_cfg: Optional[OptConfig] = None,
+               par_overrides: Optional[Dict] = None,
+               reduced: bool = False,
+               shape_cfg: Optional[ShapeConfig] = None) -> Cell:
+    cfg = configs.get_reduced(arch) if reduced else configs.get_config(arch)
+    shape = shape_cfg if shape_cfg is not None else SHAPES[shape_name]
+    if not shape_applicable(cfg, shape):
+        raise ValueError(
+            f"{arch} × {shape_name}: inapplicable (full-attention arch; "
+            f"long_500k needs sub-quadratic attention)")
+    par = default_parallel(cfg, shape, mesh=mesh, **(par_overrides or {}))
+    ctx = make_ctx(mesh, par)
+    model = build_model(cfg, par, ctx)
+    opt_cfg = opt_cfg or OptConfig(compression=par.grad_compression)
+
+    replicated = ctx.sharding(()) if mesh is not None else None
+    param_specs = configs.params_specs(model)
+    # sanitize: jit arg shardings must divide exactly (40 experts or 8 KV
+    # heads on a 16-way axis, vocab 49155, ... would reject otherwise)
+    param_sh = sanitize_tree(
+        tree_shardings(ctx, model.param_specs()), param_specs)
+
+    if shape.kind == "train":
+        step_fn, _ = build_train_step(model, opt_cfg, ctx)
+        opt_specs = jax.eval_shape(
+            lambda p: init_opt_state(p, opt_cfg), param_specs)
+        opt_sh = {"step": replicated, "m": param_sh, "v": param_sh,
+                  "master": param_sh}
+        if opt_cfg.compression == "int8_ef":
+            opt_sh["ef"] = param_sh
+        batch_specs = configs.batch_specs(cfg, shape)
+        batch_sh = sanitize_tree(_batch_shardings(ctx, batch_specs),
+                                 batch_specs)
+        fn = jax.jit(step_fn,
+                     in_shardings=(param_sh, opt_sh, batch_sh),
+                     out_shardings=(param_sh, opt_sh, replicated),
+                     donate_argnums=(0, 1))
+        args = (param_specs, opt_specs, batch_specs)
+        return Cell(arch, shape, cfg, par, ctx, model, fn, args, "train")
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return model.prefill(params, batch)
+
+        batch_specs = configs.batch_specs(cfg, shape)
+        batch_sh = sanitize_tree(_batch_shardings(ctx, batch_specs),
+                                 batch_specs)
+        out_sds = jax.eval_shape(prefill_step, param_specs, batch_specs)
+        cache_sh = tree_shardings(ctx, model.cache_specs())
+        logits_sh = ctx.sharding(("act_batch", "act_vocab"))
+        out_sh = sanitize_tree((logits_sh, cache_sh), out_sds)
+        fn = jax.jit(prefill_step,
+                     in_shardings=(param_sh, batch_sh),
+                     out_shardings=out_sh)
+        args = (param_specs, batch_specs)
+        return Cell(arch, shape, cfg, par, ctx, model, fn, args, "prefill")
+
+    # decode (decode_32k / long_500k): one serve_step against a full cache
+    def serve_step(params, tokens, cache):
+        return model.decode_step(params, tokens, cache)
+
+    tokens_spec, cache_specs_tree = configs.decode_specs(model, shape)
+    cache_sh = sanitize_tree(tree_shardings(ctx, model.cache_specs()),
+                             cache_specs_tree)
+    tok_sh = sanitize_tree(ctx.sharding(("act_batch",)), tokens_spec) \
+        if shape.global_batch > 1 else replicated
+    logits_sds = jax.ShapeDtypeStruct(
+        (shape.global_batch, cfg.vocab_size), jnp.float32)
+    logits_sh = sanitize_tree(
+        ctx.sharding(("act_batch", "act_vocab"))
+        if shape.global_batch > 1 else ctx.sharding((None, "act_vocab")),
+        logits_sds)
+    # out_shardings: (logits, cache) — cache keeps its input sharding
+    fn = jax.jit(serve_step,
+                 in_shardings=(param_sh, tok_sh, cache_sh),
+                 out_shardings=(logits_sh, cache_sh),
+                 donate_argnums=(2,))
+    args = (param_specs, tokens_spec, cache_specs_tree)
+    return Cell(arch, shape, cfg, par, ctx, model, fn, args, "decode")

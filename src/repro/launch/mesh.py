@@ -1,0 +1,43 @@
+"""Production mesh definitions.
+
+TPU v5e pod = 16×16 = 256 chips.  Single-pod mesh: (data=16, model=16).
+Multi-pod adds a leading ``pod`` axis (2 pods = 512 chips): plain data
+parallelism across pods, so the only cross-pod traffic is the gradient
+all-reduce — deliberately matched to the ICI-vs-DCN bandwidth asymmetry.
+
+Functions, not module constants: importing this module must never touch
+jax device state (device count is frozen at first use, and tests want 1
+device while the dry-run wants 512).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.models.config import ParallelConfig
+from repro.parallel.sharding import ShardCtx
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    """Arbitrary mesh (tests use (1,1)/(2,2); elastic restarts resize)."""
+    return jax.make_mesh(shape, axes)
+
+
+def make_ctx(mesh: Optional[Mesh], par: ParallelConfig) -> ShardCtx:
+    return ShardCtx(mesh=mesh, fsdp=par.fsdp,
+                    seq_shard_acts=par.seq_shard_acts,
+                    cache_layout=par.cache_layout)
+
+
+# Hardware constants for the roofline (TPU v5e, per chip).
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link

@@ -1,0 +1,210 @@
+"""Attention implementations for training / prefill / decode.
+
+Three execution paths:
+
+1. ``chunked_causal`` — pure-jnp online-softmax (flash) attention, memory
+   bounded by (chunk_q × chunk_kv) logits.  This is what the multi-pod
+   dry-run lowers (compilable for any backend).  Baseline visits every
+   (q-chunk, kv-chunk) pair and masks — O(S²) compute.
+2. ``exact_causal`` (ParallelConfig.causal_folding) — python-unrolled
+   q-chunks, each scanning only its causal kv prefix: exact triangle
+   compute, ~2× FLOP reduction at long sequence.  A §Perf lever visible in
+   ``cost_analysis``.
+3. The Pallas flash kernel (kernels/attention.py) — the TPU-native path,
+   numerically identical (tests assert so), selected on real TPU backends.
+
+All paths implement GQA without materializing repeated KV heads: q is
+viewed as [B, Hkv, G, S, D] and contracted against [B, Hkv, S, D].
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ShardCtx, shard
+
+NEG_INF = -1e30
+
+
+def _pad_axis(x, axis: int, multiple: int):
+    pad = (-x.shape[axis]) % multiple
+    if pad:
+        cfg = [(0, 0)] * x.ndim
+        cfg[axis] = (0, pad)
+        x = jnp.pad(x, cfg)
+    return x, x.shape[axis] // multiple
+
+
+def _chunk_step(qc, kc, vc, carry, row_ids, col_ids, causal):
+    """One online-softmax update.  qc: [B,Hkv,G,cq,D], kc/vc: [B,Hkv,ck,D]."""
+    m_prev, l_prev, acc = carry
+    s = jnp.einsum("bkgqd,bkcd->bkgqc", qc.astype(jnp.float32),
+                   kc.astype(jnp.float32))
+    if causal:
+        mask = col_ids[None, :] <= row_ids[:, None]        # (cq, ck)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    corr = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)
+    l_cur = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc = acc * corr + jnp.einsum("bkgqc,bkcd->bkgqd", p,
+                                  vc.astype(jnp.float32))
+    return m_cur, l_cur, acc
+
+
+def chunked_attention(q, k, v, *, causal: bool = True,
+                      kv_offset: int = 0, chunk_q: int = 512,
+                      chunk_kv: int = 1024, exact_causal: bool = False,
+                      scale: Optional[float] = None,
+                      ctx: Optional[ShardCtx] = None):
+    """q: [B,H,Sq,D]; k/v: [B,Hkv,Skv,D] -> [B,H,Sq,D]."""
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert h % hkv == 0
+    g = h // hkv
+    if scale is None:
+        scale = d ** -0.5
+    q = q * jnp.asarray(scale, q.dtype)
+
+    chunk_q = min(chunk_q, sq)
+    chunk_kv = min(chunk_kv, skv)
+    qg = q.reshape(b, hkv, g, sq, d)
+    qg, nq = _pad_axis(qg, 3, chunk_q)
+    kp, nk = _pad_axis(k, 2, chunk_kv)
+    vp, _ = _pad_axis(v, 2, chunk_kv)
+    sqp, skvp = qg.shape[3], kp.shape[2]
+    # padded kv columns must never win the softmax
+    kv_valid = jnp.arange(skvp) < skv
+
+    qs = jnp.moveaxis(qg.reshape(b, hkv, g, nq, chunk_q, d), 3, 0)
+    ks = jnp.moveaxis(kp.reshape(b, hkv, nk, chunk_kv, d), 2, 0)
+    vs = jnp.moveaxis(vp.reshape(b, hkv, nk, chunk_kv, d), 2, 0)
+    col_base = jnp.arange(chunk_kv)
+    row_base = jnp.arange(chunk_q)
+
+    def init_carry():
+        return (jnp.full((b, hkv, g, chunk_q, 1), NEG_INF, jnp.float32),
+                jnp.zeros((b, hkv, g, chunk_q, 1), jnp.float32),
+                jnp.zeros((b, hkv, g, chunk_q, d), jnp.float32))
+
+    def finish(carry):
+        _, l, acc = carry
+        l = jnp.where(l == 0.0, 1.0, l)
+        return (acc / l).astype(q.dtype)
+
+    def kv_scan(qc, qi: int | jax.Array, n_kv_chunks: int):
+        def body(carry, inp):
+            ki, kc, vc = inp
+            rows = qi * chunk_q + row_base + kv_offset
+            cols = ki * chunk_kv + col_base
+            cols_ok = cols < skv
+            kc = jnp.where(cols_ok[None, None, :, None], kc, 0)
+            rows_mask = jnp.where(cols_ok, cols, skv + sqp + kv_offset)
+            carry = _chunk_step(qc, kc, vc, carry, rows, rows_mask,
+                                causal=True)
+            return carry, None
+        xs = (jnp.arange(n_kv_chunks), ks[:n_kv_chunks], vs[:n_kv_chunks])
+        carry, _ = jax.lax.scan(body, init_carry(), xs)
+        return finish(carry)
+
+    if exact_causal and causal and kv_offset == skv - sq:
+        # §Perf path: unroll q-chunks in python; chunk i scans only its
+        # causal prefix — exact-triangle FLOPs, visible in cost_analysis.
+        outs = []
+        off_chunks = kv_offset // chunk_kv
+        for qi in range(nq):
+            last_col = qi * chunk_q + chunk_q - 1 + kv_offset
+            n_kv = min(nk, last_col // chunk_kv + 1)
+            outs.append(kv_scan(qs[qi], qi, max(n_kv, 1)))
+        out = jnp.stack(outs, axis=0)
+    else:
+        def q_body(_, qin):
+            qi, qc = qin
+            if causal:
+                o = kv_scan(qc, qi, nk)
+            else:
+                def body(carry, inp):
+                    ki, kc, vc = inp
+                    cols = ki * chunk_kv + col_base
+                    rows = jnp.full((chunk_q,), skvp + sqp, jnp.int32)
+                    cols_m = jnp.where(cols < skv, cols, skvp + sqp + 1)
+                    # non-causal: mask only padded kv columns
+                    carry = _chunk_step(qc, kc, vc, carry, rows, cols_m,
+                                        causal=True)
+                    return carry, None
+                carry, _ = jax.lax.scan(body, init_carry(),
+                                        (jnp.arange(nk), ks, vs))
+                o = finish(carry)
+            return None, o
+        _, out = jax.lax.scan(q_body, None, (jnp.arange(nq), qs))
+
+    out = jnp.moveaxis(out, 0, 3)                    # [B,Hkv,G,nq,cq,D]
+    out = out.reshape(b, hkv, g, sqp, d)[:, :, :, :sq]
+    return out.reshape(b, h, sq, d)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *,
+                     scale: Optional[float] = None,
+                     ctx: Optional[ShardCtx] = None):
+    """Single-token attention against a cache.
+
+    q: [B,H,1,D]; caches: [B,Hkv,S,D]; pos: [B] int32 — number of valid
+    cache entries per sequence (the new token sits at index pos).
+    """
+    b, h, _, d = q.shape
+    _, hkv, s, _ = k_cache.shape
+    g = h // hkv
+    if scale is None:
+        scale = d ** -0.5
+    qg = q.reshape(b, hkv, g, d)
+    logits = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    valid = jnp.arange(s)[None] <= pos[:, None]            # [B,S]
+    logits = jnp.where(valid[:, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", probs,
+                     v_cache.astype(jnp.float32))
+    return out.reshape(b, h, 1, d).astype(q.dtype)
+
+
+def update_cache(cache, new, pos):
+    """Insert new [B,Hkv,1,D] at index pos [B] — one-hot masked write
+    (GSPMD-friendly for seq-sharded caches; see DESIGN.md §4)."""
+    b, hkv, s, d = cache.shape
+    onehot = (jnp.arange(s)[None] == pos[:, None])         # [B,S]
+    return jnp.where(onehot[:, None, :, None], new.astype(cache.dtype), cache)
+
+
+# ---------------------------------------------------------------------------
+# int8 KV cache (beyond-paper serving optimization; ParallelConfig flag)
+# ---------------------------------------------------------------------------
+
+
+def quantize_kv(x):
+    """[B,Hkv,S,D] -> (int8 values, f32 scales [B,Hkv,S,1]).
+
+    Per-(token, head) symmetric scaling: attention quality is far more
+    sensitive to per-token dynamic range than per-tensor (K norms drift
+    with position under RoPE)."""
+    m = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(m / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def update_cache_int8(cache_q, cache_scale, new, pos):
+    """Quantized one-hot cache write: (int8 cache, scales, new bf16 slot)."""
+    b, hkv, s, d = cache_q.shape
+    q_new, s_new = quantize_kv(new)
+    onehot = (jnp.arange(s)[None] == pos[:, None])          # [B,S]
+    cache_q = jnp.where(onehot[:, None, :, None], q_new, cache_q)
+    cache_scale = jnp.where(onehot[:, None, :, None], s_new, cache_scale)
+    return cache_q, cache_scale

@@ -1,0 +1,126 @@
+"""Shared model machinery: logical-axis sharding, init, norms, rotary.
+
+Sharding follows the MaxText convention of *logical* axis names resolved
+through a rules table (repro/parallel/sharding.py).  Layers call
+``shard(x, ("act_batch", "act_seq", "act_embed"))``; with no mesh active
+this is the identity, so the same model code runs in unit tests, the
+multi-pod dry-run, and on real hardware.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ShardCtx, shard
+
+# --------------------------------------------------------------------------
+# Initialization
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    """Truncated-normal fan-in init (std = 1/sqrt(fan_in))."""
+    fan_in = shape[in_axis]
+    std = fan_in ** -0.5
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)
+            ).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Norms / activations (jnp implementations; the fused Pallas RMSNorm is the
+# TPU-native execution path, selected in kernels/ops.py)
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x, weight, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * weight.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def layernorm(x, weight, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def apply_norm(x, params, kind: str, eps: float):
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["scale"], eps)
+    return layernorm(x, params["scale"], params["bias"], eps)
+
+
+def init_norm(key, d: int, kind: str, dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def norm_specs(kind: str):
+    if kind == "rmsnorm":
+        return {"scale": ("norm",)}
+    return {"scale": ("norm",), "bias": ("norm",)}
+
+
+def activation(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# Rotary embeddings
+# --------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                     / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int):
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((n, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+# --------------------------------------------------------------------------
+# Losses
+# --------------------------------------------------------------------------
+
+
+def cross_entropy(logits, labels, ctx: Optional[ShardCtx] = None):
+    """Token-mean cross entropy; logits [B,S,V] (vocab possibly sharded)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

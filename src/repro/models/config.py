@@ -1,0 +1,208 @@
+"""Model / run configuration schema.
+
+One :class:`ModelConfig` describes any of the assigned architecture
+families (dense / moe / ssm / hybrid / encdec / vlm).  Parallelism and
+step-shape knobs live in :class:`RunConfig` so the same model config can
+be lowered for train / prefill / decode under different meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    # tokens are routed within fixed-size groups (GShard-style) so the
+    # dispatch einsum stays rectangular under SPMD
+    group_size: int = 4096
+    moe_every_n: int = 1          # 1 => every block is MoE
+    shared_experts: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 128          # N
+    head_dim: int = 64            # P
+    expand: int = 2               # d_inner = expand * d_model
+    n_groups: int = 1             # B/C groups (G)
+    conv_width: int = 4
+    chunk_size: int = 256         # SSD chunk length (Q)
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    encoder_layers: int = 6
+    num_frames: int = 1500        # stub audio frontend output length
+
+
+@dataclasses.dataclass(frozen=True)
+class VLMConfig:
+    num_patches: int = 576        # stub anyres vision frontend output length
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    attn_every: int = 6           # shared attention block period (zamba2)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int                # 0 for attention-free
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    qk_norm: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    act: str = "silu"             # silu (swiglu) | gelu (plain mlp)
+    norm: str = "rmsnorm"         # rmsnorm | layernorm
+    pos_emb: str = "rope"         # rope | learned | sinusoidal | none
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    encdec: Optional[EncDecConfig] = None
+    vlm: Optional[VLMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    max_seq_len: int = 131072
+    dtype: str = "bfloat16"       # activations/weights compute dtype
+    # sub-quadratic attention available? (long_500k eligibility)
+    subquadratic: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    def param_count(self) -> int:
+        """Approximate parameter count N (used for 6·N·D MODEL_FLOPS)."""
+        d, v = self.d_model, self.vocab_size
+        hd = self.resolved_head_dim
+        total = v * d                      # embed
+        if not self.tie_embeddings:
+            total += v * d                 # lm head
+        per_layer_attn = d * (self.num_heads * hd) + d * hd * self.num_kv_heads * 2 \
+            + (self.num_heads * hd) * d if self.num_heads else 0
+        if self.act == "silu":
+            per_layer_mlp = 3 * d * self.d_ff
+        else:
+            per_layer_mlp = 2 * d * self.d_ff
+        n_attn_layers = self.num_layers
+        n_mlp_layers = self.num_layers
+        if self.family == "ssm":
+            cfg = self.ssm
+            d_in = cfg.expand * d
+            conv_dim = d_in + 2 * cfg.n_groups * cfg.state_dim
+            nh = d_in // cfg.head_dim
+            per_ssm = (d * (2 * d_in + 2 * cfg.n_groups * cfg.state_dim + nh)
+                       + conv_dim * cfg.conv_width + 3 * nh + d_in
+                       + d_in * d)
+            return total + self.num_layers * per_ssm
+        if self.family == "hybrid":
+            cfg = self.ssm
+            d_in = cfg.expand * d
+            conv_dim = d_in + 2 * cfg.n_groups * cfg.state_dim
+            nh = d_in // cfg.head_dim
+            per_ssm = (d * (2 * d_in + 2 * cfg.n_groups * cfg.state_dim + nh)
+                       + conv_dim * cfg.conv_width + 3 * nh + d_in
+                       + d_in * d)
+            shared_attn = per_layer_attn + per_layer_mlp
+            return total + self.num_layers * per_ssm + shared_attn
+        if self.moe is not None:
+            per_layer_mlp = (3 * d * self.d_ff) * self.moe.num_experts \
+                + d * self.moe.num_experts  # router
+            if self.moe.shared_experts:
+                per_layer_mlp += 3 * d * self.d_ff * self.moe.shared_experts
+        total += n_attn_layers * per_layer_attn + n_mlp_layers * per_layer_mlp
+        if self.family == "encdec":
+            # encoder blocks + decoder cross-attention
+            total += self.encdec.encoder_layers * (per_layer_attn + per_layer_mlp)
+            total += self.num_layers * per_layer_attn  # cross attn
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top_k experts count)."""
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        full = self.param_count()
+        all_experts = self.num_layers * 3 * d * self.d_ff * self.moe.num_experts
+        active = self.num_layers * 3 * d * self.d_ff * (
+            self.moe.top_k + self.moe.shared_experts)
+        return full - all_experts + active
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelConfig:
+    """How the model maps onto the mesh (DP/FSDP/TP/EP/SP)."""
+
+    fsdp: bool = True              # shard params/opt-state over 'data'
+    seq_shard_acts: bool = True    # saved residuals seq-sharded over 'model'
+    # decode cache mesh layout: batch_heads | batch_seq | seq_all
+    # (see parallel/sharding.py — batch_seq when kv heads don't divide
+    # the model axis; seq_all for batch=1 long-context)
+    cache_layout: str = "batch_heads"
+    grad_accum: int = 1            # microbatch accumulation steps
+    remat: str = "full"            # full | dots | none
+    grad_compression: str = "none" # none | bf16 | int8_ef
+    attn_chunk_q: int = 512
+    attn_chunk_kv: int = 1024
+    # §Perf lever: fold the causal triangle so masked-out blocks are never
+    # computed (see models/attention.py)
+    causal_folding: bool = False
+    # §Perf lever: sharding-constrain pre-repeat K/V on the kv-head axis.
+    # Baseline True (the naive layout); False removes the per-layer
+    # involuntary replication all-gathers GSPMD inserts when
+    # num_kv_heads < model-axis size (see EXPERIMENTS.md §Perf).
+    constrain_kv_pre_repeat: bool = True
+    # §Perf lever: constrain attention/MLP partial-sum outputs to the
+    # seq-sharded layout *before* the residual add, so GSPMD lowers the
+    # TP combine as reduce-scatter (half the wire of all-reduce) instead
+    # of all-reduce + dynamic-slice.
+    rs_outputs: bool = False
+    # Beyond-paper serving lever: store the attention KV cache as int8
+    # with per-(token, head) f32 scales — halves the decode memory term
+    # (cache reads dominate long-context decode).  TransformerLM only.
+    kv_cache_int8: bool = False
+    # Route full-sequence attention through the Pallas flash kernel
+    # (kernels/attention.py) instead of the jnp chunked path.  This is
+    # the TPU execution path; CPU tests run it in interpret mode.  The
+    # dry-run keeps the jnp path (compilable for the CPU placeholder
+    # backend).
+    use_pallas_attn: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str                      # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str                      # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+
+def shape_applicable(model: ModelConfig, shape: ShapeConfig) -> bool:
+    """long_500k only for sub-quadratic archs (DESIGN.md §5)."""
+    if shape.name == "long_500k":
+        return model.subquadratic
+    return True

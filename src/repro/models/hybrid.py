@@ -1,0 +1,242 @@
+"""Hybrid SSM + shared-attention LM (zamba2 family, arXiv:2411.15242).
+
+Backbone of mamba2 blocks with ONE transformer block whose weights are
+*shared* across periodic applications (every ``attn_every`` mamba layers).
+Zamba2's per-application LoRA deltas and embedding-concat input are
+simplified away (noted in DESIGN.md §5); the weight-sharing structure and
+cache layout are faithful.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common, ssd, transformer
+from repro.models.config import ModelConfig, ParallelConfig
+from repro.parallel.sharding import ShardCtx, shard
+
+
+class HybridLM:
+    def __init__(self, cfg: ModelConfig, par: ParallelConfig,
+                 ctx: Optional[ShardCtx] = None):
+        assert cfg.ssm is not None and cfg.hybrid is not None
+        self.cfg, self.par, self.ctx = cfg, par, ctx
+        self.n_apps = cfg.num_layers // cfg.hybrid.attn_every
+
+    def _dtype(self):
+        return jnp.dtype(self.cfg.dtype)
+
+    def init_params(self, rng):
+        cfg = self.cfg
+        ks = jax.random.split(rng, 6)
+        block_keys = jax.random.split(ks[1], cfg.num_layers)
+        blocks = jax.vmap(lambda k: ssd.init_mamba_block(
+            k, cfg.d_model, cfg.ssm, self._dtype())[0])(block_keys)
+        params = {
+            "embed": common.embed_init(ks[0],
+                                       (cfg.vocab_size, cfg.d_model)),
+            "blocks": blocks,
+            "norms": jax.vmap(lambda k: common.init_norm(
+                k, cfg.d_model, cfg.norm, self._dtype()))(
+                jax.random.split(ks[2], cfg.num_layers)),
+            "shared_attn": transformer.init_block(ks[3], cfg,
+                                                  self._dtype())[0],
+            "final_norm": common.init_norm(ks[4], cfg.d_model, cfg.norm,
+                                           self._dtype()),
+            "lm_head": common.dense_init(
+                ks[5], (cfg.d_model, cfg.vocab_size), 0, self._dtype()),
+        }
+        return params
+
+    def param_specs(self):
+        cfg = self.cfg
+        _, bspecs = ssd.init_mamba_block(jax.random.PRNGKey(0), cfg.d_model,
+                                         cfg.ssm, jnp.float32)
+        bspecs = jax.tree.map(lambda ax: (None,) + ax, bspecs,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        nspecs = jax.tree.map(lambda ax: (None,) + ax,
+                              common.norm_specs(cfg.norm),
+                              is_leaf=lambda x: isinstance(x, tuple))
+        _, attn_specs = transformer.init_block(jax.random.PRNGKey(0), cfg,
+                                               jnp.float32)
+        return {"embed": ("vocab", "embed"), "blocks": bspecs,
+                "norms": nspecs, "shared_attn": attn_specs,
+                "final_norm": common.norm_specs(cfg.norm),
+                "lm_head": ("embed", "vocab")}
+
+    # ---- helpers ----
+
+    def _layer_groups(self):
+        """[(start, end)] mamba index ranges; shared attn after each."""
+        cfg = self.cfg
+        period = cfg.hybrid.attn_every
+        groups = [(i * period, (i + 1) * period) for i in range(self.n_apps)]
+        rem = (self.n_apps * period, cfg.num_layers)
+        return groups, rem
+
+    def _mamba_span(self, params, x, lo: int, hi: int,
+                    return_state: bool = False):
+        cfg, par, ctx = self.cfg, self.par, self.ctx
+        span = (jax.tree.map(lambda p: p[lo:hi], params["blocks"]),
+                jax.tree.map(lambda p: p[lo:hi], params["norms"]))
+
+        def body(h, layer):
+            lp, np_ = layer
+            hin = common.apply_norm(h, np_, cfg.norm, cfg.norm_eps)
+            if return_state:
+                out, st = ssd.apply_mamba_block(
+                    lp, hin, cfg.ssm, cfg.d_model, cfg.norm_eps, ctx,
+                    return_state=True)
+                return h + out, st
+            out = ssd.apply_mamba_block(lp, hin, cfg.ssm, cfg.d_model,
+                                        cfg.norm_eps, ctx)
+            return h + out, None
+
+        if par.remat == "full" and not return_state:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        return jax.lax.scan(body, x, span)
+
+    def _embed(self, params, tokens):
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self._dtype())
+        return shard(x, ("act_batch", "act_seq_unsharded", "act_embed"),
+                     self.ctx)
+
+    def _head(self, params, x):
+        cfg = self.cfg
+        x = common.apply_norm(x, params["final_norm"], cfg.norm,
+                              cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            params["lm_head"].astype(x.dtype))
+        return shard(logits.astype(jnp.float32),
+                     ("act_batch", "act_seq_unsharded", "act_vocab"),
+                     self.ctx)
+
+    # ---- forward ----
+
+    def _forward(self, params, x, positions, collect_cache: bool = False):
+        cfg, par, ctx = self.cfg, self.par, self.ctx
+        groups, rem = self._layer_groups()
+        ssm_states, convs, attn_kvs = [], [], []
+        for lo, hi in groups:
+            x, st = self._mamba_span(params, x, lo, hi,
+                                     return_state=collect_cache)
+            if collect_cache:
+                ssm_states.append(st[0])
+                convs.append(st[1])
+            if collect_cache:
+                x, _, kv = transformer.block_seq(
+                    params["shared_attn"], x, cfg, par, positions, ctx,
+                    return_kv=True)
+                attn_kvs.append(kv)
+            else:
+                x, _ = transformer.block_seq(params["shared_attn"], x, cfg,
+                                             par, positions, ctx)
+        if rem[1] > rem[0]:
+            x, st = self._mamba_span(params, x, rem[0], rem[1],
+                                     return_state=collect_cache)
+            if collect_cache:
+                ssm_states.append(st[0])
+                convs.append(st[1])
+        if not collect_cache:
+            return x, None
+        cache = {
+            "h": jnp.concatenate(ssm_states, axis=0),
+            "conv": jnp.concatenate(convs, axis=0),
+            "attn_k": jnp.stack([kv[0] for kv in attn_kvs]),
+            "attn_v": jnp.stack([kv[1] for kv in attn_kvs]),
+        }
+        return x, cache
+
+    def loss_fn(self, params, batch):
+        x = self._embed(params, batch["tokens"])
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]),
+                                     (x.shape[0], x.shape[1]))
+        x, _ = self._forward(params, x, positions)
+        logits = self._head(params, x)
+        loss = common.cross_entropy(logits, batch["labels"], self.ctx)
+        return loss, {"ce_loss": loss}
+
+    def prefill(self, params, batch):
+        x = self._embed(params, batch["tokens"])
+        b, s = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        x, cache = self._forward(params, x, positions, collect_cache=True)
+        logits = self._head(params, x[:, -1:, :])
+        cache["pos"] = jnp.full((b,), s, jnp.int32)
+        return logits[:, 0], cache
+
+    def init_cache(self, batch_size: int, cache_len: int):
+        cfg = self.cfg
+        s = cfg.ssm
+        d_inner = s.expand * cfg.d_model
+        nh = d_inner // s.head_dim
+        g = s.n_groups
+        hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        return {
+            "h": jnp.zeros((cfg.num_layers, batch_size, g, nh // g,
+                            s.state_dim, s.head_dim), jnp.float32),
+            "conv": jnp.zeros((cfg.num_layers, batch_size, s.conv_width - 1,
+                               ssd.conv_dim(s, cfg.d_model)), self._dtype()),
+            "attn_k": jnp.zeros((self.n_apps, batch_size, hkv, cache_len,
+                                 hd), self._dtype()),
+            "attn_v": jnp.zeros((self.n_apps, batch_size, hkv, cache_len,
+                                 hd), self._dtype()),
+            "pos": jnp.zeros((batch_size,), jnp.int32),
+        }
+
+    def cache_specs(self):
+        kv = (None, "act_cache_batch", "act_kv_heads", "act_kv_seq",
+              "act_head_dim")
+        return {
+            "h": (None, "act_cache_batch", None, "act_ssm_heads",
+                  "act_ssm_state", None),
+            "conv": (None, "act_cache_batch", None, "ssm_inner"),
+            "attn_k": kv, "attn_v": kv, "pos": (None,),
+        }
+
+    def decode_step(self, params, tokens, cache):
+        cfg, ctx = self.cfg, self.ctx
+        pos = cache["pos"]
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self._dtype())
+        groups, rem = self._layer_groups()
+        new_h, new_conv, new_k, new_v = [], [], [], []
+
+        def mamba_span_decode(x, lo, hi):
+            span = (jax.tree.map(lambda p: p[lo:hi], params["blocks"]),
+                    jax.tree.map(lambda p: p[lo:hi], params["norms"]),
+                    cache["h"][lo:hi], cache["conv"][lo:hi])
+
+            def body(h, layer):
+                lp, np_, st, cv = layer
+                hin = common.apply_norm(h, np_, cfg.norm, cfg.norm_eps)
+                out, st, cv = ssd.mamba_decode_step(
+                    lp, hin, cfg.ssm, cfg.d_model, cfg.norm_eps, st, cv,
+                    ctx)
+                return h + out, (st, cv)
+            return jax.lax.scan(body, x, span)
+
+        for app, (lo, hi) in enumerate(groups):
+            x, (st, cv) = mamba_span_decode(x, lo, hi)
+            new_h.append(st)
+            new_conv.append(cv)
+            x2, kv = transformer.block_decode(
+                params["shared_attn"], x[:, None, :], cfg,
+                (cache["attn_k"][app], cache["attn_v"][app]), pos, ctx)
+            x = x2[:, 0, :]
+            new_k.append(kv[0])
+            new_v.append(kv[1])
+        if rem[1] > rem[0]:
+            x, (st, cv) = mamba_span_decode(x, rem[0], rem[1])
+            new_h.append(st)
+            new_conv.append(cv)
+        logits = self._head(params, x[:, None, :])[:, 0]
+        new_cache = {
+            "h": jnp.concatenate(new_h, axis=0),
+            "conv": jnp.concatenate(new_conv, axis=0),
+            "attn_k": jnp.stack(new_k), "attn_v": jnp.stack(new_v),
+            "pos": pos + 1,
+        }
+        return logits, new_cache

@@ -1,0 +1,159 @@
+"""Attention-free SSM LM (mamba2-2.7b family)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common, ssd
+from repro.models.config import ModelConfig, ParallelConfig
+from repro.parallel.sharding import ShardCtx, shard
+
+
+class MambaLM:
+    def __init__(self, cfg: ModelConfig, par: ParallelConfig,
+                 ctx: Optional[ShardCtx] = None):
+        assert cfg.ssm is not None
+        self.cfg, self.par, self.ctx = cfg, par, ctx
+
+    def _dtype(self):
+        return jnp.dtype(self.cfg.dtype)
+
+    def init_params(self, rng):
+        cfg = self.cfg
+        k_embed, k_blocks, k_norm, k_head = jax.random.split(rng, 4)
+        block_keys = jax.random.split(k_blocks, cfg.num_layers)
+        blocks = jax.vmap(lambda k: ssd.init_mamba_block(
+            k, cfg.d_model, cfg.ssm, self._dtype())[0])(block_keys)
+        params = {
+            "embed": common.embed_init(k_embed,
+                                       (cfg.vocab_size, cfg.d_model)),
+            "blocks": blocks,
+            "norms": jax.vmap(lambda k: common.init_norm(
+                k, cfg.d_model, cfg.norm, self._dtype()))(
+                jax.random.split(k_norm, cfg.num_layers)),
+            "final_norm": common.init_norm(k_norm, cfg.d_model, cfg.norm,
+                                           self._dtype()),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = common.dense_init(
+                k_head, (cfg.d_model, cfg.vocab_size), 0, self._dtype())
+        return params
+
+    def param_specs(self):
+        cfg = self.cfg
+        _, bspecs = ssd.init_mamba_block(jax.random.PRNGKey(0), cfg.d_model,
+                                         cfg.ssm, jnp.float32)
+        bspecs = jax.tree.map(lambda ax: (None,) + ax, bspecs,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        nspecs = jax.tree.map(lambda ax: (None,) + ax,
+                              common.norm_specs(cfg.norm),
+                              is_leaf=lambda x: isinstance(x, tuple))
+        specs = {"embed": ("vocab", "embed"), "blocks": bspecs,
+                 "norms": nspecs,
+                 "final_norm": common.norm_specs(cfg.norm)}
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = ("embed", "vocab")
+        return specs
+
+    def _embed(self, params, tokens, batch=None):
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self._dtype())
+        return shard(x, ("act_batch", "act_seq_unsharded", "act_embed"),
+                     self.ctx)
+
+    def _head(self, params, x):
+        cfg = self.cfg
+        x = common.apply_norm(x, params["final_norm"], cfg.norm,
+                              cfg.norm_eps)
+        w = params.get("lm_head")
+        if w is None:
+            w = params["embed"].T
+        logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+        return shard(logits.astype(jnp.float32),
+                     ("act_batch", "act_seq_unsharded", "act_vocab"),
+                     self.ctx)
+
+    def _scan_blocks(self, params, x, return_state: bool = False):
+        cfg, par, ctx = self.cfg, self.par, self.ctx
+
+        def body(h, layer):
+            lp, np_ = layer
+            hin = common.apply_norm(h, np_, cfg.norm, cfg.norm_eps)
+            if return_state:
+                out, (state, conv) = ssd.apply_mamba_block(
+                    lp, hin, cfg.ssm, cfg.d_model, cfg.norm_eps, ctx,
+                    return_state=True)
+                h = h + out
+                h = shard(h, ("act_batch", "act_seq", "act_embed"), ctx)
+                return h, (state, conv)
+            out = ssd.apply_mamba_block(lp, hin, cfg.ssm, cfg.d_model,
+                                        cfg.norm_eps, ctx)
+            h = h + out
+            h = shard(h, ("act_batch", "act_seq", "act_embed"), ctx)
+            return h, None
+
+        if par.remat == "full" and not return_state:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, states = jax.lax.scan(body, x,
+                                 (params["blocks"], params["norms"]))
+        return x, states
+
+    def loss_fn(self, params, batch):
+        x = self._embed(params, batch["tokens"])
+        x, _ = self._scan_blocks(params, x)
+        logits = self._head(params, x)
+        loss = common.cross_entropy(logits, batch["labels"], self.ctx)
+        return loss, {"ce_loss": loss}
+
+    def prefill(self, params, batch):
+        x = self._embed(params, batch["tokens"])
+        x, states = self._scan_blocks(params, x, return_state=True)
+        logits = self._head(params, x[:, -1:, :])
+        b = x.shape[0]
+        cache = {"h": states[0], "conv": states[1],
+                 "pos": jnp.full((b,), x.shape[1], jnp.int32)}
+        return logits[:, 0], cache
+
+    def init_cache(self, batch_size: int, cache_len: int):
+        cfg = self.cfg
+        s = cfg.ssm
+        d_inner = s.expand * cfg.d_model
+        nh = d_inner // s.head_dim
+        g = s.n_groups
+        hg = nh // g
+        return {
+            "h": jnp.zeros((cfg.num_layers, batch_size, g, hg, s.state_dim,
+                            s.head_dim), jnp.float32),
+            "conv": jnp.zeros((cfg.num_layers, batch_size, s.conv_width - 1,
+                               ssd.conv_dim(s, cfg.d_model)), self._dtype()),
+            "pos": jnp.zeros((batch_size,), jnp.int32),
+        }
+
+    def cache_specs(self):
+        return {
+            "h": (None, "act_cache_batch", None, "act_ssm_heads",
+                  "act_ssm_state", None),
+            "conv": (None, "act_cache_batch", None, "ssm_inner"),
+            "pos": (None,),
+        }
+
+    def decode_step(self, params, tokens, cache):
+        cfg, ctx = self.cfg, self.ctx
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self._dtype())
+
+        def body(h, layer):
+            lp, np_, state, conv = layer
+            hin = common.apply_norm(h, np_, cfg.norm, cfg.norm_eps)
+            out, state, conv = ssd.mamba_decode_step(
+                lp, hin, cfg.ssm, cfg.d_model, cfg.norm_eps, state, conv,
+                ctx)
+            return h + out, (state, conv)
+
+        x, new = jax.lax.scan(
+            body, x, (params["blocks"], params["norms"], cache["h"],
+                      cache["conv"]))
+        logits = self._head(params, x[:, None, :])[:, 0]
+        return logits, {"h": new[0], "conv": new[1],
+                        "pos": cache["pos"] + 1}

@@ -1,0 +1,156 @@
+"""Feed-forward layers: dense (swiglu / gelu) and Mixture-of-Experts.
+
+MoE uses GShard-style capacity-based routing with one-hot dispatch/combine
+einsums (baseline; simple, SPMD-friendly, paper-faithful in spirit — it is
+the 'abstract' formulation of dispatch).  The §Perf hillclimb for the MoE
+cell replaces it with sort-based grouped dispatch (see EXPERIMENTS.md).
+Experts are sharded on the ``model`` axis (EP).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.config import ModelConfig, MoEConfig
+from repro.parallel.sharding import ShardCtx, shard
+
+
+# --------------------------------------------------------------------------
+# Dense MLP
+# --------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, d_ff: int, act: str, dtype):
+    ks = jax.random.split(key, 3)
+    params = {"wi": common.dense_init(ks[0], (d, d_ff), 0, dtype),
+              "wo": common.dense_init(ks[1], (d_ff, d), 0, dtype)}
+    specs = {"wi": ("embed", "mlp"), "wo": ("mlp", "embed")}
+    if act == "silu":                       # swiglu gate
+        params["wg"] = common.dense_init(ks[2], (d, d_ff), 0, dtype)
+        specs["wg"] = ("embed", "mlp")
+    return params, specs
+
+
+def apply_mlp(params, x, act: str, ctx: Optional[ShardCtx]):
+    h = jnp.einsum("bsd,df->bsf", x, params["wi"].astype(x.dtype))
+    if act == "silu":
+        gate = jnp.einsum("bsd,df->bsf", x, params["wg"].astype(x.dtype))
+        h = jax.nn.silu(gate) * h
+    else:
+        h = common.activation(h, act)
+    h = shard(h, ("act_batch", "act_seq_unsharded", "act_mlp"), ctx)
+    return jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(x.dtype))
+
+
+# --------------------------------------------------------------------------
+# Mixture of Experts
+# --------------------------------------------------------------------------
+
+
+def init_moe(key, d: int, d_ff: int, moe: MoEConfig, act: str, dtype):
+    ks = jax.random.split(key, 5)
+    e = moe.num_experts
+    params = {
+        "router": common.dense_init(ks[0], (d, e), 0, jnp.float32),
+        "wi": common.dense_init(ks[1], (e, d, d_ff), 1, dtype),
+        "wg": common.dense_init(ks[2], (e, d, d_ff), 1, dtype),
+        "wo": common.dense_init(ks[3], (e, d_ff, d), 1, dtype),
+    }
+    specs = {
+        "router": ("embed", None),
+        "wi": ("experts", "embed", "expert_mlp"),
+        "wg": ("experts", "embed", "expert_mlp"),
+        "wo": ("experts", "expert_mlp", "embed"),
+    }
+    if moe.shared_experts:
+        shared, sspecs = init_mlp(ks[4], d, d_ff * moe.shared_experts,
+                                  act, dtype)
+        params["shared"] = shared
+        specs["shared"] = sspecs
+    return params, specs
+
+
+def _capacity(group_size: int, moe: MoEConfig) -> int:
+    cap = int(group_size * moe.top_k * moe.capacity_factor / moe.num_experts)
+    return max(8, ((cap + 7) // 8) * 8)  # sublane-aligned
+
+
+def route(logits, moe: MoEConfig):
+    """Top-k routing with capacity truncation.
+
+    logits: [G, S, E] -> dispatch one-hot [G, S, E, C] and combine weights
+    [G, S, E, C].  Position within an expert's capacity buffer = cumsum of
+    prior assignments (deterministic, in-order truncation).
+    """
+    g, s, e = logits.shape
+    c = _capacity(s, moe)
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_w, top_ix = jax.lax.top_k(gates, moe.top_k)        # [G,S,K]
+    if moe.top_k > 1:
+        top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # expert one-hot per routing slot: [G,S,K,E]
+    onehot = jax.nn.one_hot(top_ix, e, dtype=jnp.float32)
+    # position of each (token, slot) in its expert's buffer
+    flat = onehot.reshape(g, s * moe.top_k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                  # [G,S*K,E]
+    pos = pos.reshape(g, s, moe.top_k, e)
+    within = jnp.sum(pos * onehot, axis=-1)                # [G,S,K]
+    keep = within < c
+    w = top_w * keep
+
+    cap_onehot = jax.nn.one_hot(within.astype(jnp.int32), c,
+                                dtype=jnp.float32)         # [G,S,K,C]
+    dispatch = jnp.einsum("gske,gskc->gsec", onehot * keep[..., None],
+                          cap_onehot)
+    combine = jnp.einsum("gske,gskc->gsec", onehot * w[..., None],
+                         cap_onehot)
+    aux = _load_balance_loss(gates, onehot)
+    return dispatch, combine, aux
+
+
+def _load_balance_loss(gates, onehot):
+    """Switch-style auxiliary load-balancing loss."""
+    me = jnp.mean(gates, axis=(0, 1))                      # [E]
+    ce = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))    # [E]
+    return jnp.sum(me * ce) * gates.shape[-1]
+
+
+def apply_moe(params, x, moe: MoEConfig, act: str,
+              ctx: Optional[ShardCtx]) -> Tuple[jax.Array, jax.Array]:
+    """x: [B,S,D] -> (y, aux_loss)."""
+    b, s, d = x.shape
+    tokens = b * s
+    gsz = min(moe.group_size, tokens)
+    flat = x.reshape(tokens, d)
+    pad = (-tokens) % gsz
+    if pad:                      # zero-pad to a whole number of groups
+        flat = jnp.pad(flat, ((0, pad), (0, 0)))
+    n_groups = flat.shape[0] // gsz
+    xg = flat.reshape(n_groups, gsz, d)
+    xg = shard(xg, ("act_group", "act_seq_unsharded", "act_embed"), ctx)
+
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                        params["router"])
+    dispatch, combine, aux = route(logits, moe)
+
+    # dispatch: [G,S,E,C] @ [G,S,D] -> [G,E,C,D]
+    expert_in = jnp.einsum("gsec,gsd->gecd", dispatch.astype(x.dtype), xg)
+    expert_in = shard(expert_in, ("act_group", "act_experts",
+                                  "act_capacity", "act_embed"), ctx)
+    h = jnp.einsum("gecd,edf->gecf", expert_in,
+                   params["wi"].astype(x.dtype))
+    gate = jnp.einsum("gecd,edf->gecf", expert_in,
+                      params["wg"].astype(x.dtype))
+    h = jax.nn.silu(gate) * h
+    out = jnp.einsum("gecf,efd->gecd", h, params["wo"].astype(x.dtype))
+    out = shard(out, ("act_group", "act_experts", "act_capacity",
+                      "act_embed"), ctx)
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), out)
+    y = y.reshape(-1, d)[:tokens].reshape(b, s, d)
+    if moe.shared_experts:
+        y = y + apply_mlp(params["shared"], x, act, ctx)
+    return y, aux

@@ -1,0 +1,258 @@
+"""Mamba2 / SSD (state-space duality) blocks — arXiv:2405.21060.
+
+Chunked SSD algorithm: within a chunk the recurrence is expanded into an
+attention-like quadratic form (the 'duality'); across chunks a linear
+recurrence carries the (N×P) state.  We scan over chunks so peak memory is
+one chunk's quadratic term, and the final carry doubles as the decode/
+prefill cache state.
+
+Decode is the pure recurrence: h <- exp(dt·A)·h + dt·B⊗x, y = C·h + D·x.
+
+The UISA connection (DESIGN.md §5): the intra-chunk term is a GEMM-shaped
+hot-spot (MXU), the cross-chunk state update is a reduction-shaped one —
+the shuffle-vs-barrier tradeoff of kernels/reduction.py applies inside the
+chunk reduction.  Attention kernels are inapplicable to this family.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.config import ModelConfig, SSMConfig
+from repro.parallel.sharding import ShardCtx, shard
+
+
+class SSMState(NamedTuple):
+    """Decode cache for one scanned stack of mamba blocks."""
+
+    h: jax.Array          # [layers, B, G, Hg, N, P] ssm state
+    conv: jax.Array       # [layers, B, W-1, conv_dim] conv tap history
+
+
+def conv_dim(cfg: SSMConfig, d_model: int) -> int:
+    d_inner = cfg.expand * d_model
+    return d_inner + 2 * cfg.n_groups * cfg.state_dim
+
+
+def init_mamba_block(key, d_model: int, cfg: SSMConfig, dtype):
+    d_inner = cfg.expand * d_model
+    nh = d_inner // cfg.head_dim
+    cdim = conv_dim(cfg, d_model)
+    ks = jax.random.split(key, 6)
+    params = {
+        "in_proj": common.dense_init(
+            ks[0], (d_model, 2 * d_inner + 2 * cfg.n_groups * cfg.state_dim
+                    + nh), 0, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, cdim))
+                   * (cfg.conv_width ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((cdim,), dtype),
+        "dt_bias": jnp.log(jnp.exp(
+            jnp.linspace(cfg.dt_min, cfg.dt_max, nh)) - 1.0
+        ).astype(jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+        "out_proj": common.dense_init(ks[5], (d_inner, d_model), 0, dtype),
+    }
+    specs = {
+        "in_proj": ("embed", "ssm_inner"),
+        "conv_w": ("conv_width", "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "dt_bias": ("ssm_heads",),
+        "A_log": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "norm_scale": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "embed"),
+    }
+    return params, specs
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: [B,L,C]; w: [W,C]; b: [C]."""
+    width, c = w.shape
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w[:, None, :].astype(jnp.float32),
+        window_strides=(1,), padding=[(width - 1, 0)],
+        dimension_numbers=("NHC", "HIO", "NHC"), feature_group_count=c)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_scan(x, dt, A, B_mat, C_mat, chunk: int,
+             initial_state: Optional[jax.Array] = None,
+             ctx: Optional[ShardCtx] = None):
+    """Chunked SSD.
+
+    x:     [B, L, H, P]   (H heads of dim P)
+    dt:    [B, L, H]      (positive step sizes)
+    A:     [H]            (negative)
+    B_mat: [B, L, G, N]
+    C_mat: [B, L, G, N]
+    Returns y [B, L, H, P] and final state [B, G, Hg, N, P] (Hg = H // G).
+    """
+    b, l, h, p = x.shape
+    g, n = B_mat.shape[2], B_mat.shape[3]
+    hg = h // g
+    chunk = min(chunk, l)
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)) + ((0, 0),))
+        B_mat = jnp.pad(B_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_mat = jnp.pad(C_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    lp = x.shape[1]
+    nc = lp // chunk
+
+    xf = x.astype(jnp.float32).reshape(b, nc, chunk, g, hg, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, chunk, g, hg)
+    Bf = B_mat.astype(jnp.float32).reshape(b, nc, chunk, g, n)
+    Cf = C_mat.astype(jnp.float32).reshape(b, nc, chunk, g, n)
+    dA = dtf * A.reshape(g, hg)                       # [B,nc,Q,G,Hg] (<=0)
+    ldec = jnp.cumsum(dA, axis=2)                     # inclusive within chunk
+
+    if initial_state is None:
+        h0 = jnp.zeros((b, g, hg, n, p), jnp.float32)
+    else:
+        h0 = initial_state.astype(jnp.float32)
+
+    causal = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])
+
+    def body(state, inp):
+        xq, dtq, ldq, Bq, Cq = inp                    # leading axis: nc
+        # ---- intra-chunk (quadratic / 'attention' form) ----
+        gts = jnp.einsum("bqgn,bsgn->bgqs", Cq, Bq)   # [B,G,Qt,Qs]
+        diff = ldq[:, :, None] - ldq[:, None]         # [B,Qt,Qs,G,Hg]
+        decay = jnp.exp(jnp.where(causal[None, :, :, None, None],
+                                  diff, -jnp.inf))
+        w = decay * jnp.moveaxis(gts, 1, 3)[..., None] \
+            * dtq[:, None]                            # [B,Qt,Qs,G,Hg]
+        y = jnp.einsum("bqsgh,bsghp->bqghp", w, xq)
+        # ---- contribution of carried state ----
+        y += jnp.einsum("bqgn,bghnp->bqghp", Cq, state) \
+            * jnp.exp(ldq)[..., None]
+        # ---- state update ----
+        total = ldq[:, -1]                            # [B,G,Hg]
+        wS = dtq * jnp.exp(total[:, None] - ldq)      # [B,Q,G,Hg]
+        s_c = jnp.einsum("bsgn,bsgh,bsghp->bghnp", Bq, wS, xq)
+        state = jnp.exp(total)[..., None, None] * state + s_c
+        return state, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xf, dtf, ldec, Bf, Cf))
+    final_state, ys = jax.lax.scan(body, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, lp, h, p)[:, :l]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
+    """One-token recurrence.
+
+    state: [B,G,Hg,N,P]; x_t: [B,H,P]; dt_t: [B,H]; B_t/C_t: [B,G,N].
+    """
+    b, g, hg, n, p = state.shape
+    xf = x_t.astype(jnp.float32).reshape(b, g, hg, p)
+    dtf = dt_t.astype(jnp.float32).reshape(b, g, hg)
+    da = jnp.exp(dtf * A.reshape(g, hg))              # [B,G,Hg]
+    upd = jnp.einsum("bgn,bgh,bghp->bghnp", B_t.astype(jnp.float32),
+                     dtf, xf)
+    state = da[..., None, None] * state + upd
+    y = jnp.einsum("bgn,bghnp->bghp", C_t.astype(jnp.float32), state)
+    return state, y.reshape(b, g * hg, p).astype(x_t.dtype)
+
+
+def _split_proj(z_xbc_dt, d_inner: int, gn2: int, nh: int):
+    z = z_xbc_dt[..., :d_inner]
+    xbc = z_xbc_dt[..., d_inner:2 * d_inner + gn2]
+    dt_raw = z_xbc_dt[..., 2 * d_inner + gn2:]
+    assert dt_raw.shape[-1] == nh
+    return z, xbc, dt_raw
+
+
+def apply_mamba_block(params, x, cfg: SSMConfig, d_model: int,
+                      eps: float, ctx: Optional[ShardCtx],
+                      initial_state: Optional[jax.Array] = None,
+                      return_state: bool = False):
+    """Full mamba2 block (train/prefill). x: [B,L,D] -> [B,L,D]."""
+    b, l, d = x.shape
+    d_inner = cfg.expand * d
+    nh = d_inner // cfg.head_dim
+    gn2 = 2 * cfg.n_groups * cfg.state_dim
+
+    proj = jnp.einsum("bld,de->ble", x, params["in_proj"].astype(x.dtype))
+    z, xbc, dt_raw = _split_proj(proj, d_inner, gn2, nh)
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"], params["conv_b"]))
+    xs = xbc[..., :d_inner]
+    B_mat = xbc[..., d_inner:d_inner + gn2 // 2].reshape(
+        b, l, cfg.n_groups, cfg.state_dim)
+    C_mat = xbc[..., d_inner + gn2 // 2:].reshape(
+        b, l, cfg.n_groups, cfg.state_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])         # [B,L,H]
+    A = -jnp.exp(params["A_log"])                     # [H]
+
+    xh = xs.reshape(b, l, nh, cfg.head_dim)
+    xh = shard(xh, ("act_batch", "act_seq_unsharded", "act_ssm_heads",
+                    "act_ssm_state"), ctx)
+    y, state = ssd_scan(xh, dt, A, B_mat, C_mat, cfg.chunk_size,
+                        initial_state=initial_state, ctx=ctx)
+    y = y + (params["D"].reshape(nh, 1)
+             * xh.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(b, l, d_inner)
+    y = common.rmsnorm(y * jax.nn.silu(z), params["norm_scale"], eps)
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"].astype(x.dtype))
+    if return_state:
+        conv_tail = _conv_tail(xbc_pre_conv=proj[..., d_inner:2 * d_inner + gn2],
+                               width=cfg.conv_width)
+        return out, (state, conv_tail)
+    return out
+
+
+def _conv_tail(xbc_pre_conv, width: int):
+    """Last (width-1) pre-conv inputs — the decode conv cache seed."""
+    b, l, c = xbc_pre_conv.shape
+    if l >= width - 1:
+        return xbc_pre_conv[:, l - (width - 1):, :]
+    pad = width - 1 - l
+    return jnp.pad(xbc_pre_conv, ((0, 0), (pad, 0), (0, 0)))
+
+
+def mamba_decode_step(params, x_t, cfg: SSMConfig, d_model: int,
+                      eps: float, state: jax.Array, conv_buf: jax.Array,
+                      ctx: Optional[ShardCtx] = None):
+    """One-token mamba2 step.
+
+    x_t: [B,D]; state: [B,G,Hg,N,P]; conv_buf: [B,W-1,conv_dim].
+    Returns (y [B,D], new_state, new_conv_buf).
+    """
+    b, d = x_t.shape
+    d_inner = cfg.expand * d
+    nh = d_inner // cfg.head_dim
+    gn2 = 2 * cfg.n_groups * cfg.state_dim
+
+    proj = jnp.einsum("bd,de->be", x_t, params["in_proj"].astype(x_t.dtype))
+    z, xbc_new, dt_raw = _split_proj(proj, d_inner, gn2, nh)
+
+    window = jnp.concatenate([conv_buf, xbc_new[:, None, :]], axis=1)
+    w = params["conv_w"].astype(jnp.float32)          # [W,C]
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w) \
+        + params["conv_b"].astype(jnp.float32)
+    xbc = jax.nn.silu(conv_out).astype(x_t.dtype)
+    new_conv_buf = window[:, 1:, :]
+
+    xs = xbc[..., :d_inner]
+    B_t = xbc[..., d_inner:d_inner + gn2 // 2].reshape(
+        b, cfg.n_groups, cfg.state_dim)
+    C_t = xbc[..., d_inner + gn2 // 2:].reshape(
+        b, cfg.n_groups, cfg.state_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    xh = xs.reshape(b, nh, cfg.head_dim)
+    state, y = ssd_decode_step(state, xh, dt, A, B_t, C_t)
+    y = y + (params["D"].reshape(nh, 1)
+             * xh.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(b, d_inner)
+    y = common.rmsnorm(y * jax.nn.silu(z), params["norm_scale"], eps)
+    out = jnp.einsum("be,ed->bd", y, params["out_proj"].astype(x_t.dtype))
+    return out, state, new_conv_buf

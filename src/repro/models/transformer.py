@@ -1,0 +1,422 @@
+"""Decoder-only transformer LM (dense / MoE / VLM backbone).
+
+Covers: llama4-scout (MoE top-1), granite-moe (MoE top-8), mistral-nemo,
+granite-8b, qwen3 (qk_norm), mistral-large, and the llava backbone (text
+decoder over a stub patch-embedding prefix).
+
+Layers are scanned (stacked params) so the lowered HLO is one block's
+program — essential for 512-device dry-run compile times.  Remat policy
+and sharding constraints follow ParallelConfig.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common, mlp
+from repro.models.attention import (chunked_attention, decode_attention,
+                                    dequantize_kv, quantize_kv,
+                                    update_cache, update_cache_int8)
+from repro.models.config import ModelConfig, ParallelConfig
+from repro.parallel.sharding import ShardCtx, shard
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------------
+# Per-block params
+# --------------------------------------------------------------------------
+
+
+def init_attn(key, cfg: ModelConfig, dtype):
+    d, h, hkv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    params = {
+        "wq": common.dense_init(ks[0], (d, h * hd), 0, dtype),
+        "wk": common.dense_init(ks[1], (d, hkv * hd), 0, dtype),
+        "wv": common.dense_init(ks[2], (d, hkv * hd), 0, dtype),
+        "wo": common.dense_init(ks[3], (h * hd, d), 0, dtype),
+    }
+    specs = {"wq": ("embed", "q_heads"), "wk": ("embed", "kv_heads"),
+             "wv": ("embed", "kv_heads"), "wo": ("q_heads", "embed")}
+    if cfg.qk_norm:
+        params["q_norm"] = jnp.ones((hd,), dtype)
+        params["k_norm"] = jnp.ones((hd,), dtype)
+        specs["q_norm"] = ("head_dim",)
+        specs["k_norm"] = ("head_dim",)
+    return params, specs
+
+
+def init_block(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    attn, attn_specs = init_attn(ks[0], cfg, dtype)
+    params = {"attn": attn,
+              "ln1": common.init_norm(ks[2], cfg.d_model, cfg.norm, dtype),
+              "ln2": common.init_norm(ks[3], cfg.d_model, cfg.norm, dtype)}
+    specs = {"attn": attn_specs,
+             "ln1": common.norm_specs(cfg.norm),
+             "ln2": common.norm_specs(cfg.norm)}
+    if cfg.moe is not None:
+        params["moe"], specs["moe"] = mlp.init_moe(
+            ks[1], cfg.d_model, cfg.d_ff, cfg.moe, cfg.act, dtype)
+    else:
+        params["mlp"], specs["mlp"] = mlp.init_mlp(
+            ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    return params, specs
+
+
+# --------------------------------------------------------------------------
+# Attention sublayer
+# --------------------------------------------------------------------------
+
+
+def _project_qkv(params, x, cfg: ModelConfig, positions, ctx,
+                 constrain_kv: bool = True):
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"].astype(x.dtype))
+    q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = common.rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = common.rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    if cfg.pos_emb == "rope":
+        q = common.apply_rope(q, positions[:, None, :], cfg.rope_theta)
+        k = common.apply_rope(k, positions[:, None, :], cfg.rope_theta)
+    q = shard(q, ("act_batch", "act_heads", "act_seq_unsharded",
+                  "act_head_dim"), ctx)
+    if constrain_kv:
+        # Baseline layout.  When num_kv_heads < model-axis size this
+        # forces a [shard,replica] representation that every consumer
+        # re-gathers — the constrain_kv_pre_repeat=False §Perf lever
+        # skips it and lets propagation keep K/V in the producer layout.
+        k = shard(k, ("act_batch", "act_kv_heads", "act_seq_unsharded",
+                      "act_head_dim"), ctx)
+        v = shard(v, ("act_batch", "act_kv_heads", "act_seq_unsharded",
+                      "act_head_dim"), ctx)
+    return q, k, v
+
+
+def _repeat_kv(k, v, group: int, ctx):
+    """Materialize GQA groups so the attention compute is uniformly
+    head-sharded.
+
+    With num_kv_heads < mesh 'model' size, a [B,Hkv,S,D] operand forces
+    GSPMD into [shard,replica] <-> [full-shard] transitions *inside* the
+    attention chunk scans — one involuntary all-gather per chunk step per
+    layer (~10 TB/chip/step at qwen3 scale; see EXPERIMENTS.md §Perf).
+    Repeating KV to H heads costs only the repeated chunk in VMEM-scale
+    activation memory but makes every attention tensor share one clean
+    16-way head sharding.  The *cache* keeps the un-repeated [B,Hkv,S,D]
+    layout — this is a compute-layout choice, not a memory-layout one.
+    """
+    if group == 1:
+        return k, v
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    k = shard(k, ("act_batch", "act_heads", "act_seq_unsharded",
+                  "act_head_dim"), ctx)
+    v = shard(v, ("act_batch", "act_heads", "act_seq_unsharded",
+                  "act_head_dim"), ctx)
+    return k, v
+
+
+def attn_seq(params, x, cfg: ModelConfig, par: ParallelConfig,
+             positions, ctx, causal: bool = True,
+             return_kv: bool = False):
+    """Full-sequence attention (train / prefill)."""
+    b, s, d = x.shape
+    q, k, v = _project_qkv(params, x, cfg, positions, ctx,
+                           constrain_kv=par.constrain_kv_pre_repeat)
+    k_rep, v_rep = _repeat_kv(k, v, cfg.num_heads // cfg.num_kv_heads, ctx)
+    if par.use_pallas_attn:
+        # TPU execution path: the framework's own flash kernel (native
+        # mode: MXU-aligned blocks + causal block-skip predication).
+        from repro.kernels import ops as kernel_ops
+        o = kernel_ops.flash_attention(
+            q, k_rep, v_rep, causal=causal,
+            block_q=min(par.attn_chunk_q, 256),
+            block_kv=min(par.attn_chunk_kv, 256), mode="native")
+    else:
+        o = chunked_attention(
+            q, k_rep, v_rep, causal=causal, kv_offset=0,
+            chunk_q=par.attn_chunk_q, chunk_kv=par.attn_chunk_kv,
+            exact_causal=par.causal_folding, ctx=ctx)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    out = jnp.einsum("bsh,hd->bsd", o, params["wo"].astype(x.dtype))
+    if par.rs_outputs:
+        # Constrain the row-parallel partial sum to the seq-sharded
+        # residual layout so the TP combine compiles to reduce-scatter.
+        out = shard(out, ("act_batch", "act_seq", "act_embed"), ctx)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def attn_decode(params, x_t, cfg: ModelConfig, kv_cache, pos, ctx,
+                int8: bool = False):
+    """One-token attention. x_t: [B,1,D]; kv_cache: (K,V) [B,Hkv,S,hd]
+    (bf16) or (Kq,Ks,Vq,Vs) (int8 + scales)."""
+    b = x_t.shape[0]
+    positions = pos[:, None]                       # [B,1]
+    q, k_new, v_new = _project_qkv(params, x_t, cfg, positions, ctx)
+    if int8:
+        k_q, k_s, v_q, v_s = kv_cache
+        k_q, k_s = update_cache_int8(k_q, k_s, k_new, pos)
+        v_q, v_s = update_cache_int8(v_q, v_s, v_new, pos)
+        k_cache = dequantize_kv(k_q, k_s, x_t.dtype)
+        v_cache = dequantize_kv(v_q, v_s, x_t.dtype)
+        new_cache = (k_q, k_s, v_q, v_s)
+    else:
+        k_cache, v_cache = kv_cache
+        k_cache = update_cache(k_cache, k_new, pos)
+        v_cache = update_cache(v_cache, v_new, pos)
+        new_cache = (k_cache, v_cache)
+    o = decode_attention(q, k_cache, v_cache, pos, ctx=ctx)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, -1)
+    out = jnp.einsum("bsh,hd->bsd", o, params["wo"].astype(x_t.dtype))
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# Block
+# --------------------------------------------------------------------------
+
+
+def block_seq(params, x, cfg: ModelConfig, par: ParallelConfig, positions,
+              ctx, return_kv: bool = False):
+    h = common.apply_norm(x, params["ln1"], cfg.norm, cfg.norm_eps)
+    if return_kv:
+        a, kv = attn_seq(params["attn"], h, cfg, par, positions, ctx,
+                         return_kv=True)
+    else:
+        a = attn_seq(params["attn"], h, cfg, par, positions, ctx)
+        kv = None
+    x = x + a
+    h = common.apply_norm(x, params["ln2"], cfg.norm, cfg.norm_eps)
+    if cfg.moe is not None:
+        m, aux = mlp.apply_moe(params["moe"], h, cfg.moe, cfg.act, ctx)
+    else:
+        m, aux = mlp.apply_mlp(params["mlp"], h, cfg.act, ctx), 0.0
+    if par.rs_outputs:
+        m = shard(m, ("act_batch", "act_seq", "act_embed"), ctx)
+    x = x + m
+    x = shard(x, ("act_batch", "act_seq", "act_embed"), ctx)
+    return (x, aux, kv) if return_kv else (x, aux)
+
+
+def block_decode(params, x_t, cfg: ModelConfig, kv_cache, pos, ctx,
+                 int8: bool = False):
+    h = common.apply_norm(x_t, params["ln1"], cfg.norm, cfg.norm_eps)
+    a, kv_cache = attn_decode(params["attn"], h, cfg, kv_cache, pos, ctx,
+                              int8=int8)
+    x_t = x_t + a
+    h = common.apply_norm(x_t, params["ln2"], cfg.norm, cfg.norm_eps)
+    if cfg.moe is not None:
+        m, _ = mlp.apply_moe(params["moe"], h, cfg.moe, cfg.act, ctx)
+    else:
+        m = mlp.apply_mlp(params["mlp"], h, cfg.act, ctx)
+    return x_t + m, kv_cache
+
+
+# --------------------------------------------------------------------------
+# Model
+# --------------------------------------------------------------------------
+
+
+class TransformerLM:
+    """Functional decoder-only LM with scanned layers."""
+
+    def __init__(self, cfg: ModelConfig, par: ParallelConfig,
+                 ctx: Optional[ShardCtx] = None):
+        self.cfg = cfg
+        self.par = par
+        self.ctx = ctx
+        self.aux_weight = 0.01 if cfg.moe is not None else 0.0
+
+    # ---- params ----
+
+    def init_params(self, rng):
+        cfg = self.cfg
+        dtype = _dtype(cfg)
+        k_embed, k_blocks, k_out, k_norm = jax.random.split(rng, 4)
+        block_keys = jax.random.split(k_blocks, cfg.num_layers)
+        blocks = jax.vmap(
+            lambda k: init_block(k, cfg, dtype)[0])(block_keys)
+        params = {
+            "embed": common.embed_init(k_embed,
+                                       (cfg.vocab_size, cfg.d_model)),
+            "blocks": blocks,
+            "final_norm": common.init_norm(k_norm, cfg.d_model, cfg.norm,
+                                           dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = common.dense_init(
+                k_out, (cfg.d_model, cfg.vocab_size), 0, dtype)
+        return params
+
+    def param_specs(self):
+        cfg = self.cfg
+        _, block_specs = init_block(jax.random.PRNGKey(0), cfg, jnp.float32)
+        # scanned leading 'layers' axis is unsharded
+        block_specs = jax.tree.map(lambda ax: (None,) + ax, block_specs,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+        specs = {
+            "embed": ("vocab", "embed"),
+            "blocks": block_specs,
+            "final_norm": common.norm_specs(cfg.norm),
+        }
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = ("embed", "vocab")
+        return specs
+
+    # ---- embedding / head ----
+
+    def _embed(self, params, tokens, batch):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0).astype(_dtype(cfg))
+        if cfg.family == "vlm" and "patch_embeds" in batch:
+            patches = batch["patch_embeds"].astype(_dtype(cfg))
+            x = jnp.concatenate([patches, x], axis=1)
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        return shard(x, ("act_batch", "act_seq_unsharded", "act_embed"),
+                     self.ctx)
+
+    def _head(self, params, x):
+        cfg = self.cfg
+        x = common.apply_norm(x, params["final_norm"], cfg.norm,
+                              cfg.norm_eps)
+        w = params.get("lm_head")
+        if w is None:
+            w = params["embed"].T
+        logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+        return shard(logits.astype(jnp.float32),
+                     ("act_batch", "act_seq_unsharded", "act_vocab"),
+                     self.ctx)
+
+    # ---- layer stack ----
+
+    def _scan_blocks(self, params, x, positions, return_kv=False):
+        cfg, par, ctx = self.cfg, self.par, self.ctx
+
+        def body(carry, layer_params):
+            h, aux = carry
+            if return_kv:
+                h, a, kv = block_seq(layer_params, h, cfg, par, positions,
+                                     ctx, return_kv=True)
+                return (h, aux + a), kv
+            h, a = block_seq(layer_params, h, cfg, par, positions, ctx)
+            return (h, aux + a), None
+
+        if par.remat == "full":
+            body = jax.checkpoint(body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        elif par.remat == "dots":
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+        (x, aux), kvs = jax.lax.scan(body, (x, 0.0), params["blocks"])
+        return x, aux, kvs
+
+    # ---- public API ----
+
+    def loss_fn(self, params, batch):
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        x = self._embed(params, tokens, batch)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]),
+                                     (x.shape[0], x.shape[1]))
+        x, aux, _ = self._scan_blocks(params, x, positions)
+        if cfg.family == "vlm" and "patch_embeds" in batch:
+            x = x[:, batch["patch_embeds"].shape[1]:]
+        logits = self._head(params, x)
+        loss = common.cross_entropy(logits, labels, self.ctx)
+        total = loss + self.aux_weight * aux / max(cfg.num_layers, 1)
+        return total, {"ce_loss": loss, "aux_loss": aux}
+
+    def prefill(self, params, batch):
+        """Full forward building a decode cache; returns last-pos logits."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed(params, tokens, batch)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]),
+                                     (x.shape[0], x.shape[1]))
+        x, _, kvs = self._scan_blocks(params, x, positions, return_kv=True)
+        logits = self._head(params, x[:, -1:, :])
+        pos = jnp.full((x.shape[0],), x.shape[1], jnp.int32)
+        if self.par.kv_cache_int8:
+            k_q, k_s = quantize_kv(kvs[0])
+            v_q, v_s = quantize_kv(kvs[1])
+            cache = {"k": k_q, "k_scale": k_s, "v": v_q, "v_scale": v_s,
+                     "pos": pos}
+        else:
+            cache = {"k": kvs[0], "v": kvs[1], "pos": pos}
+        return logits[:, 0], cache
+
+    def init_cache(self, batch_size: int, cache_len: int):
+        cfg = self.cfg
+        hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        shape = (cfg.num_layers, batch_size, hkv, cache_len, hd)
+        if self.par.kv_cache_int8:
+            sshape = shape[:-1] + (1,)
+            return {
+                "k": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.full(sshape, 1e-8, jnp.float32),
+                "v": jnp.zeros(shape, jnp.int8),
+                "v_scale": jnp.full(sshape, 1e-8, jnp.float32),
+                "pos": jnp.zeros((batch_size,), jnp.int32),
+            }
+        return {
+            "k": jnp.zeros(shape, _dtype(cfg)),
+            "v": jnp.zeros(shape, _dtype(cfg)),
+            "pos": jnp.zeros((batch_size,), jnp.int32),
+        }
+
+    def cache_specs(self):
+        kv = (None, "act_cache_batch", "act_kv_heads", "act_kv_seq",
+              "act_head_dim")
+        if self.par.kv_cache_int8:
+            sc = (None, "act_cache_batch", "act_kv_heads", "act_kv_seq",
+                  None)
+            return {"k": kv, "k_scale": sc, "v": kv, "v_scale": sc,
+                    "pos": (None,)}
+        return {"k": kv, "v": kv, "pos": (None,)}
+
+    def decode_step(self, params, tokens, cache):
+        """tokens: [B] int32 -> (logits [B,V], new cache)."""
+        cfg, ctx = self.cfg, self.ctx
+        int8 = self.par.kv_cache_int8
+        pos = cache["pos"]
+        x = jnp.take(params["embed"], tokens[:, None], axis=0
+                     ).astype(_dtype(cfg))
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+        def body(h, layer):
+            layer_params, kv = layer
+            h, new_kv = block_decode(layer_params, h, cfg, kv, pos, ctx,
+                                     int8=int8)
+            return h, new_kv
+
+        if int8:
+            kv_in = (cache["k"], cache["k_scale"], cache["v"],
+                     cache["v_scale"])
+        else:
+            kv_in = (cache["k"], cache["v"])
+        x, new_kvs = jax.lax.scan(body, x, (params["blocks"], kv_in))
+        logits = self._head(params, x)[:, 0]
+        if int8:
+            new_cache = {"k": new_kvs[0], "k_scale": new_kvs[1],
+                         "v": new_kvs[2], "v_scale": new_kvs[3],
+                         "pos": pos + 1}
+        else:
+            new_cache = {"k": new_kvs[0], "v": new_kvs[1], "pos": pos + 1}
+        return logits, new_cache

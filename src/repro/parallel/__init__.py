@@ -1,0 +1,5 @@
+"""Distribution layer: logical-axis sharding, meshes, compression."""
+from repro.parallel.sharding import (ShardCtx, shard, tree_shardings,
+                                     batch_sharding)
+
+__all__ = ["ShardCtx", "shard", "tree_shardings", "batch_sharding"]

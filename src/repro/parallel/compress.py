@@ -1,0 +1,60 @@
+"""Gradient-compression wire formats for the cross-pod (DCN) boundary.
+
+The cost asymmetry this targets: intra-pod ICI is ~50 GB/s/link, while the
+pod-to-pod boundary is the slow hop.  The mesh keeps plain data
+parallelism across ``pod``, so the ONLY cross-pod traffic is the gradient
+all-reduce — exactly the tensor worth compressing.
+
+Two formats:
+
+- ``bf16``: free (params/grads are already bf16); halves wire bytes vs
+  fp32 reference.  This is the default the dry-run measures.
+- ``int8``: per-tensor-scale symmetric quantization.  The error-feedback
+  residual (train/optim.py) makes the quantization noise contractive, the
+  standard 1-bit-Adam-family correctness argument.
+
+``allreduce_int8`` implements the int8 exchange as all-gather(int8) +
+local dequant-sum, because a raw int8 all-reduce would wrap: with P pods
+the payload is N·(P-1) int8 bytes vs N·2·(P-1)/P·4 fp32 bytes — a 4-8×
+wire saving for P ≤ 4 (and P is small: pods are expensive).  Callers run
+it under shard_map with ``axis`` bound to the pod mesh axis.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8: returns (q, scale)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g.astype(jnp.float32))) / 127.0,
+                        1e-12)
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def allreduce_int8(g: jax.Array, axis: str) -> jax.Array:
+    """Mean over ``axis`` moving int8 on the wire (all-gather + local sum).
+
+    Must run inside shard_map with ``axis`` a bound mesh axis name.
+    """
+    q, scale = quantize_int8(g)
+    qs = jax.lax.all_gather(q, axis)             # int8 on the wire
+    scales = jax.lax.all_gather(scale, axis)     # one f32 per pod
+    deq = qs.astype(jnp.float32) * scales.reshape(
+        (-1,) + (1,) * (qs.ndim - 1))
+    return jnp.mean(deq, axis=0)
+
+
+def allreduce_bf16(g: jax.Array, axis: str) -> jax.Array:
+    """Mean over ``axis`` with a bf16 wire format (psum in bf16)."""
+    n = jax.lax.psum(1, axis)
+    return (jax.lax.psum(g.astype(jnp.bfloat16), axis)
+            .astype(jnp.float32) / n)

@@ -1,0 +1,185 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP on one table).
+
+Mesh axes (launch/mesh.py):
+  pod    — DP across pods (only gradient all-reduce crosses it; matches the
+           ICI-vs-DCN cost asymmetry)
+  data   — DP/FSDP axis within a pod
+  model  — TP/EP axis
+
+Logical axes used by layers/params resolve through RULES.  GSPMD handles
+non-divisible dimensions by padding (e.g. 40 heads on a 16-way model
+axis), which the roofline's MODEL_FLOPS/HLO ratio makes visible.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, Tuple[str, ...], None]
+
+
+def _rules(fsdp: bool, seq_shard_acts: bool, cache_layout: str):
+    # cache_layout: how the decode KV cache maps onto the mesh —
+    #   batch_heads  batch -> (pod,data), kv heads -> model
+    #                (needs num_kv_heads divisible by the model axis)
+    #   batch_seq    batch -> (pod,data), cache seq -> model
+    #                (the GQA-few-heads layout: seq always divides)
+    #   seq_all      cache seq -> (data, model)  (long-context, batch=1)
+    assert cache_layout in ("batch_heads", "batch_seq", "seq_all")
+    return {
+        # ---- activations ----
+        "act_batch": ("pod", "data"),
+        "act_seq": "model" if seq_shard_acts else None,
+        "act_seq_unsharded": None,
+        "act_embed": None,
+        "act_mlp": "model",
+        "act_heads": "model",
+        "act_kv_heads": "model" if cache_layout == "batch_heads" else None,
+        "act_head_dim": None,
+        "act_vocab": "model",
+        "act_experts": "model",
+        "act_capacity": None,
+        "act_group": ("pod", "data"),
+        "act_kv_seq": {"batch_heads": None, "batch_seq": "model",
+                       "seq_all": ("data", "model")}[cache_layout],
+        "act_cache_batch": None if cache_layout == "seq_all"
+        else ("pod", "data"),
+        "act_ssm_heads": "model",
+        "act_ssm_state": None,
+        "act_frames": None,
+        # ---- parameters ----
+        "embed": "data" if fsdp else None,     # FSDP/ZeRO-3 axis
+        "vocab": "model",
+        "q_heads": "model",
+        "kv_heads": "model",
+        "heads_merged": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "experts": "model",
+        "expert_mlp": None,
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        "ssm_state": None,
+        "conv_width": None,
+        "norm": None,
+        "frames": None,
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Resolves logical axis names to a PartitionSpec for the active mesh.
+
+    ``mesh=None`` (unit tests, single-device) makes every operation the
+    identity, so model code is mesh-agnostic.
+    """
+
+    mesh: Optional[Mesh] = None
+    fsdp: bool = True
+    seq_shard_acts: bool = True
+    cache_layout: str = "batch_heads"
+
+    def spec(self, logical: Sequence[Optional[str]]) -> P:
+        rules = _rules(self.fsdp, self.seq_shard_acts, self.cache_layout)
+        axes = []
+        used = set()
+        for name in logical:
+            if name is None:
+                axes.append(None)
+                continue
+            ax = rules[name]
+            # an axis may appear at most once in a spec; later duplicates
+            # degrade to replicated (GSPMD requirement)
+            if isinstance(ax, tuple):
+                ax = tuple(a for a in ax if a not in used
+                           and (self.mesh is None or a in self.mesh.axis_names))
+                used.update(ax)
+                axes.append(ax if ax else None)
+            else:
+                if ax in used or (self.mesh is not None and ax is not None
+                                  and ax not in self.mesh.axis_names):
+                    axes.append(None)
+                else:
+                    if ax is not None:
+                        used.add(ax)
+                    axes.append(ax)
+        return P(*axes)
+
+    def sharding(self, logical: Sequence[Optional[str]]) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(logical))
+
+
+def shard(x: jax.Array, logical: Sequence[Optional[str]],
+          ctx: Optional[ShardCtx]) -> jax.Array:
+    """with_sharding_constraint against logical axes (identity w/o mesh)."""
+    if ctx is None or ctx.mesh is None:
+        return x
+    assert len(logical) == x.ndim, (logical, x.shape)
+    return jax.lax.with_sharding_constraint(x, ctx.sharding(logical))
+
+
+def tree_shardings(ctx: ShardCtx, spec_tree):
+    """Map a pytree of logical-axis tuples to NamedShardings (or None)."""
+    if ctx.mesh is None:
+        return jax.tree.map(lambda _: None, spec_tree,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    return jax.tree.map(lambda ax: ctx.sharding(ax), spec_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def batch_sharding(ctx: ShardCtx):
+    """Sharding for host-side [B, S] token batches."""
+    if ctx.mesh is None:
+        return None
+    return ctx.sharding(("act_batch", "act_seq_unsharded"))
+
+
+def sanitize_sharding(sh: Optional[NamedSharding], sds) -> Optional[NamedSharding]:
+    """Drop spec axes that do not divide the argument's global dims.
+
+    jit in_/out_shardings (unlike internal constraints, which GSPMD pads)
+    require exact divisibility.  Assigned configs are full of non-2^k
+    dims — 40 experts, vocab 49155/50280/51865, 8 KV heads on a 16-way
+    axis — so argument shardings are sanitized per-leaf: for each dim,
+    keep the longest axis-tuple prefix whose size product divides it.
+    The dropped axis means that dim is replicated (recorded, visible in
+    the dry-run memory analysis), never a compile failure.
+    """
+    if sh is None:
+        return None
+    mesh = sh.mesh
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec = sh.spec
+    dims = sds.shape
+    new_axes = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(dims):
+            new_axes.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        kept = []
+        prod = 1
+        for n in names:
+            if dims[i] % (prod * sizes[n]) == 0:
+                kept.append(n)
+                prod *= sizes[n]
+            else:
+                break
+        new_axes.append(tuple(kept) if len(kept) > 1
+                        else (kept[0] if kept else None))
+    return NamedSharding(mesh, P(*new_axes))
+
+
+def sanitize_tree(shardings, sds_tree):
+    """Map :func:`sanitize_sharding` over matching pytrees."""
+    if shardings is None:
+        return None
+    return jax.tree.map(
+        sanitize_sharding, shardings, sds_tree,
+        is_leaf=lambda x: x is None or isinstance(x, NamedSharding))

@@ -1,0 +1,6 @@
+"""Roofline derivation from compiled dry-run artifacts."""
+from repro.roofline.analysis import (parse_collectives, roofline_terms,
+                                     collective_summary, model_flops)
+
+__all__ = ["parse_collectives", "roofline_terms", "collective_summary",
+           "model_flops"]

@@ -1,0 +1,372 @@
+"""Trip-count-aware post-optimization-HLO analyzer.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE — under scanned
+layers (all our models scan) it undercounts FLOPs/bytes/collectives by
+~num_layers×.  This module parses the partitioned HLO text into its
+computation graph, discovers loop trip counts from the loop conditions,
+and accumulates three quantities with correct loop multiplicity:
+
+  flops       — 2·M·N·K per dot (from result shape × contracted dims),
+                recursing into fusions and while/call/conditional bodies.
+  hbm_bytes   — Σ (operand + result bytes) over non-fused surface ops:
+                fusion nodes count their boundary tensors only (their
+                internals stay in registers/VMEM), control ops are free.
+                This is the fusion-boundary traffic model of HBM load.
+  collectives — wire-byte records (roofline/analysis.py ring model),
+                multiplied by enclosing trip counts.
+
+All shapes in the partitioned module are already per-device, so every
+number this produces is per-chip.
+
+Trip counts: scan-lowered loops compare the induction variable against a
+literal; we take the max integer constant in the condition computation
+(exact for every loop this framework emits; falls back to 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_START_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w\.\-_]+)\s*(?:\([^{]*)?\{\s*$")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-_]+)\s*=\s*(.+)$")
+_OPCODE_RE = re.compile(r"^((?:\([^)]*\)|\S+)\s+)?([\w\-]+)\(")
+_ATTR_COMP_RE = {
+    "body": re.compile(r"body=%?([\w\.\-_]+)"),
+    "condition": re.compile(r"condition=%?([\w\.\-_]+)"),
+    "to_apply": re.compile(r"to_apply=%?([\w\.\-_]+)"),
+    "calls": re.compile(r"calls=%?([\w\.\-_]+)"),
+}
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRUE_COMP_RE = re.compile(r"true_computation=%?([\w\.\-_]+)")
+_FALSE_COMP_RE = re.compile(r"false_computation=%?([\w\.\-_]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+_COLLECTIVE_OPS = {"all-reduce", "all-gather", "reduce-scatter",
+                   "all-to-all", "collective-permute",
+                   "all-reduce-start", "all-gather-start",
+                   "collective-permute-start", "reduce-scatter-start",
+                   "all-to-all-start"}
+_CONTROL_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                "bitcast", "after-all", "partition-id", "replica-id",
+                "iota", "copy-start", "copy-done"}
+
+
+def _shape_elems_bytes(dtype: str, dims: str) -> Tuple[int, float]:
+    elems = 1
+    if dims:
+        for d in dims.split(","):
+            elems *= int(d)
+    return elems, elems * _DTYPE_BYTES.get(dtype, 0)
+
+
+def _all_shapes_bytes(text: str) -> float:
+    return sum(_shape_elems_bytes(m.group(1), m.group(2))[1]
+               for m in _SHAPE_RE.finditer(text))
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    result_dtype: str
+    result_dims: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op] = dataclasses.field(default_factory=list)
+    # symbol table: op name -> (dtype, dims)
+    symbols: Dict[str, Tuple[str, str]] = dataclasses.field(
+        default_factory=dict)
+    max_int_const: int = 0
+
+
+class HloModule:
+    def __init__(self, text: str, total_devices: int):
+        self.total_devices = total_devices
+        self.comps: Dict[str, Computation] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self._memo_flops: Dict[str, float] = {}
+        self._memo_bytes: Dict[str, float] = {}
+        self._memo_coll: Dict[str, List[dict]] = {}
+
+    # ---- parsing ----
+
+    def _parse(self, text: str):
+        cur: Optional[Computation] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if cur is None:
+                m = _COMP_START_RE.match(line)
+                if m and "=" not in line.split("(")[0]:
+                    cur = Computation(m.group(2))
+                    if m.group(1):
+                        self.entry = m.group(2)
+                continue
+            if line.strip() == "}":
+                self.comps[cur.name] = cur
+                cur = None
+                continue
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            name, rhs = m.group(1), m.group(2)
+            mo = _OPCODE_RE.match(rhs)
+            opcode = mo.group(2) if mo else ""
+            sh = _SHAPE_RE.search(rhs.split("(")[0] or rhs)
+            dtype, dims = (sh.group(1), sh.group(2)) if sh else ("", "")
+            cur.symbols[name] = (dtype, dims)
+            cur.ops.append(Op(name, opcode, dtype, dims, line))
+            for c in _CONST_RE.finditer(rhs):
+                cur.max_int_const = max(cur.max_int_const, int(c.group(1)))
+
+    # ---- loop structure ----
+
+    def trip_count(self, while_line: str) -> int:
+        m = _ATTR_COMP_RE["condition"].search(while_line)
+        if not m:
+            return 1
+        cond = self.comps.get(m.group(1))
+        if cond is None or cond.max_int_const <= 0:
+            return 1
+        return cond.max_int_const
+
+    def _callees(self, op: Op) -> List[Tuple[str, int]]:
+        """[(computation, multiplier)] invoked by this op."""
+        line = op.line
+        if op.opcode == "while":
+            body = _ATTR_COMP_RE["body"].search(line)
+            if body:
+                return [(body.group(1), self.trip_count(line))]
+            return []
+        out = []
+        for key in ("to_apply", "calls"):
+            m = _ATTR_COMP_RE[key].search(line)
+            if m:
+                out.append((m.group(1), 1))
+        mb = _BRANCHES_RE.search(line)
+        if mb:
+            for name in mb.group(1).split(","):
+                out.append((name.strip().lstrip("%"), 1))
+        for rx in (_TRUE_COMP_RE, _FALSE_COMP_RE):
+            m = rx.search(line)
+            if m:
+                out.append((m.group(1), 1))
+        return out
+
+    # ---- FLOPs ----
+
+    def _dot_flops(self, op: Op, comp: Computation) -> float:
+        res_elems, _ = _shape_elems_bytes(op.result_dtype, op.result_dims)
+        cd = _LHS_CDIMS_RE.search(op.line)
+        if not cd:
+            return 2.0 * res_elems          # degenerate dot
+        cdims = [int(x) for x in cd.group(1).split(",") if x]
+        operands = op.line.split("(", 1)[1]
+        names = re.findall(r"%([\w\.\-_]+)", operands)
+        if not names:
+            return 2.0 * res_elems
+        lhs = comp.symbols.get(names[0])
+        if lhs is None:
+            return 2.0 * res_elems
+        ldims = [int(x) for x in lhs[1].split(",") if x]
+        k = 1
+        for d in cdims:
+            if d < len(ldims):
+                k *= ldims[d]
+        return 2.0 * res_elems * k
+
+    def comp_flops(self, name: str) -> float:
+        if name in self._memo_flops:
+            return self._memo_flops[name]
+        comp = self.comps.get(name)
+        if comp is None:
+            return 0.0
+        total = 0.0
+        self._memo_flops[name] = 0.0       # cycle guard
+        for op in comp.ops:
+            if op.opcode == "dot":
+                total += self._dot_flops(op, comp)
+            elif op.opcode == "convolution":
+                # rough: 2 * result_elems * (kernel elems / out channels)
+                res_elems, _ = _shape_elems_bytes(op.result_dtype,
+                                                  op.result_dims)
+                total += 2.0 * res_elems
+            for callee, mult in self._callees(op):
+                total += mult * self.comp_flops(callee)
+        self._memo_flops[name] = total
+        return total
+
+    # ---- bytes (fusion-boundary traffic) ----
+
+    def _op_bytes(self, op: Op, comp: Computation) -> float:
+        _, res_bytes = _shape_elems_bytes(op.result_dtype, op.result_dims)
+        operands = op.line.split("(", 1)[1] if "(" in op.line else ""
+        opd_bytes = 0.0
+        for nm in re.findall(r"%([\w\.\-_]+)", operands.split(")")[0]):
+            sym = comp.symbols.get(nm)
+            if sym:
+                _, b = _shape_elems_bytes(*sym)
+                opd_bytes += b
+        return res_bytes + opd_bytes
+
+    def comp_bytes(self, name: str) -> float:
+        if name in self._memo_bytes:
+            return self._memo_bytes[name]
+        comp = self.comps.get(name)
+        if comp is None:
+            return 0.0
+        total = 0.0
+        self._memo_bytes[name] = 0.0
+        for op in comp.ops:
+            if op.opcode in _CONTROL_OPS:
+                continue
+            callees = self._callees(op)
+            if op.opcode in ("while", "call", "conditional"):
+                for callee, mult in callees:
+                    total += mult * self.comp_bytes(callee)
+                continue
+            # fusion / plain op: surface bytes only
+            total += self._op_bytes(op, comp)
+        self._memo_bytes[name] = total
+        return total
+
+    # ---- collectives ----
+
+    def _is_rs_rewritable(self, op: Op, comp: Computation,
+                          res_bytes: float, g: int) -> bool:
+        """True when this all-reduce matches the all-reduce+slice pattern
+        the TPU backend's ReduceScatterCreator rewrites to reduce-scatter.
+
+        The CPU backend never forms reduce-scatter, so every TP partial-
+        sum combine whose result is immediately re-sharded (our seq-
+        sharded residual layout) shows up as a full-price all-reduce
+        here.  Pricing it as RS models the TPU lowering, not a wish:
+        consumers must all take ≤ 1/g of the result.
+        """
+        if g <= 1:
+            return False
+        pat = re.compile(r"%" + re.escape(op.name) + r"(?![\w\.\-])")
+        consumers = []
+        for other in comp.ops:
+            if other.name == op.name:
+                continue
+            tail = other.line.split("=", 1)[-1]
+            if pat.search(tail):
+                consumers.append(other)
+        if not consumers:
+            return False
+        limit = res_bytes / g * 1.5
+        for c in consumers:
+            _, cb = _shape_elems_bytes(c.result_dtype, c.result_dims)
+            if cb == 0 or cb > limit:
+                return False
+        return True
+
+    def _coll_record(self, op: Op, comp: Computation) -> dict:
+        line = op.line
+        _, res_bytes = _shape_elems_bytes(op.result_dtype, op.result_dims)
+        if not res_bytes:
+            res_bytes = _all_shapes_bytes(line.split("(")[0])
+        operands = line.split("(", 1)[1] if "(" in line else ""
+        opd_bytes = _all_shapes_bytes(operands.split(")")[0])
+        m = _GROUPS_IOTA_RE.search(line)
+        if m:
+            g = int(m.group(2))
+        else:
+            m2 = _GROUPS_EXPL_RE.search(line)
+            g = len(m2.group(1).split(",")) if m2 else self.total_devices
+        g = max(g, 1)
+        base = op.opcode.replace("-start", "")
+        if base == "all-reduce":
+            if self._is_rs_rewritable(op, comp, res_bytes, g):
+                wire = res_bytes * (g - 1) / g
+                base = "all-reduce(->rs)"
+            else:
+                wire = 2.0 * res_bytes * (g - 1) / g
+        elif base == "all-gather":
+            wire = res_bytes * (g - 1) / g
+        elif base == "reduce-scatter":
+            wire = max(opd_bytes, res_bytes) * (g - 1) / g
+        elif base == "all-to-all":
+            wire = res_bytes * (g - 1) / g
+        else:                               # collective-permute
+            wire = res_bytes
+        return {"op": base, "result_bytes": res_bytes,
+                "operand_bytes": opd_bytes, "group_size": g,
+                "wire_bytes": wire, "count": 1,
+                "shape": f"{op.result_dtype}[{op.result_dims}]"}
+
+    def comp_collectives(self, name: str) -> List[dict]:
+        if name in self._memo_coll:
+            return self._memo_coll[name]
+        comp = self.comps.get(name)
+        if comp is None:
+            return []
+        recs: List[dict] = []
+        self._memo_coll[name] = []
+        for op in comp.ops:
+            if op.opcode in _COLLECTIVE_OPS:
+                recs.append(self._coll_record(op, comp))
+            for callee, mult in self._callees(op):
+                for r in self.comp_collectives(callee):
+                    r2 = dict(r)
+                    r2["wire_bytes"] = r["wire_bytes"] * mult
+                    r2["count"] = r["count"] * mult
+                    recs.append(r2)
+        self._memo_coll[name] = recs
+        return recs
+
+    # ---- public ----
+
+    def analyze(self) -> dict:
+        entry = self.entry or next(iter(self.comps))
+        colls = self.comp_collectives(entry)
+        by_op = defaultdict(lambda: {"count": 0, "wire_bytes": 0.0})
+        wire_f32 = 0.0
+        for r in colls:
+            by_op[r["op"]]["count"] += r["count"]
+            by_op[r["op"]]["wire_bytes"] += r["wire_bytes"]
+            if r["shape"].startswith("f32"):
+                wire_f32 += r["wire_bytes"]
+        total = sum(r["wire_bytes"] for r in colls)
+        # XLA CPU legalizes bf16 arithmetic to f32, so activation/weight
+        # collectives appear as f32 in the partitioned module; the TPU
+        # target keeps them bf16.  corrected = f32 wire halved (models
+        # hold all large cross-chip tensors in bf16; genuinely-f32
+        # cross-chip tensors, e.g. CE scalars, are vanishingly small).
+        corrected = total - wire_f32 / 2.0
+        return {
+            "flops": self.comp_flops(entry),
+            "hbm_bytes": self.comp_bytes(entry),
+            "collectives": {
+                "total_wire_bytes": corrected,
+                "raw_wire_bytes_cpu_f32": total,
+                "wire_bytes_f32_share": wire_f32 / total if total else 0.0,
+                "n_ops": int(sum(r["count"] for r in colls)),
+                "by_op": {k: dict(v) for k, v in by_op.items()},
+            },
+        }
+
+
+def analyze_hlo(text: str, total_devices: int) -> dict:
+    """Per-chip flops / hbm_bytes / collective wire bytes, loop-aware."""
+    return HloModule(text, total_devices).analyze()

@@ -1,0 +1,4 @@
+"""Serving substrate: batched engine with continuous batching."""
+from repro.serve.engine import ServeConfig, BatchedEngine, Request
+
+__all__ = ["ServeConfig", "BatchedEngine", "Request"]

@@ -1,0 +1,150 @@
+"""Batched serving engine with continuous batching over decode slots.
+
+The decode state is a fixed [B, ...] cache pytree; requests claim a slot,
+prefill writes that slot's cache entries, and every engine tick advances
+ALL active slots by one token (one jitted ``decode_step``).  Finished or
+empty slots keep decoding garbage into masked positions — the standard
+fixed-shape continuous-batching layout (vLLM-style slots, without paging;
+the cache seq dim is pre-sized to ``max_seq_len``).
+
+Per-slot prefill uses a single-sequence prefill jit and writes the result
+into the batch cache at the slot index (dynamic_update_slice), so a new
+request joins without recompiling or disturbing other slots.
+
+``serve_step`` (what the decode_32k / long_500k dry-run cells lower) is
+exactly one engine tick: (params, tokens[B], cache) -> (logits, cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch_slots: int          # B — concurrent decode slots
+    max_seq_len: int          # cache capacity per slot
+    max_new_tokens: int = 64
+    eos_id: int = 1
+    greedy: bool = True
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 64
+    # filled by the engine
+    slot: Optional[int] = None
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchedEngine:
+    def __init__(self, model, params, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.cache = model.init_cache(cfg.batch_slots, cfg.max_seq_len)
+        self.slots: List[Optional[Request]] = [None] * cfg.batch_slots
+        self.last_tokens = np.zeros((cfg.batch_slots,), np.int32)
+        self._decode = jax.jit(model.decode_step)
+        self._prefill_one = jax.jit(self._prefill_one_impl)
+
+    # ---- slot management ----
+
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.slots):
+            if r is None or r.done:
+                return i
+        return None
+
+    def _prefill_one_impl(self, params, tokens):
+        """Single-sequence prefill -> (last_logits, cache_for_batch1)."""
+        return self.model.prefill(params, {"tokens": tokens})
+
+    def add_request(self, req: Request) -> bool:
+        """Claim a slot and prefill it.  False if engine is full."""
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        req.slot = slot
+        self.slots[slot] = req
+        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        logits, cache1 = self._prefill_one(self.params, toks)
+        self._write_slot(slot, cache1, len(req.prompt))
+        nxt = int(jnp.argmax(logits[0]))
+        self.last_tokens[slot] = nxt
+        req.generated.append(nxt)
+        return True
+
+    def _write_slot(self, slot: int, cache1, prompt_len: int):
+        """Copy a batch-1 prefill cache into batch slot ``slot``."""
+        def write(full, one):
+            # leading layout: either [layers, B, ...] or [B(=slots), ...]
+            if one.ndim >= 2 and full.shape[0] == one.shape[0] \
+                    and full.ndim == one.ndim \
+                    and full.shape[1] == len(self.slots):
+                # [layers, B, ...]: pad seq dims up to capacity
+                pad = [(0, 0)] * one.ndim
+                for ax in range(2, one.ndim):
+                    pad[ax] = (0, full.shape[ax] - one.shape[ax])
+                one_p = jnp.pad(one, pad)
+                idx = (0, slot) + (0,) * (one.ndim - 2)
+                return jax.lax.dynamic_update_slice(
+                    full, one_p.astype(full.dtype)[:, :1], idx)
+            # [B, ...]
+            pad = [(0, 0)] * one.ndim
+            for ax in range(1, one.ndim):
+                pad[ax] = (0, full.shape[ax] - one.shape[ax])
+            one_p = jnp.pad(one, pad)
+            idx = (slot,) + (0,) * (one.ndim - 1)
+            return jax.lax.dynamic_update_slice(
+                full, one_p.astype(full.dtype)[:1], idx)
+
+        self.cache = jax.tree.map(write, self.cache, cache1)
+
+    # ---- ticking ----
+
+    def step(self) -> Dict[int, int]:
+        """One decode tick for all slots; returns {rid: new_token}."""
+        tokens = jnp.asarray(self.last_tokens)
+        logits, self.cache = self._decode(self.params, tokens, self.cache)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        out = {}
+        for slot, req in enumerate(self.slots):
+            if req is None or req.done:
+                continue
+            tok = int(nxt[slot])
+            req.generated.append(tok)
+            self.last_tokens[slot] = tok
+            out[req.rid] = tok
+            if tok == self.cfg.eos_id or \
+                    len(req.generated) >= req.max_new_tokens:
+                req.done = True
+        return out
+
+    def run(self, requests: List[Request],
+            max_ticks: int = 10_000) -> List[Request]:
+        """Continuous batching: admit whenever a slot frees, tick until
+        all requests finish."""
+        pending = list(requests)
+        admitted: List[Request] = []
+        ticks = 0
+        while (pending or any(r is not None and not r.done
+                              for r in self.slots)) and ticks < max_ticks:
+            while pending and self._free_slot() is not None:
+                req = pending.pop(0)
+                # reap the finished occupant, if any
+                slot = self._free_slot()
+                if self.slots[slot] is not None:
+                    self.slots[slot] = None
+                self.add_request(req)
+                admitted.append(req)
+            self.step()
+            ticks += 1
+        return admitted

@@ -1,0 +1,7 @@
+"""Training substrate: optimizer, step builder, loop, fault tolerance."""
+from repro.train.optim import (OptConfig, init_opt_state, adamw_update,
+                               lr_at_step, opt_state_specs)
+from repro.train.step import build_train_step, build_eval_step
+
+__all__ = ["OptConfig", "init_opt_state", "adamw_update", "lr_at_step",
+           "opt_state_specs", "build_train_step", "build_eval_step"]

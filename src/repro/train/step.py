@@ -1,0 +1,128 @@
+"""Train/eval step builders: value_and_grad + microbatch accumulation +
+sharded AdamW, with explicit in/out shardings for pjit.
+
+``build_train_step`` returns (step_fn, shardings) where step_fn is NOT yet
+jitted — launch/train.py and launch/dryrun.py jit it with the sharding
+trees so the same function serves real execution and .lower()/.compile()
+dry-runs.
+
+Microbatch gradient accumulation is a lax.scan over a leading microbatch
+axis: memory scales with one microbatch while the HLO stays one program
+(no python unrolling — compile time matters at 88 layers).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ParallelConfig
+from repro.parallel.sharding import ShardCtx, tree_shardings
+from repro.train.optim import OptConfig, adamw_update, init_opt_state, opt_state_specs
+
+
+def _split_microbatches(batch: Dict[str, jax.Array], n: int):
+    """[B, ...] -> [n, B/n, ...] for every batch leaf."""
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape((n, b // n) + x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def build_train_step(model, opt_cfg: OptConfig,
+                     ctx: Optional[ShardCtx] = None):
+    """Returns (train_step, shardings dict).
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+    """
+    par: ParallelConfig = model.par
+    ctx = ctx if ctx is not None else model.ctx
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        if par.grad_accum > 1:
+            micro = _split_microbatches(batch, par.grad_accum)
+
+            def body(acc, mb):
+                loss, metrics, grads = grads_of(params, mb)
+                acc_grads, acc_loss = acc
+                acc_grads = jax.tree.map(
+                    lambda a, g: a + g.astype(a.dtype), acc_grads, grads)
+                return (acc_grads, acc_loss + loss), metrics
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), metrics = jax.lax.scan(
+                body, (zero, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / par.grad_accum, grads)
+            loss = loss_sum / par.grad_accum
+            metrics = jax.tree.map(lambda m: jnp.mean(m), metrics)
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        new_params, new_opt_state, stats = adamw_update(
+            grads, opt_state, params, opt_cfg)
+        metrics = dict(metrics, loss=loss, **stats)
+        return new_params, new_opt_state, metrics
+
+    shardings = _train_shardings(model, opt_cfg, ctx)
+    return train_step, shardings
+
+
+def _train_shardings(model, opt_cfg: OptConfig, ctx: Optional[ShardCtx]):
+    if ctx is None or ctx.mesh is None:
+        return None
+    pspecs = model.param_specs()
+    param_sh = tree_shardings(ctx, pspecs)
+    opt_sh = {
+        "step": ctx.sharding(()),
+        "m": param_sh, "v": param_sh, "master": param_sh,
+    }
+    if opt_cfg.compression == "int8_ef":
+        opt_sh["ef"] = param_sh
+    batch_sh = ctx.sharding(("act_batch", None))
+    metric_sh = ctx.sharding(())
+    return {
+        "params": param_sh,
+        "opt_state": opt_sh,
+        "batch_leaf": batch_sh,
+        "metrics": metric_sh,
+    }
+
+
+def batch_shardings(model, ctx: Optional[ShardCtx], batch_tree):
+    """Per-leaf shardings for a batch pytree (tokens/labels 2-D;
+    frames/patch_embeds 3-D)."""
+    if ctx is None or ctx.mesh is None:
+        return None
+
+    def leaf(x):
+        nd = len(x.shape)
+        if nd == 1:
+            return ctx.sharding(("act_batch",))
+        if nd == 2:
+            return ctx.sharding(("act_batch", None))
+        return ctx.sharding(("act_batch",) + (None,) * (nd - 1))
+
+    return jax.tree.map(leaf, batch_tree)
+
+
+def build_eval_step(model, ctx: Optional[ShardCtx] = None):
+    def eval_step(params, batch):
+        loss, metrics = model.loss_fn(params, batch)
+        return dict(metrics, loss=loss)
+    return eval_step
+
+
+def init_train_state(model, opt_cfg: OptConfig, rng):
+    """(params, opt_state) on the current default device(s)."""
+    params = model.init_params(rng)
+    opt_state = init_opt_state(params, opt_cfg)
+    return params, opt_state

@@ -1,0 +1,94 @@
+"""Per-assigned-architecture smoke tests (REDUCED same-family configs).
+
+One forward/train step on CPU per arch: asserts output shapes, finite
+loss, finite gradients.  Full configs are exercised only via the dry-run
+(ShapeDtypeStruct, no allocation) — also sanity-checked here via
+eval_shape, which is allocation-free.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import build_model
+from repro.models.config import ParallelConfig, SHAPES, shape_applicable
+from repro.train import OptConfig, build_train_step, init_opt_state
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _smoke_batch(cfg, b=2, s=16):
+    toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size, jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family in ("encdec", "audio"):
+        batch["frames"] = jax.random.normal(
+            KEY, (b, cfg.encdec.num_frames, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            KEY, (b, cfg.vlm.num_patches, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+class TestArchSmoke:
+    def test_forward_loss_finite(self, arch):
+        cfg = configs.get_reduced(arch)
+        model = build_model(cfg, ParallelConfig(remat="none"))
+        params = model.init_params(KEY)
+        loss, metrics = model.loss_fn(params, _smoke_batch(cfg))
+        assert loss.shape == ()
+        assert np.isfinite(float(loss)), (arch, float(loss))
+
+    def test_one_train_step_no_nans(self, arch):
+        cfg = configs.get_reduced(arch)
+        model = build_model(cfg, ParallelConfig(remat="none"))
+        opt_cfg = OptConfig(total_steps=10, warmup_steps=1)
+        step_fn, _ = build_train_step(model, opt_cfg)
+        params = model.init_params(KEY)
+        opt_state = init_opt_state(params, opt_cfg)
+        new_params, new_opt, metrics = jax.jit(step_fn)(
+            params, opt_state, _smoke_batch(cfg))
+        assert np.isfinite(float(metrics["loss"]))
+        assert np.isfinite(float(metrics["grad_norm"]))
+        assert float(metrics["grad_norm"]) > 0.0
+        for leaf in jax.tree.leaves(new_params):
+            assert np.isfinite(np.asarray(leaf, np.float32)).all(), arch
+        assert int(new_opt["step"]) == 1
+
+    def test_decode_roundtrip(self, arch):
+        cfg = configs.get_reduced(arch)
+        model = build_model(cfg, ParallelConfig(remat="none"))
+        params = model.init_params(KEY)
+        batch = _smoke_batch(cfg)
+        logits, cache = model.prefill(params, batch)
+        assert logits.shape == (2, cfg.vocab_size)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+        if cfg.family in ("dense", "moe", "vlm"):
+            # prefill cache seq == prompt (+patches); rebuild at capacity
+            cache2 = model.init_cache(2, 32)
+            cache2 = {**cache2, "pos": cache["pos"]}
+            logits2, cache3 = model.decode_step(
+                params, jnp.ones((2,), jnp.int32), cache2)
+        else:
+            logits2, cache3 = model.decode_step(
+                params, jnp.ones((2,), jnp.int32), cache)
+        assert logits2.shape == (2, cfg.vocab_size)
+        assert np.isfinite(np.asarray(logits2, np.float32)).all()
+
+    def test_full_config_eval_shape(self, arch):
+        """Full-size config builds a parameter tree symbolically and its
+        size matches the analytic param_count within tolerance."""
+        cfg = configs.get_config(arch)
+        model = build_model(cfg, ParallelConfig())
+        tree = configs.params_specs(model)
+        n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+        est = cfg.param_count()
+        assert abs(n - est) / est < 0.15, (arch, n, est)
+
+    def test_shape_applicability(self, arch):
+        cfg = configs.get_config(arch)
+        long = SHAPES["long_500k"]
+        assert shape_applicable(cfg, long) == cfg.subquadratic
+        for name in ("train_4k", "prefill_32k", "decode_32k"):
+            assert shape_applicable(cfg, SHAPES[name])

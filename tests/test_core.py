@@ -1,0 +1,242 @@
+"""UISA core: dialects, primitives, contracts, execution model, mapping.
+
+Covers paper Tables I-IV and Eq. 1, plus hypothesis property tests on the
+invariants the core layer enforces.
+"""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Classification, ContractViolation, DIALECTS,
+                        Dialect, IsaMode, KernelContract, LaunchError,
+                        LaunchGeometry, Primitive, SPECS, TARGET,
+                        UNIVERSAL_PLUS_SHUFFLE, UNIVERSAL_SET,
+                        choose_block_bytes, get_dialect, gpu_dialects,
+                        occupancy, validate_contract, validate_launch)
+from repro.core import mapping
+from repro.core.dialect import REGISTER_WIDTH_BYTES
+from repro.core.memory_model import (MANDATORY_HIERARCHY, Ordering, Scope,
+                                     fence, requires_fence)
+
+
+# ---------------------------------------------------------------------------
+# Table II / III audit
+# ---------------------------------------------------------------------------
+
+
+class TestDialects:
+    def test_four_gpu_vendors_plus_tpu(self):
+        assert {d.vendor for d in gpu_dialects()} == {
+            "NVIDIA", "AMD", "Intel", "Apple"}
+        assert "tpu-v5e" in DIALECTS
+
+    def test_paper_table_iii_parameters(self):
+        nv = get_dialect("nvidia-ada-sm89")
+        assert nv.W == 32 and nv.R == 255 and nv.named_barriers == 16
+        amd = get_dialect("amd-rdna3")
+        assert amd.wave_width == (32, 64)
+        intel = get_dialect("intel-xe-hpg")
+        assert intel.wave_width == (8, 16) and intel.S == 512 * 1024
+        apple = get_dialect("apple-g13")
+        assert not apple.native_fp64 and apple.matrix_unit is None
+
+    def test_every_vendor_implements_shuffle(self):
+        # §VII.C: "all four vendors already implement shuffle in hardware"
+        for d in gpu_dialects():
+            assert d.has_lane_shuffle
+
+    def test_query_api(self):
+        assert TARGET.query("W") == 128
+        assert TARGET.query("matrix_tile") == (128, 128, 128)
+        with pytest.raises(KeyError):
+            TARGET.query("nonexistent")
+
+    def test_max_workgroup_uniform_1024(self):
+        for d in gpu_dialects():
+            assert d.max_workgroup == 1024
+
+
+class TestOccupancyEq1:
+    def test_eq1_nvidia_example(self):
+        nv = get_dialect("nvidia-ada-sm89")
+        # 256KB regfile, 32 regs x 32 lanes x 4B = 4KB per wave -> 64 waves
+        assert nv.occupancy(32) == 64
+
+    def test_zero_when_over_register_budget(self):
+        nv = get_dialect("nvidia-ada-sm89")
+        assert nv.occupancy(256) == 0        # R=255
+
+    @given(regs=st.integers(1, 255), width=st.sampled_from([8, 16, 32, 64]))
+    @settings(max_examples=100, deadline=None)
+    def test_eq1_property(self, regs, width):
+        """O = floor(F/(R·W·w)) exactly, for every dialect (Eq. 1)."""
+        for d in gpu_dialects():
+            o = d.occupancy(regs, wave_width=width)
+            if regs > d.R:
+                assert o == 0
+            else:
+                assert o == d.F // (regs * width * REGISTER_WIDTH_BYTES)
+
+    @given(regs=st.integers(1, 128))
+    @settings(max_examples=50, deadline=None)
+    def test_occupancy_monotone_in_registers(self, regs):
+        """More registers per thread never increases occupancy."""
+        for d in gpu_dialects():
+            if regs + 1 <= d.R:
+                assert d.occupancy(regs) >= d.occupancy(regs + 1)
+
+    @given(block=st.integers(1, 1 << 24), bufs=st.integers(1, 4))
+    @settings(max_examples=100, deadline=None)
+    def test_buffer_occupancy_tpu_rederivation(self, block, bufs):
+        o = TARGET.buffer_occupancy(block, bufs)
+        assert o == TARGET.S // (bufs * block)
+        # same fixed-area algebra: occupancy x demand <= budget
+        assert o * bufs * block <= TARGET.S
+
+
+class TestLaunchValidation:
+    def test_valid_launch(self):
+        validate_launch(LaunchGeometry(grid=(8, 8), workgroup=256),
+                        get_dialect("nvidia-ada-sm89"))
+
+    def test_rejects_oversized_workgroup(self):
+        with pytest.raises(LaunchError):
+            validate_launch(LaunchGeometry(grid=(1,), workgroup=2048),
+                            get_dialect("nvidia-ada-sm89"))
+
+    def test_rejects_scratchpad_overflow(self):
+        d = get_dialect("apple-g13")
+        with pytest.raises(LaunchError):
+            validate_launch(
+                LaunchGeometry(grid=(1,), workgroup=64,
+                               scratchpad_bytes=d.S + 1), d)
+
+    @given(wg=st.integers(1, 1024), regs=st.integers(1, 64),
+           scratch=st.integers(0, 32 * 1024))
+    @settings(max_examples=50, deadline=None)
+    def test_valid_geometries_have_nonneg_occupancy(self, wg, regs, scratch):
+        d = get_dialect("amd-rdna3")
+        geom = LaunchGeometry(grid=(4,), workgroup=wg,
+                              regs_per_thread=regs,
+                              scratchpad_bytes=scratch)
+        validate_launch(geom, d)
+        assert occupancy(geom, d) >= 0
+
+
+# ---------------------------------------------------------------------------
+# Primitives + contracts (the Table V methodology enforcement)
+# ---------------------------------------------------------------------------
+
+
+class TestPrimitives:
+    def test_ten_plus_shuffle(self):
+        assert len(UNIVERSAL_SET) == 10
+        assert len(UNIVERSAL_PLUS_SHUFFLE) == 11
+        assert Primitive.LANE_SHUFFLE not in UNIVERSAL_SET
+
+    def test_every_primitive_has_four_vendor_realizations(self):
+        for prim, spec in SPECS.items():
+            assert set(spec.vendor_realization) == {
+                "NVIDIA", "AMD", "Intel", "Apple"}, prim
+
+    def test_tpu_divergences_flagged(self):
+        # zero-cost switch and HW atomics do not transfer (DESIGN.md §2)
+        assert not SPECS[Primitive.ZERO_COST_SWITCH].tpu_direct
+        assert not SPECS[Primitive.ATOMIC_RMW].tpu_direct
+
+    def test_abstract_mode_budget(self):
+        assert IsaMode.ABSTRACT.allowed == UNIVERSAL_SET
+        assert IsaMode.ABSTRACT_SHUFFLE.allowed == UNIVERSAL_PLUS_SHUFFLE
+
+
+class TestContracts:
+    def test_abstract_cannot_use_shuffle(self):
+        with pytest.raises(ContractViolation):
+            validate_contract(KernelContract(
+                kernel="x", mode=IsaMode.ABSTRACT,
+                primitives=frozenset({Primitive.LANE_SHUFFLE})))
+
+    def test_abstract_cannot_use_native_features(self):
+        with pytest.raises(ContractViolation):
+            validate_contract(KernelContract(
+                kernel="x", mode=IsaMode.ABSTRACT,
+                primitives=frozenset({Primitive.LOCKSTEP_GROUP}),
+                native_features=frozenset({"mxu_aligned_tiles"})))
+
+    def test_unknown_native_feature_rejected(self):
+        with pytest.raises(ValueError):
+            KernelContract(kernel="x", mode=IsaMode.NATIVE,
+                           primitives=frozenset(),
+                           native_features=frozenset({"warp_shuffle"}))
+
+    def test_atomics_on_tpu_require_privatize_reduce(self):
+        # claiming ATOMIC_RMW without scratchpad+barrier must fail on TPU
+        with pytest.raises(ContractViolation):
+            validate_contract(KernelContract(
+                kernel="x", mode=IsaMode.NATIVE,
+                primitives=frozenset({Primitive.ATOMIC_RMW})))
+
+    def test_all_shipped_contracts_validate(self):
+        from repro.kernels.ops import CONTRACTS
+        for kernel, contracts in CONTRACTS.items():
+            for c in contracts:
+                validate_contract(c)    # must not raise
+
+    @given(prims=st.sets(st.sampled_from(list(Primitive))))
+    @settings(max_examples=100, deadline=None)
+    def test_contract_validation_is_exact(self, prims):
+        """A contract passes iff its primitives fit the mode budget (and
+        TPU-divergent primitives carry their required companions)."""
+        prims = frozenset(prims)
+        c = KernelContract(kernel="p", mode=IsaMode.ABSTRACT,
+                           primitives=prims)
+        legal = prims <= IsaMode.ABSTRACT.allowed
+        if Primitive.ATOMIC_RMW in prims:
+            legal = legal and {Primitive.MANAGED_SCRATCHPAD,
+                               Primitive.WORKGROUP_BARRIER} <= prims
+        try:
+            validate_contract(c)
+            assert legal
+        except ContractViolation:
+            assert not legal
+
+
+# ---------------------------------------------------------------------------
+# Memory model
+# ---------------------------------------------------------------------------
+
+
+class TestMemoryModel:
+    def test_three_mandatory_levels(self):
+        assert len(MANDATORY_HIERARCHY) == 3       # Table IV resolution
+
+    def test_scope_ordering(self):
+        assert Scope.WAVE.rank < Scope.WORKGROUP.rank \
+            < Scope.DEVICE.rank < Scope.SYSTEM.rank
+
+    def test_fence_accepts_all_scopes(self):
+        for s in Scope:
+            for o in Ordering:
+                fence(s, o)                        # auditable no-op
+
+    def test_wave_local_needs_no_fence(self):
+        assert not requires_fence(Scope.WAVE, Scope.WAVE)
+        assert requires_fence(Scope.WORKGROUP, Scope.WAVE)
+        assert requires_fence(Scope.WAVE, Scope.SYSTEM)
+
+
+# ---------------------------------------------------------------------------
+# Mapping report (Fig. 3)
+# ---------------------------------------------------------------------------
+
+
+class TestMapping:
+    def test_full_report_renders(self):
+        report = mapping.full_report()
+        for needle in ("NVIDIA", "AMD", "Intel", "Apple",
+                       "LANE_SHUFFLE", "ADAPTED"):
+            assert needle in report
+
+    def test_dialect_table_has_tpu_column(self):
+        assert "Google" in mapping.dialect_table()

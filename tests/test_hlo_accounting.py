@@ -1,0 +1,89 @@
+"""HLO analyzer accounting: trip counts, dtype split, AR->RS pricing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.roofline.hlo_parser import HloModule, analyze_hlo
+
+
+def _mesh4():
+    return jax.make_mesh((4,), ("m",))
+
+
+@pytest.mark.skipif(jax.device_count() < 4,
+                    reason="needs >=4 devices (run under dryrun env)")
+class TestMultiDevice:
+    pass
+
+
+class TestSingleDevice:
+    def test_trip_count_exact(self):
+        def f(x, ws):
+            def body(h, w):
+                return jnp.dot(h, w,
+                               preferred_element_type=jnp.float32), None
+            return jax.lax.scan(body, x, ws)[0]
+        x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+        ws = jax.ShapeDtypeStruct((7, 256, 256), jnp.float32)
+        compiled = jax.jit(f).lower(x, ws).compile()
+        a = analyze_hlo(compiled.as_text(), 1)
+        assert a["flops"] == pytest.approx(7 * 2 * 256 ** 3, rel=0.02)
+
+    def test_f32_share_tracked(self):
+        def f(x):
+            return x @ x
+        x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+        compiled = jax.jit(f).lower(x).compile()
+        a = analyze_hlo(compiled.as_text(), 1)
+        # no collectives on one device
+        assert a["collectives"]["n_ops"] == 0
+        assert a["collectives"]["total_wire_bytes"] == 0
+
+
+class TestRsPricing:
+    """Synthetic HLO text: AR consumed only by a slice-sized fusion is
+    priced as reduce-scatter (the TPU ReduceScatterCreator pattern)."""
+
+    HLO_RS = """
+HloModule test
+
+ENTRY %main (p0: f32[16,1024]) -> f32[16,64] {
+  %p0 = f32[16,1024]{1,0} parameter(0)
+  %all-reduce.1 = f32[16,1024]{1,0} all-reduce(%p0), replica_groups=[1,16]<=[16], to_apply=%add
+  ROOT %fusion.1 = f32[16,64]{1,0} fusion(%all-reduce.1), kind=kLoop, calls=%fused
+}
+"""
+
+    HLO_AR = """
+HloModule test
+
+ENTRY %main (p0: f32[16,1024]) -> f32[16,1024] {
+  %p0 = f32[16,1024]{1,0} parameter(0)
+  %all-reduce.1 = f32[16,1024]{1,0} all-reduce(%p0), replica_groups=[1,16]<=[16], to_apply=%add
+  ROOT %neg.1 = f32[16,1024]{1,0} negate(%all-reduce.1)
+}
+"""
+
+    def test_sliced_consumer_priced_as_rs(self):
+        a = analyze_hlo(self.HLO_RS, 16)
+        assert "all-reduce(->rs)" in a["collectives"]["by_op"]
+        bytes_full = 16 * 1024 * 4
+        expect = bytes_full * 15 / 16            # RS, f32 halving applies
+        got = a["collectives"]["by_op"]["all-reduce(->rs)"]["wire_bytes"]
+        assert got == pytest.approx(expect, rel=1e-6)
+
+    def test_full_consumer_stays_ar(self):
+        a = analyze_hlo(self.HLO_AR, 16)
+        assert "all-reduce" in a["collectives"]["by_op"]
+        bytes_full = 16 * 1024 * 4
+        expect = 2 * bytes_full * 15 / 16
+        got = a["collectives"]["by_op"]["all-reduce"]["wire_bytes"]
+        assert got == pytest.approx(expect, rel=1e-6)
+
+    def test_f32_correction_halves_total(self):
+        a = analyze_hlo(self.HLO_AR, 16)
+        raw = a["collectives"]["raw_wire_bytes_cpu_f32"]
+        corr = a["collectives"]["total_wire_bytes"]
+        assert corr == pytest.approx(raw / 2, rel=1e-6)

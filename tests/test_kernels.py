@@ -1,0 +1,199 @@
+"""Per-kernel shape/dtype sweeps: every Pallas variant (interpret=True)
+allclose against the ref.py jnp oracle — the paper's Table V kernels plus
+the framework hot-spots."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels import ref
+
+KEY = jax.random.PRNGKey(42)
+
+
+def keys(n):
+    return jax.random.split(KEY, n)
+
+
+# ---------------------------------------------------------------------------
+# GEMM (Table V row 1)
+# ---------------------------------------------------------------------------
+
+
+GEMM_SHAPES = [(128, 128, 128), (256, 512, 128), (384, 128, 640),
+               (100, 130, 50), (1, 128, 257), (512, 512, 512)]
+
+
+class TestGemm:
+    @pytest.mark.parametrize("m,k,n", GEMM_SHAPES)
+    @pytest.mark.parametrize("mode", ["abstract", "native", "library"])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_oracle(self, m, k, n, mode, dtype):
+        ka, kb = keys(2)
+        a = jax.random.normal(ka, (m, k), dtype)
+        b = jax.random.normal(kb, (k, n), dtype)
+        got = ops.matmul(a, b, mode=mode)
+        want = ref.gemm(a, b)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+        np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+    def test_abstract_blocks_ignore_mxu_query(self):
+        from repro.kernels.gemm import abstract_block_shape, native_block_shape
+        ab = abstract_block_shape()
+        nb = native_block_shape()
+        assert ab[0] == ab[1] == ab[2]       # square, budget-derived
+        assert nb[0] % 128 == 0 and nb[2] % 128 == 0
+
+    def test_structural_cost_reports_traffic(self):
+        from repro.kernels.gemm import structural_cost
+        c_abs = structural_cost(4096, 4096, 4096, "abstract")
+        c_nat = structural_cost(4096, 4096, 4096, "native")
+        assert c_nat["mxu_aligned"]
+        assert c_abs["flops"] == c_nat["flops"] == 2 * 4096 ** 3
+
+
+# ---------------------------------------------------------------------------
+# Reduction (Table V row 2 — the shuffle-insight kernel)
+# ---------------------------------------------------------------------------
+
+
+class TestReduction:
+    @pytest.mark.parametrize("n", [128, 4096, 65536, 1 << 18, 999, 70001])
+    @pytest.mark.parametrize(
+        "mode", ["abstract", "abstract+shuffle", "native", "library"])
+    def test_matches_oracle(self, n, mode):
+        x = jax.random.normal(KEY, (n,), jnp.float32)
+        got = ops.reduce_sum(x, mode=mode)
+        want = ref.reduce_sum(x)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+    @pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.int32])
+    def test_dtype_sweep(self, dtype):
+        if dtype == jnp.int32:
+            x = jax.random.randint(KEY, (10000,), -5, 5, dtype)
+        else:
+            x = jax.random.normal(KEY, (10000,), dtype)
+        got = ops.reduce_sum(x, mode="abstract+shuffle")
+        np.testing.assert_allclose(got, ref.reduce_sum(x), rtol=1e-3,
+                                   atol=1e-2)
+
+    def test_shuffle_eliminates_scratch_roundtrips(self):
+        """§VII.C mechanism: abstract pays log2(W) scratchpad round-trips;
+        shuffle pays zero."""
+        from repro.kernels.reduction import structural_cost
+        c_abs = structural_cost(1 << 24, "abstract")
+        c_shf = structural_cost(1 << 24, "abstract+shuffle")
+        assert c_abs["scratch_round_trips_per_block"] == 7   # log2(128)
+        assert c_shf["scratch_round_trips_per_block"] == 0
+        assert c_shf["lane_shuffles_per_block"] == 7
+        assert c_abs["scratch_bytes_total"] > 0
+        assert c_shf["scratch_bytes_total"] == 0
+        # identical HBM traffic: the *only* delta is the scratch traffic
+        assert c_abs["hbm_bytes"] == c_shf["hbm_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# Histogram (Table V row 3 — atomics divergence)
+# ---------------------------------------------------------------------------
+
+
+class TestHistogram:
+    @pytest.mark.parametrize("n", [4096, 50000, 1 << 17])
+    @pytest.mark.parametrize("bins", [128, 256])
+    @pytest.mark.parametrize("mode", ["abstract", "native", "library"])
+    def test_matches_oracle(self, n, bins, mode):
+        v = jax.random.randint(KEY, (n,), 0, bins, jnp.int32)
+        got = ops.histogram(v, bins, mode=mode)
+        want = ref.histogram(v, bins)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_out_of_range_clipped(self):
+        v = jnp.array([-5, 0, 255, 300], jnp.int32)
+        got = ops.histogram(v, 256, mode="abstract")
+        want = ref.histogram(v, 256)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_counts_sum_to_n(self):
+        n = 33333
+        v = jax.random.randint(KEY, (n,), 0, 256, jnp.int32)
+        for mode in ("abstract", "native"):
+            assert int(jnp.sum(ops.histogram(v, 256, mode=mode))) == n
+
+    def test_native_privatizes_through_mxu(self):
+        from repro.kernels.histogram import structural_cost
+        c_nat = structural_cost(1 << 24, 256, "native")
+        c_abs = structural_cost(1 << 24, 256, "abstract")
+        assert c_nat["private_histograms_per_block"] > 1
+        assert c_abs["private_histograms_per_block"] == 1
+        assert c_nat["mxu_routed"] and not c_abs["mxu_routed"]
+        assert c_nat["atomic_free"] and c_abs["atomic_free"]
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+
+ATTN_SHAPES = [
+    # (b, h, hkv, sq, skv, d, causal)
+    (1, 4, 4, 128, 128, 64, True),
+    (2, 8, 2, 256, 256, 64, True),       # GQA
+    (1, 4, 1, 128, 384, 128, True),      # MQA + cache offset
+    (1, 2, 2, 200, 200, 64, True),       # ragged
+    (2, 4, 4, 128, 128, 64, False),
+]
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,h,hkv,sq,skv,d,causal", ATTN_SHAPES)
+    @pytest.mark.parametrize("mode", ["abstract", "native"])
+    def test_matches_oracle(self, b, h, hkv, sq, skv, d, causal, mode):
+        kq, kk, kv = keys(3)
+        q = jax.random.normal(kq, (b, h, sq, d), jnp.float32)
+        k = jax.random.normal(kk, (b, hkv, skv, d), jnp.float32)
+        v = jax.random.normal(kv, (b, hkv, skv, d), jnp.float32)
+        got = ops.flash_attention(q, k, v, causal=causal, mode=mode,
+                                  block_q=128, block_kv=128)
+        want = ref.attention(q, k, v, causal=causal)
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+    def test_bf16(self):
+        kq, kk, kv = keys(3)
+        q = jax.random.normal(kq, (1, 4, 128, 64), jnp.bfloat16)
+        k = jax.random.normal(kk, (1, 4, 128, 64), jnp.bfloat16)
+        v = jax.random.normal(kv, (1, 4, 128, 64), jnp.bfloat16)
+        got = ops.flash_attention(q, k, v, mode="native")
+        want = ref.attention(q, k, v)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=5e-2, atol=5e-2)
+
+    def test_block_skip_saves_half_the_blocks(self):
+        from repro.kernels.attention import structural_cost
+        c_nat = structural_cost(1, 8, 4096, 4096, 128, True, "native")
+        c_abs = structural_cost(1, 8, 4096, 4096, 128, True, "abstract")
+        assert c_abs["skip_fraction"] == 0.0
+        assert 0.35 < c_nat["skip_fraction"] < 0.5   # ~upper triangle
+        assert c_nat["flops"] < c_abs["flops"]
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm (fused-epilogue example)
+# ---------------------------------------------------------------------------
+
+
+class TestRmsnorm:
+    @pytest.mark.parametrize("shape", [(4, 128), (2, 7, 256), (64, 512)])
+    @pytest.mark.parametrize("mode", ["abstract", "native", "library"])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_oracle(self, shape, mode, dtype):
+        kx, kw = keys(2)
+        x = jax.random.normal(kx, shape, dtype)
+        w = jax.random.normal(kw, (shape[-1],), dtype) + 1.0
+        got = ops.rmsnorm(x, w, mode=mode)
+        want = ref.rmsnorm(x, w)
+        tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=tol, atol=tol)

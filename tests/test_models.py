@@ -1,0 +1,292 @@
+"""Model-layer correctness: SSD vs naive recurrence, chunked attention vs
+dense oracle, MoE routing invariants, decode == prefill continuation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.models import build_model, common, mlp, ssd
+from repro.models.attention import chunked_attention, decode_attention, update_cache
+from repro.models.config import (HybridConfig, ModelConfig, MoEConfig,
+                                 ParallelConfig, SSMConfig)
+
+KEY = jax.random.PRNGKey(3)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention used by models
+# ---------------------------------------------------------------------------
+
+
+class TestChunkedAttention:
+    @pytest.mark.parametrize("sq,skv,h,hkv", [
+        (64, 64, 4, 4), (100, 100, 4, 2), (128, 256, 8, 2), (7, 7, 2, 1)])
+    @pytest.mark.parametrize("exact", [False, True])
+    def test_vs_dense_oracle(self, sq, skv, h, hkv, exact):
+        kq, kk, kv = jax.random.split(KEY, 3)
+        q = jax.random.normal(kq, (2, h, sq, 32), jnp.float32)
+        k = jax.random.normal(kk, (2, hkv, skv, 32), jnp.float32)
+        v = jax.random.normal(kv, (2, hkv, skv, 32), jnp.float32)
+        got = chunked_attention(q, k, v, causal=True, kv_offset=skv - sq,
+                                chunk_q=32, chunk_kv=64, exact_causal=exact)
+        want = ref.attention(q, k, v, causal=True)
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+    def test_non_causal(self):
+        kq, kk, kv = jax.random.split(KEY, 3)
+        q = jax.random.normal(kq, (1, 4, 50, 32), jnp.float32)
+        k = jax.random.normal(kk, (1, 4, 80, 32), jnp.float32)
+        v = jax.random.normal(kv, (1, 4, 80, 32), jnp.float32)
+        got = chunked_attention(q, k, v, causal=False, chunk_q=16,
+                                chunk_kv=32)
+        want = ref.attention(q, k, v, causal=False)
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+    def test_decode_matches_last_row_of_prefill(self):
+        kq, kk, kv = jax.random.split(KEY, 3)
+        s = 33
+        q = jax.random.normal(kq, (2, 4, s, 16), jnp.float32)
+        k = jax.random.normal(kk, (2, 2, s, 16), jnp.float32)
+        v = jax.random.normal(kv, (2, 2, s, 16), jnp.float32)
+        full = ref.attention(q, k, v, causal=True)
+        # decode the last position against a padded cache
+        cache_len = 64
+        kc = jnp.pad(k, ((0, 0), (0, 0), (0, cache_len - s), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, 0), (0, cache_len - s), (0, 0)))
+        pos = jnp.full((2,), s - 1, jnp.int32)
+        got = decode_attention(q[:, :, -1:, :] * (16 ** -0.5) / (16 ** -0.5),
+                               kc, vc, pos)
+        np.testing.assert_allclose(got[:, :, 0], full[:, :, -1],
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_update_cache_writes_one_slot(self):
+        cache = jnp.zeros((2, 2, 8, 4))
+        new = jnp.ones((2, 2, 1, 4))
+        pos = jnp.array([3, 5], jnp.int32)
+        out = update_cache(cache, new, pos)
+        assert float(out[0, :, 3].sum()) == 8.0
+        assert float(out[1, :, 5].sum()) == 8.0
+        assert float(out.sum()) == 16.0
+
+
+# ---------------------------------------------------------------------------
+# SSD (mamba2): chunked scan vs naive recurrence
+# ---------------------------------------------------------------------------
+
+
+def naive_ssd(x, dt, A, B_mat, C_mat):
+    """Direct recurrence oracle: h <- exp(dt·A)·h + dt·(B ⊗ x); y = C·h."""
+    b, l, h, p = x.shape
+    g, n = B_mat.shape[2], B_mat.shape[3]
+    hg = h // g
+    xf = x.astype(jnp.float32).reshape(b, l, g, hg, p)
+    dtf = dt.astype(jnp.float32).reshape(b, l, g, hg)
+    state = jnp.zeros((b, g, hg, n, p), jnp.float32)
+    ys = []
+    for t in range(l):
+        da = jnp.exp(dtf[:, t] * A.reshape(g, hg))
+        upd = jnp.einsum("bgn,bgh,bghp->bghnp", B_mat[:, t].astype(jnp.float32),
+                         dtf[:, t], xf[:, t])
+        state = da[..., None, None] * state + upd
+        ys.append(jnp.einsum("bgn,bghnp->bghp",
+                             C_mat[:, t].astype(jnp.float32), state))
+    y = jnp.stack(ys, axis=1).reshape(b, l, h, p)
+    return y, state
+
+
+class TestSSD:
+    @pytest.mark.parametrize("l,chunk", [(16, 4), (32, 8), (17, 8), (8, 16)])
+    def test_chunked_scan_matches_recurrence(self, l, chunk):
+        b, h, p, g, n = 2, 4, 8, 2, 6
+        ks = jax.random.split(KEY, 4)
+        x = jax.random.normal(ks[0], (b, l, h, p), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h))) * 0.5
+        A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+        B_mat = jax.random.normal(ks[3], (b, l, g, n), jnp.float32) * 0.5
+        C_mat = jax.random.normal(ks[0], (b, l, g, n), jnp.float32) * 0.5
+        y, state = ssd.ssd_scan(x, dt, A, B_mat, C_mat, chunk)
+        y_ref, state_ref = naive_ssd(x, dt, A, B_mat, C_mat)
+        np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(state, state_ref, rtol=1e-4, atol=1e-4)
+
+    def test_decode_continues_scan_state(self):
+        """prefill state + decode steps == longer scan."""
+        b, l, h, p, g, n = 1, 12, 2, 4, 1, 4
+        extra = 3
+        ks = jax.random.split(KEY, 5)
+        lt = l + extra
+        x = jax.random.normal(ks[0], (b, lt, h, p), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, lt, h))) * 0.5
+        A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+        B_mat = jax.random.normal(ks[3], (b, lt, g, n)) * 0.5
+        C_mat = jax.random.normal(ks[4], (b, lt, g, n)) * 0.5
+        y_full, state_full = ssd.ssd_scan(x, dt, A, B_mat, C_mat, 4)
+        _, state = ssd.ssd_scan(x[:, :l], dt[:, :l], A, B_mat[:, :l],
+                                C_mat[:, :l], 4)
+        ys = []
+        for t in range(l, lt):
+            state, y_t = ssd.ssd_decode_step(
+                state, x[:, t], dt[:, t], A, B_mat[:, t], C_mat[:, t])
+            ys.append(y_t)
+        np.testing.assert_allclose(state, state_full, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(jnp.stack(ys, 1), y_full[:, l:],
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_initial_state_threading(self):
+        """scan(x1) then scan(x2, init=state1) == scan(x1 ++ x2)."""
+        b, l, h, p, g, n = 1, 16, 2, 4, 1, 4
+        ks = jax.random.split(KEY, 5)
+        x = jax.random.normal(ks[0], (b, l, h, p), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h))) * 0.5
+        A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+        B_mat = jax.random.normal(ks[3], (b, l, g, n)) * 0.5
+        C_mat = jax.random.normal(ks[4], (b, l, g, n)) * 0.5
+        y_full, s_full = ssd.ssd_scan(x, dt, A, B_mat, C_mat, 4)
+        half = l // 2
+        y1, s1 = ssd.ssd_scan(x[:, :half], dt[:, :half], A, B_mat[:, :half],
+                              C_mat[:, :half], 4)
+        y2, s2 = ssd.ssd_scan(x[:, half:], dt[:, half:], A, B_mat[:, half:],
+                              C_mat[:, half:], 4, initial_state=s1)
+        np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full,
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(s2, s_full, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# MoE routing invariants
+# ---------------------------------------------------------------------------
+
+
+class TestMoE:
+    def _route(self, g=2, s=64, e=8, k=2, cf=1.25):
+        moe = MoEConfig(num_experts=e, top_k=k, capacity_factor=cf,
+                        group_size=s)
+        logits = jax.random.normal(KEY, (g, s, e), jnp.float32)
+        return mlp.route(logits, moe), moe
+
+    def test_dispatch_is_binary_and_capacity_bounded(self):
+        (dispatch, combine, aux), moe = self._route()
+        d = np.asarray(dispatch)
+        assert set(np.unique(d)) <= {0.0, 1.0}
+        # each expert's capacity slot holds at most one token
+        assert (d.sum(axis=1) <= 1.0 + 1e-6).all()
+
+    def test_each_token_routed_at_most_topk(self):
+        (dispatch, _, _), moe = self._route()
+        per_token = np.asarray(dispatch).sum(axis=(2, 3))
+        assert (per_token <= moe.top_k + 1e-6).all()
+
+    def test_combine_weights_bounded_by_one(self):
+        (_, combine, _), _ = self._route()
+        c = np.asarray(combine).sum(axis=(2, 3))
+        assert (c <= 1.0 + 1e-5).all()
+
+    def test_zero_capacity_pressure_drops_nothing(self):
+        """With capacity ≥ tokens·topk/experts · big factor, every token
+        keeps all top-k slots."""
+        (dispatch, _, _), moe = self._route(cf=8.0)
+        per_token = np.asarray(dispatch).sum(axis=(2, 3))
+        np.testing.assert_allclose(per_token, moe.top_k)
+
+    @given(k=st.integers(1, 4), e=st.sampled_from([8, 16]))
+    @settings(max_examples=10, deadline=None)
+    def test_routing_properties(self, k, e):
+        (dispatch, combine, aux), moe = self._route(e=e, k=k, cf=2.0)
+        assert float(aux) > 0.0
+        d = np.asarray(dispatch)
+        assert (d.sum(axis=(2, 3)) <= k + 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# Decode == prefill-continuation, per family
+# ---------------------------------------------------------------------------
+
+
+def _tiny(family):
+    if family == "dense":
+        return ModelConfig(name="t", family="dense", num_layers=2,
+                           d_model=64, num_heads=4, num_kv_heads=2,
+                           d_ff=128, vocab_size=128, dtype="float32")
+    if family == "moe":
+        return ModelConfig(name="t", family="moe", num_layers=2,
+                           d_model=64, num_heads=4, num_kv_heads=2,
+                           d_ff=64, vocab_size=128, dtype="float32",
+                           moe=MoEConfig(num_experts=4, top_k=2,
+                                         group_size=16,
+                                         capacity_factor=8.0))
+    if family == "ssm":
+        return ModelConfig(name="t", family="ssm", num_layers=2,
+                           d_model=64, num_heads=0, num_kv_heads=0, d_ff=0,
+                           vocab_size=128, dtype="float32",
+                           ssm=SSMConfig(state_dim=16, head_dim=16,
+                                         chunk_size=8), subquadratic=True)
+    if family == "hybrid":
+        return ModelConfig(name="t", family="hybrid", num_layers=4,
+                           d_model=64, num_heads=4, num_kv_heads=4,
+                           d_ff=128, vocab_size=128, dtype="float32",
+                           ssm=SSMConfig(state_dim=16, head_dim=16,
+                                         chunk_size=8),
+                           hybrid=HybridConfig(attn_every=2),
+                           subquadratic=True)
+    raise ValueError(family)
+
+
+@pytest.mark.parametrize("family", ["dense", "moe", "ssm", "hybrid"])
+def test_decode_matches_prefill_continuation(family):
+    """prefill(t0..t8) then decode(t9) == prefill(t0..t9) logits."""
+    cfg = _tiny(family)
+    model = build_model(cfg, ParallelConfig(remat="none"))
+    params = model.init_params(jax.random.PRNGKey(0))
+    toks = jax.random.randint(KEY, (2, 10), 0, cfg.vocab_size, jnp.int32)
+
+    logits_full, _ = model.prefill(params, {"tokens": toks})
+
+    logits_pre, cache = model.prefill(params, {"tokens": toks[:, :-1]})
+    if family in ("dense", "moe"):
+        # grow the cache to hold the extra token
+        def grow(x):
+            if x.ndim >= 4:    # [L,B,Hkv,S,hd]
+                pad = [(0, 0)] * x.ndim
+                pad[3] = (0, 4)
+                return jnp.pad(x, pad)
+            return x
+        cache = {"k": grow(cache["k"]), "v": grow(cache["v"]),
+                 "pos": cache["pos"]}
+    elif family == "hybrid":
+        def grow_kv(x):
+            pad = [(0, 0)] * x.ndim
+            pad[3] = (0, 4)
+            return jnp.pad(x, pad)
+        cache = dict(cache, attn_k=grow_kv(cache["attn_k"]),
+                     attn_v=grow_kv(cache["attn_v"]))
+    logits_dec, _ = model.decode_step(params, toks[:, -1], cache)
+    np.testing.assert_allclose(logits_dec, logits_full, rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_encdec_decode_matches_prefill_continuation():
+    from repro.models.config import EncDecConfig
+    cfg = ModelConfig(name="t", family="encdec", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=4, d_ff=128,
+                      vocab_size=128, dtype="float32", norm="layernorm",
+                      act="gelu", max_seq_len=32,
+                      encdec=EncDecConfig(encoder_layers=2, num_frames=8))
+    model = build_model(cfg, ParallelConfig(remat="none"))
+    params = model.init_params(jax.random.PRNGKey(0))
+    toks = jax.random.randint(KEY, (2, 10), 0, 128, jnp.int32)
+    frames = jax.random.normal(KEY, (2, 8, 64), jnp.float32)
+
+    logits_full, _ = model.prefill(params, {"tokens": toks,
+                                            "frames": frames})
+    logits_pre, cache = model.prefill(params, {"tokens": toks[:, :-1],
+                                               "frames": frames})
+    def grow(x):
+        pad = [(0, 0)] * x.ndim
+        pad[3] = (0, 4)
+        return jnp.pad(x, pad)
+    cache = dict(cache, k=grow(cache["k"]), v=grow(cache["v"]))
+    logits_dec, _ = model.decode_step(params, toks[:, -1], cache)
+    np.testing.assert_allclose(logits_dec, logits_full, rtol=2e-3,
+                               atol=2e-3)

@@ -1,0 +1,160 @@
+"""Correctness of the §Perf levers: every optimization must preserve
+model semantics (tested here) before its roofline effect counts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import build_model
+from repro.models.attention import (dequantize_kv, quantize_kv,
+                                    update_cache_int8)
+from repro.models.config import ModelConfig, ParallelConfig
+from repro.parallel.sharding import sanitize_sharding
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="dense", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+class TestCausalFolding:
+    def test_loss_identical(self):
+        """causal_folding changes which blocks are *visited*, never the
+        math: losses must match to fp tolerance."""
+        cfg = _cfg()
+        toks = jax.random.randint(KEY, (2, 48), 0, 128, jnp.int32)
+        batch = {"tokens": toks, "labels": toks}
+        m0 = build_model(cfg, ParallelConfig(remat="none",
+                                             causal_folding=False,
+                                             attn_chunk_q=16,
+                                             attn_chunk_kv=16))
+        m1 = build_model(cfg, ParallelConfig(remat="none",
+                                             causal_folding=True,
+                                             attn_chunk_q=16,
+                                             attn_chunk_kv=16))
+        p = m0.init_params(KEY)
+        l0, _ = m0.loss_fn(p, batch)
+        l1, _ = m1.loss_fn(p, batch)
+        np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5)
+
+
+class TestPallasAttnPath:
+    def test_model_loss_matches_jnp_path(self):
+        """The framework's Pallas flash kernel (interpret mode on CPU)
+        is numerically interchangeable with the jnp chunked path inside
+        the full model."""
+        cfg = _cfg()
+        toks = jax.random.randint(KEY, (1, 32), 0, 128, jnp.int32)
+        batch = {"tokens": toks, "labels": toks}
+        m_jnp = build_model(cfg, ParallelConfig(remat="none"))
+        m_pal = build_model(cfg, ParallelConfig(remat="none",
+                                                use_pallas_attn=True))
+        p = m_jnp.init_params(KEY)
+        l0, _ = m_jnp.loss_fn(p, batch)
+        l1, _ = m_pal.loss_fn(p, batch)
+        np.testing.assert_allclose(float(l0), float(l1), rtol=1e-4)
+
+
+class TestKvConstraintLever:
+    def test_loss_identical(self):
+        cfg = _cfg()
+        toks = jax.random.randint(KEY, (2, 32), 0, 128, jnp.int32)
+        batch = {"tokens": toks, "labels": toks}
+        m0 = build_model(cfg, ParallelConfig(remat="none"))
+        m1 = build_model(cfg, ParallelConfig(remat="none",
+                                             constrain_kv_pre_repeat=False,
+                                             rs_outputs=True))
+        p = m0.init_params(KEY)
+        np.testing.assert_allclose(float(m0.loss_fn(p, batch)[0]),
+                                   float(m1.loss_fn(p, batch)[0]),
+                                   rtol=1e-6)
+
+
+class TestInt8KvCache:
+    def test_quantize_roundtrip_error(self):
+        x = jax.random.normal(KEY, (2, 4, 16, 32)) * 3.0
+        q, s = quantize_kv(x)
+        deq = dequantize_kv(q, s, jnp.float32)
+        err = jnp.max(jnp.abs(deq - x))
+        assert float(err) <= float(jnp.max(s)) * 0.5 + 1e-6
+
+    def test_scale_per_token(self):
+        x = jnp.ones((1, 1, 4, 8)).at[0, 0, 2].mul(100.0)
+        q, s = quantize_kv(x)
+        assert s.shape == (1, 1, 4, 1)
+        assert float(s[0, 0, 2, 0]) > float(s[0, 0, 0, 0]) * 50
+
+    def test_update_writes_one_slot(self):
+        cq = jnp.zeros((2, 2, 8, 4), jnp.int8)
+        cs = jnp.full((2, 2, 8, 1), 1e-8, jnp.float32)
+        new = jnp.ones((2, 2, 1, 4)) * 2.0
+        pos = jnp.array([1, 6], jnp.int32)
+        cq2, cs2 = update_cache_int8(cq, cs, new, pos)
+        assert int(cq2[0, 0, 1, 0]) == 127
+        assert int(cq2[0, 0, 0, 0]) == 0
+        np.testing.assert_allclose(float(cs2[1, 0, 6, 0]), 2.0 / 127,
+                                   rtol=1e-5)
+
+    def test_decode_matches_bf16_cache(self):
+        cfg = _cfg()
+        toks = jax.random.randint(KEY, (2, 12), 0, 128, jnp.int32)
+        m_bf = build_model(cfg, ParallelConfig(remat="none"))
+        m_q8 = build_model(cfg, ParallelConfig(remat="none",
+                                               kv_cache_int8=True))
+        p = m_bf.init_params(KEY)
+        _, c_b = m_bf.prefill(p, {"tokens": toks[:, :-1]})
+        _, c_q = m_q8.prefill(p, {"tokens": toks[:, :-1]})
+
+        def grow(x):
+            pad = [(0, 0)] * x.ndim
+            pad[3] = (0, 4)
+            return jnp.pad(x, pad)
+        c_b = {"k": grow(c_b["k"]), "v": grow(c_b["v"]), "pos": c_b["pos"]}
+        c_q = {"k": grow(c_q["k"]), "k_scale": grow(c_q["k_scale"]),
+               "v": grow(c_q["v"]), "v_scale": grow(c_q["v_scale"]),
+               "pos": c_q["pos"]}
+        l_b, _ = m_bf.decode_step(p, toks[:, -1], c_b)
+        l_q, nc = m_q8.decode_step(p, toks[:, -1], c_q)
+        cos = float(jnp.sum(l_b * l_q)
+                    / (jnp.linalg.norm(l_b) * jnp.linalg.norm(l_q)))
+        assert cos > 0.999, cos
+        assert nc["k"].dtype == jnp.int8
+
+    def test_cache_specs_cover_int8_leaves(self):
+        cfg = _cfg()
+        m = build_model(cfg, ParallelConfig(kv_cache_int8=True))
+        cache = jax.eval_shape(lambda: m.init_cache(2, 16))
+        specs = m.cache_specs()
+        assert set(cache.keys()) == set(specs.keys())
+
+
+class TestSanitizeSharding:
+    def _mesh(self):
+        from repro.launch.mesh import make_mesh
+        return make_mesh((1, 1), ("data", "model"))
+
+    def test_drops_non_dividing_axis(self):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        mesh = self._mesh()
+        sh = NamedSharding(mesh, P("model", None))
+        sds = jax.ShapeDtypeStruct((40, 8), jnp.float32)
+        # model axis size 1 divides everything on a 1x1 mesh: kept
+        out = sanitize_sharding(sh, sds)
+        assert out.spec[0] == "model"
+
+    def test_tuple_prefix_kept(self):
+        import numpy as np_
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        # synthetic mesh sizes via devices reshape not possible on 1 CPU;
+        # emulate with the (1,1) mesh — exact divisibility logic is
+        # exercised in the dry-run (512-device subprocess test)
+        mesh = self._mesh()
+        sh = NamedSharding(mesh, P(("data", "model"),))
+        sds = jax.ShapeDtypeStruct((7,), jnp.float32)
+        out = sanitize_sharding(sh, sds)
+        assert out is not None
