@@ -1,0 +1,161 @@
+"""Kernel × ISA-mode benchmark matrix -> BENCH_kernels.json.
+
+Times every Pallas kernel under every primitive budget it supports
+(abstract / abstract+shuffle / native / library) and pairs each wall-clock
+with the kernel's *modeled* scratch traffic from ``structural_cost`` — so
+the output shows both the outcome (time) and the §VII.C mechanism
+(scratchpad round-trips the shuffle budget eliminates).  This file seeds
+the repo's performance trajectory: re-run it after kernel changes and
+diff the JSON.
+
+  PYTHONPATH=src python benchmarks/bench_kernels.py            # full
+  PYTHONPATH=src python benchmarks/bench_kernels.py --quick    # CI smoke
+  PYTHONPATH=src python benchmarks/bench_kernels.py --out path.json
+
+Off-TPU the kernels run in Pallas interpret mode (see
+``repro.kernels.ops.default_interpret``): absolute times are then
+emulation times and only the *structure* columns are hardware-meaningful;
+on a real TPU backend the same harness times compiled Mosaic kernels.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+
+import jax
+import jax.numpy as jnp
+
+try:  # `python -m benchmarks.bench_kernels` (repo root on sys.path)
+    from benchmarks.common import fmt_table, time_fn
+except ModuleNotFoundError:  # `python benchmarks/bench_kernels.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.common import fmt_table, time_fn
+from repro.kernels import ops
+
+KEY = jax.random.PRNGKey(0)
+
+#: modes per kernel (gemm's cross-lane stage is the MXU contraction
+#: itself, so shuffle does not participate — see ops.matmul)
+FULL_MODES = ("abstract", "abstract+shuffle", "native", "library")
+GEMM_MODES = ("abstract", "native", "library")
+
+
+def _cases(quick: bool):
+    """(kernel, modes, make_args, run, cost) table for both sizings."""
+    ks = jax.random.split(KEY, 8)
+    if quick:
+        n_red, rows_rms, d_rms = 1 << 15, 64, 256
+        n_hist, bins = 1 << 14, 256
+        b, h, s, hd, blk = 1, 2, 256, 64, 128
+        m = k = n = 256
+        warmup, iters = 1, 3
+    else:
+        n_red, rows_rms, d_rms = 1 << 21, 1024, 1024
+        n_hist, bins = 1 << 18, 256
+        b, h, s, hd, blk = 1, 4, 1024, 64, 256
+        m = k = n = 1024
+        warmup, iters = 2, 5
+
+    x_red = jax.random.normal(ks[0], (n_red,), jnp.float32)
+    x_rms = jax.random.normal(ks[1], (rows_rms, d_rms), jnp.float32)
+    w_rms = jax.random.normal(ks[2], (d_rms,), jnp.float32) + 1.0
+    v_hist = jax.random.randint(ks[3], (n_hist,), 0, bins, jnp.int32)
+    q = jax.random.normal(ks[4], (b, h, s, hd), jnp.float32)
+    kk = jax.random.normal(ks[5], (b, h, s, hd), jnp.float32)
+    vv = jax.random.normal(ks[6], (b, h, s, hd), jnp.float32)
+    a_g = jax.random.normal(ks[7], (m, k), jnp.float32)
+    b_g = jax.random.normal(ks[0], (k, n), jnp.float32)
+
+    from repro.kernels import (attention as _attn, gemm as _gemm,
+                               histogram as _hist, reduction as _red,
+                               rmsnorm as _rms)
+    cases = [
+        ("reduction", FULL_MODES,
+         lambda mode: ops.reduce_sum(x_red, mode=mode),
+         lambda mode: _red.structural_cost(n_red, mode)),
+        ("rmsnorm", FULL_MODES,
+         lambda mode: ops.rmsnorm(x_rms, w_rms, mode=mode),
+         lambda mode: _rms.structural_cost(rows_rms, d_rms, mode)),
+        ("histogram", FULL_MODES,
+         lambda mode: ops.histogram(v_hist, bins, mode=mode),
+         lambda mode: _hist.structural_cost(n_hist, bins, mode)),
+        ("flash_attention", FULL_MODES,
+         lambda mode: ops.flash_attention(q, kk, vv, causal=True,
+                                          mode=mode, block_q=blk,
+                                          block_kv=blk),
+         lambda mode: _attn.structural_cost(b, h, s, s, hd, True, mode,
+                                            block_q=blk, block_kv=blk)),
+        ("gemm", GEMM_MODES,
+         lambda mode: ops.matmul(a_g, b_g, mode=mode),
+         lambda mode: _gemm.structural_cost(m, n, k, mode)),
+    ]
+    return cases, warmup, iters
+
+
+def run(quick: bool = False, out: str = "BENCH_kernels.json") -> dict:
+    cases, warmup, iters = _cases(quick)
+    rows = []
+    for kernel, modes, fn, cost_fn in cases:
+        for mode in modes:
+            timing = time_fn(lambda mode=mode, fn=fn: fn(mode),
+                             warmup=warmup, iters=iters)
+            cost = cost_fn(mode)
+            rows.append({
+                "kernel": kernel,
+                "mode": mode,
+                "median_s": timing["median_s"],
+                "p25_s": timing["p25_s"],
+                "p75_s": timing["p75_s"],
+                "iters": timing["iters"],
+                # the §VII.C mechanism columns (0 where not modeled)
+                "scratch_bytes": cost.get("scratch_bytes_total", 0),
+                "scratch_round_trips": cost.get(
+                    "scratch_round_trips_per_block", 0),
+                "lane_shuffles": cost.get("lane_shuffles_per_block", 0),
+                "hbm_bytes": cost.get("hbm_bytes", 0),
+                "structural": cost,
+            })
+            print(f"[bench_kernels] {kernel:16s} {mode:17s} "
+                  f"{timing['median_s'] * 1e3:9.2f} ms   "
+                  f"scratch={cost.get('scratch_bytes_total', 0)}")
+
+    result = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "interpret": ops.default_interpret(),
+            "quick": quick,
+            "jax": jax.__version__,
+            "python": platform.python_version(),
+        },
+        "rows": rows,
+    }
+    with open(out, "w") as f:
+        json.dump(result, f, indent=1)
+
+    print()
+    print(fmt_table(
+        ["kernel", "mode", "median_ms", "scratch_bytes", "round_trips",
+         "shuffles"],
+        [[r["kernel"], r["mode"], f"{r['median_s'] * 1e3:.2f}",
+          r["scratch_bytes"], r["scratch_round_trips"],
+          r["lane_shuffles"]] for r in rows]))
+    print(f"\n[bench_kernels] wrote {out} "
+          f"({len(rows)} kernel×mode rows)")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small sizes + few iters (CI smoke)")
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    args = ap.parse_args()
+    run(quick=args.quick, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,8 @@
 - :mod:`repro.core.execution_model` — thread hierarchy, Eq. 1 occupancy.
 - :mod:`repro.core.memory_model` — scoped acquire/release (Fig. 2).
 - :mod:`repro.core.mapping` — Fig. 3 mapping reports.
+- :mod:`repro.core.shuffle` — primitive 11 as a first-class API (§VII.C).
+- :mod:`repro.core.pipeline` — shared multi-buffer staging plans (Eq. 1).
 """
 from repro.core.dialect import (Dialect, DIALECTS, TARGET, TPU_V5E,
                                 get_dialect, gpu_dialects, mxu_align, align_up)
@@ -19,6 +21,12 @@ from repro.core.execution_model import (LaunchGeometry, LaunchError,
                                         choose_block_bytes, grid_for)
 from repro.core.memory_model import (Scope, Ordering, fence, requires_fence,
                                      MANDATORY_HIERARCHY)
+from repro.core.shuffle import (lane_shuffle_down, lane_shuffle_up,
+                                lane_shuffle_xor, lane_tree_reduce,
+                                fold_rows, row_reduce_shuffle,
+                                scratch_tree_reduce, tree_stages,
+                                scratch_tree_bytes)
+from repro.core.pipeline import PipelinePlan, plan_row_pipeline, pad_rows
 
 __all__ = [
     "Dialect", "DIALECTS", "TARGET", "TPU_V5E", "get_dialect", "gpu_dialects",
@@ -27,5 +35,8 @@ __all__ = [
     "UNIVERSAL_PLUS_SHUFFLE", "SPECS", "Classification", "LaunchGeometry",
     "LaunchError", "validate_launch", "occupancy", "tpu_pipeline_occupancy",
     "choose_block_bytes", "grid_for", "Scope", "Ordering", "fence",
-    "requires_fence", "MANDATORY_HIERARCHY",
+    "requires_fence", "MANDATORY_HIERARCHY", "lane_shuffle_down",
+    "lane_shuffle_up", "lane_shuffle_xor", "lane_tree_reduce", "fold_rows",
+    "row_reduce_shuffle", "scratch_tree_reduce", "tree_stages",
+    "scratch_tree_bytes", "PipelinePlan", "plan_row_pipeline", "pad_rows",
 ]

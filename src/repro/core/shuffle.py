@@ -1,0 +1,202 @@
+"""Lane-shuffle primitive API — primitive 11 as a first-class layer.
+
+The paper's §VII.C finding promotes intra-wave shuffle from "nice native
+feature" to *mandatory eleventh primitive*: replacing it with
+barrier-mediated scratchpad round-trips costs up to 37.5% on
+latency-sensitive schedulers.  The seed exercised that insight in exactly
+one kernel (`reduction.py`) through a raw ``pltpu.roll`` call; this module
+makes the primitive available to *every* kernel under a stable API, so the
+``abstract+shuffle`` budget means the same thing everywhere:
+
+- :func:`lane_shuffle_down` / :func:`lane_shuffle_up` — rotate-style
+  exchange across the vreg minor dimension (the TPU "wave"), the
+  realization of ``__shfl_down_sync`` / ``simd_shuffle_down``.
+- :func:`lane_shuffle_xor` — butterfly exchange built from two rotates and
+  a lane-id select (``__shfl_xor_sync``).
+- :func:`lane_tree_reduce` — the log2(W) rotate tree: after the tree every
+  lane holds the full reduction (allreduce semantics), all in registers,
+  zero scratch traffic.
+- :func:`row_reduce_shuffle` — rowwise reduction of a ``(..., n*W)`` tile:
+  fold the row into W-lane vregs (register accumulation), then one rotate
+  tree.  This is the cross-lane hot loop used by rmsnorm / attention /
+  histogram in ``abstract+shuffle`` mode.
+- :func:`scratch_tree_reduce` — the *abstract* (shuffle-free) counterpart:
+  the same tree, but every halving stage stores to and reloads from a VMEM
+  scratch buffer with program order playing the workgroup barrier.  The
+  traffic it generates is exactly the §VII.C mechanism.
+
+Interpret safety: inside a Pallas kernel the rotate lowers to
+``pltpu.roll`` (Mosaic's intra-vreg lane rotation, also supported by the
+Pallas interpreter); outside a kernel trace — oracles, host-side tests,
+``library``-mode paths — the same API falls back to ``jnp.roll``, which is
+bit-identical for the rotate semantics.  Callers never branch on context.
+
+Cost accounting: :func:`tree_stages` / :func:`scratch_tree_bytes` are the
+shared vocabulary every kernel's ``structural_cost`` uses to report its
+scratch-traffic delta, so benchmarks compare like with like.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.dialect import TARGET
+
+#: wave width of the target dialect (queried, never assumed — Table III)
+LANES = TARGET.W
+
+Op = Callable[[jax.Array, jax.Array], jax.Array]
+
+
+def _rotate(x: jax.Array, shift: int, axis: int) -> jax.Array:
+    """Circular lane rotation with an interpret-safe fallback.
+
+    ``pltpu.roll`` only traces inside a Pallas kernel; everywhere else the
+    mathematically identical ``jnp.roll`` realizes the same exchange.
+    """
+    axis = axis % x.ndim
+    try:
+        return pltpu.roll(x, shift, axis)
+    except NotImplementedError:
+        # "Evaluation rule for 'roll' not implemented": outside a Pallas
+        # trace (oracle / host path).  Only this error falls back — a
+        # genuine lowering failure inside a kernel must propagate, or the
+        # shuffle budget would silently stop exercising primitive 11.
+        return jnp.roll(x, shift, axis=axis)
+
+
+def lane_shuffle_down(x: jax.Array, delta: int, axis: int = -1) -> jax.Array:
+    """Lane ``i`` receives the value of lane ``(i + delta) mod W``.
+
+    The rotate (wraparound) flavour of ``__shfl_down_sync``: on a reduce
+    tree the wrapped lanes are harmless because rotation is a bijection.
+    """
+    size = x.shape[axis]
+    return _rotate(x, (-delta) % size, axis)
+
+
+def lane_shuffle_up(x: jax.Array, delta: int, axis: int = -1) -> jax.Array:
+    """Lane ``i`` receives the value of lane ``(i - delta) mod W``."""
+    size = x.shape[axis]
+    return _rotate(x, delta % size, axis)
+
+
+def lane_shuffle_xor(x: jax.Array, mask: int, axis: int = -1) -> jax.Array:
+    """Butterfly exchange: lane ``i`` receives lane ``i ^ mask``.
+
+    Built from two rotates and a lane-id select: for a power-of-two mask,
+    lanes with the mask bit set fetch from ``i - mask`` and the rest from
+    ``i + mask`` — no wraparound ever crosses a butterfly group.
+    """
+    size = x.shape[axis]
+    if mask <= 0 or mask & (mask - 1) or mask >= size:
+        raise ValueError(f"mask must be a power of two < {size}, got {mask}")
+    axis = axis % x.ndim
+    shape = [1] * x.ndim
+    shape[axis] = size
+    lane = jax.lax.broadcasted_iota(jnp.int32, tuple(shape), axis)
+    up = lane_shuffle_up(x, mask, axis)        # from i - mask
+    down = lane_shuffle_down(x, mask, axis)    # from i + mask
+    return jnp.where((lane & mask) != 0, up, down)
+
+
+def lane_tree_reduce(x: jax.Array, op: Op = jnp.add,
+                     axis: int = -1) -> jax.Array:
+    """log2(W) rotate tree over ``axis``; every lane ends with the full
+    reduction (allreduce), entirely in registers — zero scratch traffic.
+
+    ``op`` must be associative and commutative (add / maximum / minimum).
+    """
+    size = x.shape[axis]
+    if size & (size - 1):
+        raise ValueError(f"tree reduce needs a power-of-two width, got {size}")
+    shift = size // 2
+    while shift >= 1:
+        x = op(x, lane_shuffle_down(x, shift, axis))
+        shift //= 2
+    return x
+
+
+def fold_rows(x: jax.Array, op: Op = jnp.add,
+              lanes: int = LANES) -> jax.Array:
+    """Fold the last axis of ``x`` (``(..., d)``, d a multiple of
+    ``lanes``) down to one ``(..., lanes)`` vreg by register accumulation.
+
+    The row is a sequence of ``d // lanes`` vregs; combining them is plain
+    register arithmetic (universal budget) — no lane crossing yet.  Both
+    the shuffle and the scratchpad cross-lane stages start from this fold.
+    """
+    d = x.shape[-1]
+    if d % lanes:
+        raise ValueError(f"row width {d} not a multiple of {lanes} lanes")
+    folded = x.reshape(x.shape[:-1] + (d // lanes, lanes))
+    acc = folded[..., 0, :]
+    for g in range(1, d // lanes):
+        acc = op(acc, folded[..., g, :])
+    return acc
+
+
+def row_reduce_shuffle(x: jax.Array, op: Op = jnp.add,
+                       lanes: int = LANES) -> jax.Array:
+    """Reduce the last axis of ``x`` (``(..., d)``, d a multiple of
+    ``lanes``) to ``(..., 1)`` via register folds + one rotate tree.
+
+    The final cross-lane stage is the shuffle tree (primitive 11).  No
+    scratchpad involved — this is the zero-round-trip hot path.
+    """
+    acc = lane_tree_reduce(fold_rows(x, op, lanes), op, axis=-1)
+    return acc[..., :1]
+
+
+def scratch_tree_reduce(x: jax.Array, scratch_ref, op: Op = jnp.add,
+                        axis: int = -1) -> jax.Array:
+    """The shuffle-free tree: halving stages through a scratchpad buffer.
+
+    ``scratch_ref`` must match ``x`` in shape; ``x`` is 2D.  Each stage
+    stores a partial to VMEM and reloads it — the barrier-mediated
+    round-trips whose cost the paper measured at 37.5%.  Returns the
+    reduced slice (``(rows, 1)`` for ``axis=-1``, ``(1, cols)`` for
+    ``axis=0``).
+    """
+    if x.ndim != 2:
+        raise ValueError(f"scratch tree reduce is 2D-only, got ndim={x.ndim}")
+    axis = axis % 2
+    width = x.shape[axis]
+    if width & (width - 1):
+        raise ValueError(f"tree reduce needs a power-of-two width, got {width}")
+    scratch_ref[...] = x
+    w = width // 2
+    while w >= 1:
+        if axis == 1:
+            lo = scratch_ref[:, :w]           # load | barrier (program order)
+            hi = scratch_ref[:, w:2 * w]      # load
+            scratch_ref[:, :w] = op(lo, hi)   # store partial
+        else:
+            lo = scratch_ref[:w, :]
+            hi = scratch_ref[w:2 * w, :]
+            scratch_ref[:w, :] = op(lo, hi)
+        w //= 2
+    return scratch_ref[:, :1] if axis == 1 else scratch_ref[:1, :]
+
+
+# ---------------------------------------------------------------------------
+# Cost vocabulary shared by every kernel's structural_cost
+# ---------------------------------------------------------------------------
+
+
+def tree_stages(width: int = LANES) -> int:
+    """Halving stages of a ``width``-wide tree (= shuffles, or round-trips)."""
+    if width & (width - 1):
+        raise ValueError(f"width must be a power of two, got {width}")
+    return int(math.log2(width))
+
+
+def scratch_tree_bytes(width: int, rows: int = 1, itemsize: int = 4) -> int:
+    """Scratch traffic of one :func:`scratch_tree_reduce`: stage ``k``
+    reads two ``width >> k`` slices and writes one, per row."""
+    return rows * sum(3 * (width >> k) * itemsize
+                      for k in range(1, tree_stages(width) + 1))

@@ -13,9 +13,13 @@ dominated.  Built entirely from UISA primitives + native features:
 - the two matmuls route through the queried MXU tile.
 
 Variants:
-- ``native``: block-skip + MXU-aligned blocks.
-- ``abstract``: same algorithm, no block-skip (mask-only, every block
-  visited), scratch-budget-derived square-ish blocks.
+- ``native``: block-skip + MXU-aligned blocks + target-native row reduce.
+- ``abstract+shuffle``: the online-softmax row-max/row-sum cross-lane
+  stages run through the in-register rotate tree (primitive 11,
+  ``row_reduce_shuffle``) — zero scratch round-trips.
+- ``abstract``: the same stages tree-reduce through *scratchpad
+  round-trips* (``scratch_tree_reduce``), no block-skip (mask-only,
+  every block visited).
 
 The jnp chunked oracle used by models for CPU dry-runs lives in
 models/layers.py; the dense oracle is kernels/ref.py:attention.
@@ -29,10 +33,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import (IsaMode, KernelContract, Primitive,
-                        validate_contract)
+from repro.core import (IsaMode, KernelContract, Primitive, TARGET,
+                        align_up, fold_rows, row_reduce_shuffle,
+                        scratch_tree_bytes, scratch_tree_reduce,
+                        tree_stages, validate_contract)
+from repro.core.pipeline import CompilerParams
 
 NEG_INF = -1e30  # finite sentinel: keeps exp() NaN-free on fully-masked rows
+LANES = TARGET.W
 
 ABSTRACT_CONTRACT = KernelContract(
     kernel="flash_attention", mode=IsaMode.ABSTRACT,
@@ -42,18 +50,49 @@ ABSTRACT_CONTRACT = KernelContract(
         Primitive.HIERARCHICAL_MEMORY, Primitive.IDENTITY_REGISTERS,
         Primitive.ASYNC_MEMORY, Primitive.REGISTER_OCCUPANCY,
     }))
+SHUFFLE_CONTRACT = KernelContract(
+    kernel="flash_attention", mode=IsaMode.ABSTRACT_SHUFFLE,
+    primitives=ABSTRACT_CONTRACT.primitives | {Primitive.LANE_SHUFFLE})
 NATIVE_CONTRACT = KernelContract(
     kernel="flash_attention", mode=IsaMode.NATIVE,
     primitives=frozenset(Primitive),
     native_features=frozenset({"mxu_aligned_tiles", "dimension_semantics",
                                "multi_buffering"}))
-validate_contract(ABSTRACT_CONTRACT)
-validate_contract(NATIVE_CONTRACT)
+for _c in (ABSTRACT_CONTRACT, SHUFFLE_CONTRACT, NATIVE_CONTRACT):
+    validate_contract(_c)
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                  scale: float, causal: bool, kv_offset: int,
-                  block_q: int, block_kv: int, n_kv: int, skip: bool):
+def _row_reduce(x, op, mode: str, scratch_ref):
+    """The cross-lane stage of online softmax, budget-selected.
+
+    x: (bq, bkv) -> (bq, 1).  Native spends the target's fused reduce;
+    shuffle spends primitive 11; abstract folds to one vreg then pays
+    log2(W) scratchpad round-trips (§VII.C).
+    """
+    if mode == "native":
+        return op.reduce(x)
+    if mode == "abstract+shuffle":
+        return row_reduce_shuffle(x, op.combine)
+    return scratch_tree_reduce(fold_rows(x, op.combine), scratch_ref,
+                               op.combine)
+
+
+class _Max:
+    combine = staticmethod(jnp.maximum)
+    reduce = staticmethod(
+        lambda x: jnp.max(x, axis=-1, keepdims=True))
+
+
+class _Sum:
+    combine = staticmethod(jnp.add)
+    reduce = staticmethod(
+        lambda x: jnp.sum(x, axis=-1, keepdims=True))
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  red_ref, *, scale: float, causal: bool, kv_offset: int,
+                  block_q: int, block_kv: int, n_kv: int, mode: str,
+                  skip: bool):
     qi, ki = pl.program_id(2), pl.program_id(3)
 
     @pl.when(ki == 0)
@@ -77,10 +116,10 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
             s = jnp.where(cols <= rows, s, NEG_INF)
 
         m_prev = m_ref[...]                               # (bq, 1)
-        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        m_cur = jnp.maximum(m_prev, _row_reduce(s, _Max, mode, red_ref))
         corr = jnp.exp(m_prev - m_cur)
         p = jnp.exp(s - m_cur)
-        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        l_ref[...] = l_ref[...] * corr + _row_reduce(p, _Sum, mode, red_ref)
         acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
@@ -119,8 +158,12 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         kv_offset = skv - sq
     scale = 1.0 / (d ** 0.5)
 
-    block_q = min(block_q, _round_up(sq))
-    block_kv = min(block_kv, _round_up(skv))
+    block_q = min(block_q, align_up(sq, 128))
+    block_kv = min(block_kv, align_up(skv, 128))
+    if mode != "native":
+        # The abstract/shuffle cross-lane stages fold rows into 128-lane
+        # vregs, so their kv block must be a lane multiple.
+        block_kv = max(LANES, (block_kv // LANES) * LANES)
     q_p = _pad_seq(q, block_q)
     k_p = _pad_seq(k, block_kv)
     v_p = _pad_seq(v, block_kv)
@@ -130,13 +173,14 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     params = None
     if mode == "native":
-        params = pltpu.CompilerParams(dimension_semantics=(
+        params = CompilerParams(dimension_semantics=(
             "parallel", "parallel", "parallel", "arbitrary"))
 
     out = pl.pallas_call(
         functools.partial(
             _flash_kernel, scale=scale, causal=causal, kv_offset=kv_offset,
-            block_q=block_q, block_kv=block_kv, n_kv=grid[3], skip=skip),
+            block_q=block_q, block_kv=block_kv, n_kv=grid[3], mode=mode,
+            skip=skip),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, block_q, d),
@@ -150,19 +194,18 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                                lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
         out_shape=jax.ShapeDtypeStruct(q_p.shape, q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((block_q, 1), jnp.float32),   # m
-            pltpu.VMEM((block_q, 1), jnp.float32),   # l
-            pltpu.VMEM((block_q, d), jnp.float32),   # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),      # m
+            pltpu.VMEM((block_q, 1), jnp.float32),      # l
+            pltpu.VMEM((block_q, d), jnp.float32),      # acc
+            # row-reduce staging: only the abstract budget round-trips
+            pltpu.VMEM((block_q, LANES) if mode == "abstract"
+                       else (8, LANES), jnp.float32),
         ],
         compiler_params=params,
         interpret=interpret,
         name=f"uisa_flash_attention_{mode.replace('+', '_')}",
     )(q_p, k_p, v_p)
     return out[:, :, :sq, :]
-
-
-def _round_up(dim: int, granule: int = 128) -> int:
-    return ((dim + granule - 1) // granule) * granule
 
 
 def _pad_seq(x: jax.Array, block: int) -> jax.Array:
@@ -175,8 +218,13 @@ def _pad_seq(x: jax.Array, block: int) -> jax.Array:
 def structural_cost(b: int, h: int, sq: int, skv: int, d: int,
                     causal: bool, mode: str,
                     block_q: int = 256, block_kv: int = 256) -> dict:
-    """Visited-block accounting: quantifies what grid-level predication
-    (native block-skip) saves vs. the abstract mask-everything variant."""
+    """Visited-block accounting + the §VII.C scratch-traffic delta.
+
+    Grid-level predication (native block-skip) controls how many blocks
+    run; the online-softmax cross-lane stages control what each visited
+    block pays: two rowwise reductions (max, sum) per block, each either
+    log2(W) scratch round-trips (abstract), log2(W) register shuffles
+    (abstract+shuffle), or one native fused reduce."""
     nq = -(-sq // block_q)
     nk = -(-skv // block_kv)
     total = nq * nk
@@ -188,10 +236,27 @@ def structural_cost(b: int, h: int, sq: int, skv: int, d: int,
     else:
         visited = total
     flops_per_block = 4 * block_q * block_kv * d
+    reduces_per_block = 2                       # row-max + row-sum
+    if mode == "abstract":
+        round_trips = reduces_per_block * tree_stages(LANES)
+        scratch_bytes = (b * h * visited * reduces_per_block *
+                         scratch_tree_bytes(LANES, rows=block_q))
+        shuffles = 0
+    elif mode == "abstract+shuffle":
+        round_trips = 0
+        scratch_bytes = 0
+        shuffles = reduces_per_block * tree_stages(LANES)
+    else:                                       # native / library
+        round_trips = 0
+        scratch_bytes = 0
+        shuffles = 0
     return {
         "blocks_total": b * h * total,
         "blocks_visited": b * h * visited,
         "flops": b * h * visited * flops_per_block,
         "flops_dense": b * h * total * flops_per_block,
         "skip_fraction": 1.0 - visited / total,
+        "scratch_round_trips_per_block": round_trips,
+        "scratch_bytes_total": scratch_bytes,
+        "lane_shuffles_per_block": shuffles,
     }

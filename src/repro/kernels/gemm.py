@@ -31,7 +31,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import (IsaMode, KernelContract, Primitive, TARGET,
-                        UNIVERSAL_SET, choose_block_bytes, validate_contract)
+                        UNIVERSAL_SET, align_up, choose_block_bytes,
+                        validate_contract)
+from repro.core.pipeline import CompilerParams
 
 # --------------------------------------------------------------------------
 # Contracts (validated at import: the abstract variant cannot regress into
@@ -116,12 +118,14 @@ def gemm(a: jax.Array, b: jax.Array, *, mode: str = "native",
         params = None
     elif mode == "native":
         bm, bn, bk = native_block_shape(a.dtype)
-        params = pltpu.CompilerParams(
+        params = CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"))
     else:
         raise ValueError(f"unknown isa mode {mode!r}")
 
-    bm, bn, bk = min(bm, _ceil_mult(m)), min(bn, _ceil_mult(n)), min(bk, _ceil_mult(k))
+    # cap blocks at the (tile-rounded) problem size for small inputs
+    bm, bn, bk = (min(bm, align_up(m, 128)), min(bn, align_up(n, 128)),
+                  min(bk, align_up(k, 128)))
     a_p = _pad_to(a, bm, bk)
     b_p = _pad_to(b, bk, bn)
     mp, kp = a_p.shape
@@ -143,12 +147,6 @@ def gemm(a: jax.Array, b: jax.Array, *, mode: str = "native",
         name=f"uisa_gemm_{mode.replace('+', '_')}",
     )(a_p, b_p)
     return out[:m, :n]
-
-
-def _ceil_mult(dim: int, granule: int = 128) -> int:
-    """Smallest legal tile covering ``dim`` (cap blocks for small inputs)."""
-    return max(granule, ((dim + granule - 1) // granule) * granule) \
-        if dim < granule else ((dim + granule - 1) // granule) * granule
 
 
 def structural_cost(m: int, n: int, k: int, mode: str,

@@ -6,18 +6,22 @@ shared-scratchpad histogram.  The paper found them tied (100.4% / 102.1%)
 because contention was insufficient for privatization to pay.
 
 TPU transposition: the dialect has **no hardware atomics** (a true
-divergence — core/primitives.py).  Both variants therefore lower
+divergence — core/primitives.py).  All variants therefore lower
 ATOMIC_RMW through the paper's own divergence resolution: *privatize +
-deterministic reduce*:
+deterministic reduce* — and the variants differ in how the per-element
+one-hot indicators are merged, i.e. in the cross-lane stage:
 
-- ``abstract``: one shared accumulator per grid step — a single one-hot
-  comparison tensor summed over all block elements (vector-unit compare +
-  add only; universal primitives).
+- ``abstract``: one shared accumulator per grid step, merged through
+  *scratchpad round-trips* — the (block, bins) indicator partials
+  tree-reduce across the block axis via ``scratch_tree_reduce`` (log2 of
+  the block's rows store/reload stages, program order as the barrier).
+- ``abstract+shuffle``: per-sublane-row privatized counts whose lane
+  merge is the in-register rotate tree (``lane_tree_reduce`` along the
+  value-lane axis) — zero scratch traffic (§VII.C generalized).
 - ``native``: per-sublane-group privatized counts produced by a one-hot
   **matmul** against a ones vector — routing the accumulation through the
-  queried MXU tile (mxu_aligned_tiles) exactly like per-warp privatization
-  routes it through warp-local shared memory — then a cross-private
-  reduce.
+  queried MXU tile exactly like per-warp privatization routes it through
+  warp-local shared memory — then a cross-private reduce.
 
 Output accumulation across grid steps is sequential (workgroup-barrier
 semantics), so results are deterministic, unlike GPU atomics.
@@ -32,29 +36,45 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import (IsaMode, KernelContract, Primitive, TARGET,
-                        validate_contract)
+                        lane_tree_reduce, plan_row_pipeline,
+                        scratch_tree_bytes, scratch_tree_reduce,
+                        tree_stages, validate_contract)
 
 LANES = TARGET.W
-_BLOCK_ROWS = 32          # 32×128 = 4096 values per grid step
+_MAX_BLOCK_ROWS = 32      # 32×128 = 4096 values per grid step
+
+_ATOMIC_LOWERING = frozenset({
+    Primitive.LOCKSTEP_GROUP, Primitive.MASKED_DIVERGENCE,
+    Primitive.MANAGED_SCRATCHPAD, Primitive.WORKGROUP_BARRIER,
+    Primitive.HIERARCHICAL_MEMORY, Primitive.IDENTITY_REGISTERS,
+    Primitive.ASYNC_MEMORY, Primitive.ATOMIC_RMW,
+})
 
 ABSTRACT_CONTRACT = KernelContract(
     kernel="histogram", mode=IsaMode.ABSTRACT,
-    primitives=frozenset({
-        Primitive.LOCKSTEP_GROUP, Primitive.MASKED_DIVERGENCE,
-        Primitive.MANAGED_SCRATCHPAD, Primitive.WORKGROUP_BARRIER,
-        Primitive.HIERARCHICAL_MEMORY, Primitive.IDENTITY_REGISTERS,
-        Primitive.ASYNC_MEMORY, Primitive.ATOMIC_RMW,
-    }))
+    primitives=_ATOMIC_LOWERING)
+SHUFFLE_CONTRACT = KernelContract(
+    kernel="histogram", mode=IsaMode.ABSTRACT_SHUFFLE,
+    primitives=_ATOMIC_LOWERING | {Primitive.LANE_SHUFFLE})
 NATIVE_CONTRACT = KernelContract(
     kernel="histogram", mode=IsaMode.NATIVE,
     primitives=frozenset(Primitive),
     native_features=frozenset({"mxu_aligned_tiles", "dimension_semantics",
                                "multi_buffering"}))
-validate_contract(ABSTRACT_CONTRACT)
-validate_contract(NATIVE_CONTRACT)
+for _c in (ABSTRACT_CONTRACT, SHUFFLE_CONTRACT, NATIVE_CONTRACT):
+    validate_contract(_c)
 
 
-def _histogram_kernel(x_ref, o_ref, *, mode: str, num_bins: int):
+def _plan(rows: int, mode: str):
+    # pow2 blocks: the abstract variant tree-reduces across the block's
+    # flattened element axis, which must be a power of two.
+    return plan_row_pipeline(rows, LANES * 4, mode=mode,
+                             max_block_rows=_MAX_BLOCK_ROWS,
+                             pow2_blocks=True, semantics=("arbitrary",))
+
+
+def _histogram_kernel(x_ref, o_ref, scratch_ref, *, mode: str,
+                      num_bins: int):
     @pl.when(pl.program_id(0) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
@@ -62,11 +82,20 @@ def _histogram_kernel(x_ref, o_ref, *, mode: str, num_bins: int):
     vals = x_ref[...]                                    # (rows, LANES) int32
     bins = jax.lax.broadcasted_iota(jnp.int32, (1, num_bins), 1)
     if mode == "abstract":
-        # Single shared accumulator: every element compared against every
-        # bin (masked-divergence compare), summed straight into one (1, B)
-        # histogram — vector unit only.
+        # Single shared accumulator: every element's one-hot indicator
+        # (masked-divergence compare) merges through the scratchpad tree —
+        # log2(rows·LANES) barrier-ordered round-trips per block.
         onehot = (vals.reshape(-1, 1) == bins).astype(jnp.float32)
-        counts = jnp.sum(onehot, axis=0, keepdims=True)  # (1, B)
+        counts = scratch_tree_reduce(onehot, scratch_ref, axis=0)  # (1, B)
+    elif mode == "abstract+shuffle":
+        # Privatized per sublane-row; the per-row lane merge is the rotate
+        # tree (primitive 11).  Layout keeps the value-lane axis MINOR
+        # (rows, B, LANES) so the rotate is a true intra-vreg lane
+        # rotation, not a second-minor relayout: zero scratch.
+        onehot = (vals[:, None, :] == bins.reshape(-1)[None, :, None]
+                  ).astype(jnp.float32)                  # (rows, B, LANES)
+        private = lane_tree_reduce(onehot, axis=-1)[..., 0]  # (rows, B)
+        counts = jnp.sum(private, axis=0, keepdims=True)     # register fold
     elif mode == "native":
         # Privatized: one histogram per sublane-row of the block (the
         # 'wave-local' copy), produced by a ones-vector matmul through the
@@ -90,44 +119,56 @@ def histogram(values: jax.Array, num_bins: int = 256, *,
     if mode == "library":
         clipped = jnp.clip(values.astype(jnp.int32), 0, num_bins - 1)
         return jnp.zeros((num_bins,), jnp.int32).at[clipped.reshape(-1)].add(1)
-    if mode == "abstract+shuffle":
-        mode = "abstract"  # shuffle does not participate in histogram
     assert num_bins % LANES == 0 or num_bins <= LANES, num_bins
 
     flat = jnp.clip(values.astype(jnp.int32).reshape(-1), 0, num_bins - 1)
-    n = flat.shape[0]
-    per_block = _BLOCK_ROWS * LANES
-    pad = (-n) % per_block
+    pad = (-flat.shape[0]) % LANES
     if pad:
         # Padding sentinel = -1: matches no bin in the compare.
         flat = jnp.pad(flat, (0, pad), constant_values=-1)
     rows = flat.shape[0] // LANES
+    plan = _plan(rows, mode)
+    block = plan.block_rows
+    pad_r = plan.padded_rows - rows
     x2d = flat.reshape(rows, LANES)
-    grid = (rows // _BLOCK_ROWS,)
+    if pad_r:
+        x2d = jnp.pad(x2d, ((0, pad_r), (0, 0)), constant_values=-1)
     bins_padded = max(num_bins, LANES)
 
-    params = None
-    if mode == "native":
-        params = pltpu.CompilerParams(dimension_semantics=("arbitrary",))
-
     out = pl.pallas_call(
-        functools.partial(_histogram_kernel, mode=mode, num_bins=bins_padded),
-        grid=grid,
-        in_specs=[pl.BlockSpec((_BLOCK_ROWS, LANES), lambda i: (i, 0))],
+        functools.partial(_histogram_kernel, mode=mode,
+                          num_bins=bins_padded),
+        grid=plan.grid,
+        in_specs=[pl.BlockSpec((block, LANES), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((1, bins_padded), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, bins_padded), jnp.int32),
-        compiler_params=params,
+        # only the abstract tree stages through scratch; other modes get
+        # a minimal tile so the VMEM budget stays with the pipeline
+        scratch_shapes=[pltpu.VMEM(
+            (block * LANES, bins_padded) if mode == "abstract"
+            else (8, LANES), jnp.float32)],
+        compiler_params=plan.compiler_params,
         interpret=interpret,
-        name=f"uisa_histogram_{mode}",
+        name=f"uisa_histogram_{mode.replace('+', '_')}",
     )(x2d)
     return out[0, :num_bins]
 
 
 def structural_cost(n: int, num_bins: int, mode: str) -> dict:
-    """Contention / privatization structure for the benchmark report."""
-    per_block = _BLOCK_ROWS * LANES
-    blocks = -(-n // per_block)
-    private_copies = _BLOCK_ROWS if mode == "native" else 1
+    """Contention / privatization structure + the scratch-traffic delta."""
+    rows = -(-n // LANES)
+    plan = _plan(rows, mode if mode != "library" else "native")
+    blocks = plan.grid[0]
+    block_elems = plan.block_rows * LANES
+    private_copies = plan.block_rows if mode in ("native",
+                                                 "abstract+shuffle") else 1
+    if mode == "abstract":
+        round_trips = tree_stages(block_elems)
+        scratch_bytes = blocks * scratch_tree_bytes(
+            block_elems, rows=num_bins)  # tree runs across the elem axis
+    else:
+        round_trips = 0
+        scratch_bytes = 0
     return {
         "hbm_bytes": n * 4 + num_bins * 4,
         "private_histograms_per_block": private_copies,
@@ -135,4 +176,9 @@ def structural_cost(n: int, num_bins: int, mode: str) -> dict:
         "mxu_routed": mode == "native",
         "atomic_free": True,                    # deterministic by design
         "blocks": blocks,
+        "block_rows": plan.block_rows,
+        "scratch_round_trips_per_block": round_trips,
+        "scratch_bytes_total": scratch_bytes,
+        "lane_shuffles_per_block": tree_stages(LANES)
+        if mode == "abstract+shuffle" else 0,
     }

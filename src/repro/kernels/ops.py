@@ -65,6 +65,7 @@ def histogram(values: jax.Array, num_bins: int = 256, *, mode="native",
               interpret: Optional[bool] = None):
     mode = _norm_mode(mode)
     interpret = default_interpret() if interpret is None else interpret
+    # abstract+shuffle dispatches to the rotate-tree private merge
     return _histogram.histogram(values, num_bins, mode=mode,
                                 interpret=interpret)
 
@@ -77,8 +78,6 @@ def flash_attention(q, k, v, *, causal: bool = True,
     interpret = default_interpret() if interpret is None else interpret
     if mode == "library":
         return ref.attention(q, k, v, causal=causal)
-    if mode == "abstract+shuffle":
-        mode = "abstract"
     return _attention.flash_attention(
         q, k, v, causal=causal, kv_offset=kv_offset, mode=mode,
         interpret=interpret, block_q=block_q, block_kv=block_kv)
@@ -97,14 +96,18 @@ STRUCTURAL_COSTS = {
     "reduction": _reduction.structural_cost,
     "histogram": _histogram.structural_cost,
     "flash_attention": _attention.structural_cost,
+    "rmsnorm": _rmsnorm.structural_cost,
 }
 
 CONTRACTS = {
     "gemm": (_gemm.ABSTRACT_CONTRACT, _gemm.NATIVE_CONTRACT),
     "reduction": (_reduction.ABSTRACT_CONTRACT, _reduction.SHUFFLE_CONTRACT,
                   _reduction.NATIVE_CONTRACT),
-    "histogram": (_histogram.ABSTRACT_CONTRACT, _histogram.NATIVE_CONTRACT),
+    "histogram": (_histogram.ABSTRACT_CONTRACT, _histogram.SHUFFLE_CONTRACT,
+                  _histogram.NATIVE_CONTRACT),
     "flash_attention": (_attention.ABSTRACT_CONTRACT,
+                        _attention.SHUFFLE_CONTRACT,
                         _attention.NATIVE_CONTRACT),
-    "rmsnorm": (_rmsnorm.ABSTRACT_CONTRACT, _rmsnorm.NATIVE_CONTRACT),
+    "rmsnorm": (_rmsnorm.ABSTRACT_CONTRACT, _rmsnorm.SHUFFLE_CONTRACT,
+                _rmsnorm.NATIVE_CONTRACT),
 }

@@ -5,27 +5,27 @@ scratchpad round-trips cost 37.5% on NVIDIA (62.5% of native) but only
 2.2% on Apple — therefore shuffle must be the 11th mandatory primitive.
 
 TPU transposition: the "wave" is the 128-lane vreg minor dimension.  The
-final cross-lane reduction can be done two ways:
+final cross-lane reduction can be done two ways, both via the shared
+primitive layer in :mod:`repro.core.shuffle`:
 
 - ``abstract`` (10 primitives, no shuffle): log2(W)=7 *scratchpad
-  round-trips* — each halving stage stores partials to a VMEM scratch
-  buffer and reloads them, with the workgroup-barrier ordering the stages
-  (on TPU: program order plays the barrier role; the *memory traffic* is
-  what survives the transposition, and it is exactly what made the NVIDIA
-  native kernel faster).
-- ``abstract+shuffle``: a lane-rotate tree — ``x += roll(x, s)`` for
-  s = 64..1 — all in registers, zero scratch traffic (pltpu.roll is the
-  TPU realization of __shfl_down_sync / simd_shuffle_down).
+  round-trips* (``scratch_tree_reduce``) — each halving stage stores
+  partials to a VMEM scratch buffer and reloads them, with the
+  workgroup-barrier ordering the stages (on TPU: program order plays the
+  barrier role; the *memory traffic* is what survives the transposition,
+  and it is exactly what made the NVIDIA native kernel faster).
+- ``abstract+shuffle``: the lane-rotate tree (``lane_tree_reduce``) — all
+  in registers, zero scratch traffic.
 - ``native``: lets the target pick (jnp.sum lowers to the VPU's native
   cross-lane reduce) + pipeline annotations.
 
-`structural_cost` exposes the round-trip counts so benchmarks can show the
-mechanism, not just the outcome.
+Block staging comes from the shared Eq. 1 plan (``plan_row_pipeline``),
+and `structural_cost` exposes the round-trip counts so benchmarks can
+show the mechanism, not just the outcome.
 """
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
@@ -33,11 +33,12 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import (IsaMode, KernelContract, Primitive, TARGET,
-                        validate_contract)
+                        lane_tree_reduce, pad_rows, plan_row_pipeline,
+                        scratch_tree_bytes, scratch_tree_reduce,
+                        tree_stages, validate_contract)
 
 LANES = TARGET.W          # 128 — queried, never assumed (Table III)
-SUBLANES = 8
-_BLOCK_ROWS = 512         # rows of 128 lanes per grid step (256 KB f32)
+_MAX_BLOCK_ROWS = 512     # latency/tail cap: 512x128 f32 = 256 KB per step
 
 ABSTRACT_CONTRACT = KernelContract(
     kernel="reduction", mode=IsaMode.ABSTRACT,
@@ -57,32 +58,13 @@ for _c in (ABSTRACT_CONTRACT, SHUFFLE_CONTRACT, NATIVE_CONTRACT):
     validate_contract(_c)
 
 
-def _final_lane_reduce_scratchpad(row, scratch_ref):
-    """Abstract: tree-reduce a (1, LANES) partial through scratchpad
-    round-trips — the 'five barrier-synchronized shared memory round
-    trips' of the paper, which are log2(128)=7 here."""
-    scratch_ref[0, :] = row[0, :]
-    width = LANES // 2
-    while width >= 1:
-        # barrier (program order) | load two halves | store partial
-        lo = scratch_ref[0, :width]
-        hi = scratch_ref[0, width:2 * width]
-        scratch_ref[0, :width] = lo + hi
-        width //= 2
-    return scratch_ref[0, 0]
+def _plan(rows: int, mode: str):
+    return plan_row_pipeline(rows, LANES * 4, mode=mode,
+                             max_block_rows=_MAX_BLOCK_ROWS,
+                             semantics=("arbitrary",))
 
 
-def _final_lane_reduce_shuffle(row):
-    """Abstract+shuffle: in-register rotate tree (primitive 11)."""
-    x = row  # (1, LANES)
-    shift = LANES // 2
-    while shift >= 1:
-        x = x + pltpu.roll(x, shift, 1)
-        shift //= 2
-    return x[0, 0]
-
-
-def _reduction_kernel(x_ref, o_ref, scratch_ref, *, mode: str, n_rows: int):
+def _reduction_kernel(x_ref, o_ref, scratch_ref, *, mode: str):
     @pl.when(pl.program_id(0) == 0)
     def _init():
         o_ref[0, 0] = jnp.float32(0.0)
@@ -97,9 +79,9 @@ def _reduction_kernel(x_ref, o_ref, scratch_ref, *, mode: str, n_rows: int):
         # the shared-memory block tree both the paper's kernels share.
         row = jnp.sum(block, axis=0, keepdims=True)  # (1, LANES)
         if mode == "abstract":
-            part = _final_lane_reduce_scratchpad(row, scratch_ref)
+            part = scratch_tree_reduce(row, scratch_ref)[0, 0]
         elif mode == "abstract+shuffle":
-            part = _final_lane_reduce_shuffle(row)
+            part = lane_tree_reduce(row)[0, 0]
         else:
             raise ValueError(mode)
     o_ref[0, 0] += part
@@ -112,27 +94,21 @@ def reduce_sum(x: jax.Array, *, mode: str = "native",
     if mode == "library":
         return jnp.sum(x.astype(jnp.float32))
     flat = x.reshape(-1)
-    n = flat.shape[0]
-    per_block = _BLOCK_ROWS * LANES
-    pad = (-n) % per_block
+    pad = (-flat.shape[0]) % LANES
     if pad:
         flat = jnp.pad(flat, (0, pad))
     rows = flat.shape[0] // LANES
-    x2d = flat.reshape(rows, LANES)
-    grid = (rows // _BLOCK_ROWS,)
-
-    params = None
-    if mode == "native":
-        params = pltpu.CompilerParams(dimension_semantics=("arbitrary",))
+    plan = _plan(rows, mode)
+    x2d = pad_rows(flat.reshape(rows, LANES), plan)
 
     out = pl.pallas_call(
-        functools.partial(_reduction_kernel, mode=mode, n_rows=_BLOCK_ROWS),
-        grid=grid,
-        in_specs=[pl.BlockSpec((_BLOCK_ROWS, LANES), lambda i: (i, 0))],
+        functools.partial(_reduction_kernel, mode=mode),
+        grid=plan.grid,
+        in_specs=[pl.BlockSpec((plan.block_rows, LANES), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
         scratch_shapes=[pltpu.VMEM((1, LANES), jnp.float32)],
-        compiler_params=params,
+        compiler_params=plan.compiler_params,
         interpret=interpret,
         name=f"uisa_reduction_{mode.replace('+', '_')}",
     )(x2d)
@@ -148,24 +124,22 @@ def structural_cost(n: int, mode: str, dtype=jnp.float32) -> dict:
     37.5%; on a latency-tolerant one it is the paper's 2.2%.
     """
     itemsize = jnp.dtype(dtype).itemsize
-    per_block = _BLOCK_ROWS * LANES
-    blocks = -(-n // per_block)
-    if mode in ("library", "native"):
+    rows = -(-n // LANES)
+    plan = _plan(rows, mode if mode != "library" else "native")
+    blocks = plan.grid[0]
+    if mode == "abstract":
+        round_trips = tree_stages(LANES)     # 7 halving stages
+        scratch_bytes = blocks * scratch_tree_bytes(LANES)
+    else:  # library / native / abstract+shuffle: no scratch round-trips
         round_trips = 0
         scratch_bytes = 0
-    elif mode == "abstract+shuffle":
-        round_trips = 0                      # in-register rotates
-        scratch_bytes = 0
-    else:  # abstract
-        round_trips = int(math.log2(LANES))  # 7 halving stages
-        # stage k reads 2·(LANES/2^k) + writes LANES/2^k f32 values
-        scratch_bytes = blocks * sum(
-            3 * (LANES >> k) * 4 for k in range(1, round_trips + 1))
     return {
         "hbm_bytes": n * itemsize,
         "scratch_round_trips_per_block": round_trips,
         "scratch_bytes_total": scratch_bytes,
-        "lane_shuffles_per_block": int(math.log2(LANES))
+        "lane_shuffles_per_block": tree_stages(LANES)
         if mode == "abstract+shuffle" else 0,
         "blocks": blocks,
+        "block_rows": plan.block_rows,
+        "pipeline_occupancy": plan.occupancy,
     }

@@ -1,11 +1,22 @@
-"""Fused RMSNorm — the fused-epilogue example kernel.
+"""Fused RMSNorm — fused-epilogue example + a §VII.C cross-lane hot loop.
 
-Exercises the remaining native feature (``fused_epilogue``): the native
-variant computes moment + normalization + weight application in one VMEM
-residency; the abstract variant makes two explicit passes through the
-scratchpad with a barrier between them (moment pass, then normalize pass),
-mirroring how a universal-primitives kernel without fusion guarantees
-would be written.
+The moment computation (mean of squares over the feature axis) is a
+rowwise cross-lane reduction, so the kernel carries the full Table V mode
+matrix through the shared primitive layer:
+
+- ``abstract``: the row is folded to one 128-lane vreg by register
+  accumulation, then tree-reduced through *scratchpad round-trips*
+  (``scratch_tree_reduce``) — log2(W)=7 store/reload stages with program
+  order as the barrier.  A second scratch round-trip hands the moment to
+  the normalize pass (no fusion guarantee in the universal budget).
+- ``abstract+shuffle``: the same fold, then the in-register rotate tree
+  (``row_reduce_shuffle``) — zero scratch traffic, single residency.
+- ``native``: target-native reduce (jnp.mean) + fused epilogue + pipeline
+  annotations.
+
+The feature axis is zero-padded to a lane multiple for the non-native
+variants (zeros contribute nothing to the second moment; the divisor uses
+the true width).
 """
 from __future__ import annotations
 
@@ -16,10 +27,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import (IsaMode, KernelContract, Primitive,
-                        validate_contract)
+from repro.core import (IsaMode, KernelContract, Primitive, TARGET,
+                        plan_row_pipeline, row_reduce_shuffle, fold_rows,
+                        scratch_tree_bytes, scratch_tree_reduce,
+                        tree_stages, validate_contract)
 
-_BLOCK_ROWS = 64
+LANES = TARGET.W
+_MAX_BLOCK_ROWS = 64
 
 ABSTRACT_CONTRACT = KernelContract(
     kernel="rmsnorm", mode=IsaMode.ABSTRACT,
@@ -28,30 +42,51 @@ ABSTRACT_CONTRACT = KernelContract(
         Primitive.WORKGROUP_BARRIER, Primitive.HIERARCHICAL_MEMORY,
         Primitive.IDENTITY_REGISTERS, Primitive.ASYNC_MEMORY,
     }))
+SHUFFLE_CONTRACT = KernelContract(
+    kernel="rmsnorm", mode=IsaMode.ABSTRACT_SHUFFLE,
+    primitives=ABSTRACT_CONTRACT.primitives | {Primitive.LANE_SHUFFLE})
 NATIVE_CONTRACT = KernelContract(
     kernel="rmsnorm", mode=IsaMode.NATIVE,
     primitives=frozenset(Primitive),
     native_features=frozenset({"fused_epilogue", "dimension_semantics",
                                "multi_buffering"}))
-validate_contract(ABSTRACT_CONTRACT)
-validate_contract(NATIVE_CONTRACT)
+for _c in (ABSTRACT_CONTRACT, SHUFFLE_CONTRACT, NATIVE_CONTRACT):
+    validate_contract(_c)
+
+
+def _plan(rows: int, d_padded: int, itemsize: int, mode: str):
+    return plan_row_pipeline(rows, d_padded * itemsize, mode=mode,
+                             max_block_rows=_MAX_BLOCK_ROWS,
+                             semantics=("parallel",))
 
 
 def _rmsnorm_kernel(x_ref, w_ref, o_ref, scratch_ref, *, eps: float,
-                    mode: str):
+                    mode: str, d_true: int):
     x = x_ref[...].astype(jnp.float32)                    # (rows, d)
     w = w_ref[...].astype(jnp.float32)                    # (1, d)
     if mode == "native":
-        # Fused: single residency.
+        # Fused: single residency, target-native cross-lane reduce.
         var = jnp.mean(x * x, axis=-1, keepdims=True)
         o_ref[...] = (x * jax.lax.rsqrt(var + eps) * w).astype(o_ref.dtype)
-    else:
-        # Abstract: pass 1 writes moments to scratch; barrier; pass 2
-        # reloads them and normalizes.  Same arithmetic, one extra
-        # scratchpad round-trip per block.
-        scratch_ref[...] = jnp.mean(x * x, axis=-1, keepdims=True)
-        var = scratch_ref[...]                            # round-trip
+        return
+    x2 = x * x
+    if mode == "abstract+shuffle":
+        # Rotate tree in registers: zero scratch round-trips (§VII.C).
+        sumsq = row_reduce_shuffle(x2)                    # (rows, 1)
+        var = sumsq / d_true
         o_ref[...] = (x * jax.lax.rsqrt(var + eps) * w).astype(o_ref.dtype)
+    elif mode == "abstract":
+        # Fold to one vreg (register ops), then the shuffle-free tree:
+        # 7 scratchpad round-trips, barrier-ordered.
+        acc = fold_rows(x2)                               # (rows, LANES)
+        sumsq = scratch_tree_reduce(acc, scratch_ref)     # (rows, 1)
+        # Second round-trip: the universal budget gives no fusion
+        # guarantee, so the moment is re-staged before the normalize pass.
+        scratch_ref[:, :1] = sumsq / d_true
+        var = scratch_ref[:, :1]                          # reload
+        o_ref[...] = (x * jax.lax.rsqrt(var + eps) * w).astype(o_ref.dtype)
+    else:
+        raise ValueError(mode)
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "eps", "interpret"))
@@ -63,35 +98,76 @@ def rmsnorm(x: jax.Array, weight: jax.Array, *, eps: float = 1e-6,
         var = jnp.mean(xf * xf, axis=-1, keepdims=True)
         return ((xf * jax.lax.rsqrt(var + eps)) *
                 weight.astype(jnp.float32)).astype(x.dtype)
-    if mode == "abstract+shuffle":
-        mode = "abstract"
     *lead, d = x.shape
     rows = 1
     for s in lead:
         rows *= s
     x2d = x.reshape(rows, d)
-    block = min(_BLOCK_ROWS, rows)
-    pad = (-rows) % block
+    w2d = weight.reshape(1, d)
+    d_padded = d
+    if mode != "native":
+        # Non-native cross-lane stages fold the row into 128-lane vregs.
+        pad_d = (-d) % LANES
+        if pad_d:
+            d_padded = d + pad_d
+            x2d = jnp.pad(x2d, ((0, 0), (0, pad_d)))
+            w2d = jnp.pad(w2d, ((0, 0), (0, pad_d)))
+
+    plan = _plan(rows, d_padded, jnp.dtype(x.dtype).itemsize, mode)
+    block = plan.block_rows
+    pad = plan.padded_rows - rows
     if pad:
         x2d = jnp.pad(x2d, ((0, pad), (0, 0)))
-    grid = (x2d.shape[0] // block,)
-
-    params = None
-    if mode == "native":
-        params = pltpu.CompilerParams(dimension_semantics=("parallel",))
 
     out = pl.pallas_call(
-        functools.partial(_rmsnorm_kernel, eps=eps, mode=mode),
-        grid=grid,
+        functools.partial(_rmsnorm_kernel, eps=eps, mode=mode, d_true=d),
+        grid=plan.grid,
         in_specs=[
-            pl.BlockSpec((block, d), lambda i: (i, 0)),
-            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((block, d_padded), lambda i: (i, 0)),
+            pl.BlockSpec((1, d_padded), lambda i: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((block, d), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((block, d_padded), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(x2d.shape, x.dtype),
-        scratch_shapes=[pltpu.VMEM((block, 1), jnp.float32)],
-        compiler_params=params,
+        # only the abstract tree stages through scratch
+        scratch_shapes=[pltpu.VMEM(
+            (block, LANES) if mode == "abstract" else (8, LANES),
+            jnp.float32)],
+        compiler_params=plan.compiler_params,
         interpret=interpret,
-        name=f"uisa_rmsnorm_{mode}",
-    )(x2d, weight.reshape(1, d))
-    return out[:rows].reshape(x.shape)
+        name=f"uisa_rmsnorm_{mode.replace('+', '_')}",
+    )(x2d, w2d)
+    return out[:rows, :d].reshape(x.shape)
+
+
+def structural_cost(rows: int, d: int, mode: str, dtype=jnp.float32) -> dict:
+    """Scratch-traffic delta of the moment reduction — §VII.C generalized.
+
+    HBM traffic is mode-invariant (read x + w, write out); the cross-lane
+    moment stage is where the budgets diverge: 7 scratch round-trips
+    (abstract) vs 7 in-register shuffles (abstract+shuffle) vs a native
+    fused reduce.
+    """
+    itemsize = jnp.dtype(dtype).itemsize
+    d_padded = d if mode == "native" else d + ((-d) % LANES)
+    plan = _plan(rows, d_padded, itemsize,
+                 mode if mode != "library" else "native")
+    blocks = plan.grid[0]
+    if mode == "abstract":
+        round_trips = tree_stages(LANES) + 1   # tree + moment re-stage
+        scratch_bytes = blocks * (
+            scratch_tree_bytes(LANES, rows=plan.block_rows)
+            + 3 * plan.block_rows * 4)         # moment store+2 reloads
+    else:
+        round_trips = 0
+        scratch_bytes = 0
+    return {
+        "hbm_bytes": rows * d * itemsize * 2 + d * itemsize,
+        "scratch_round_trips_per_block": round_trips,
+        "scratch_bytes_total": scratch_bytes,
+        "lane_shuffles_per_block": tree_stages(LANES)
+        if mode == "abstract+shuffle" else 0,
+        "blocks": blocks,
+        "block_rows": plan.block_rows,
+        "pipeline_occupancy": plan.occupancy,
+        "fused_epilogue": mode in ("native", "library"),
+    }

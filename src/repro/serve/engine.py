@@ -1,15 +1,28 @@
-"""Batched serving engine with continuous batching over decode slots.
+"""Batched serving engine with a host-sync-free decode tick.
 
 The decode state is a fixed [B, ...] cache pytree; requests claim a slot,
 prefill writes that slot's cache entries, and every engine tick advances
-ALL active slots by one token (one jitted ``decode_step``).  Finished or
-empty slots keep decoding garbage into masked positions — the standard
-fixed-shape continuous-batching layout (vLLM-style slots, without paging;
-the cache seq dim is pre-sized to ``max_seq_len``).
+ALL active slots by one token — the standard fixed-shape continuous-
+batching layout (vLLM-style slots, without paging; the cache seq dim is
+pre-sized to ``max_seq_len``).
+
+The tick is **one device program and zero host transfers**:
+``last_tokens``, the slot-liveness mask, and the per-slot remaining-token
+budget are device-resident, and the jitted tick fuses decode + greedy
+argmax + EOS/length masking, donating the cache and state buffers so the
+update happens in place.  Per-token results accumulate as device arrays in
+a history buffer; :meth:`sync` drains them to the ``Request`` objects with
+a single stacked transfer.  Host synchronization happens only at
+*admission* boundaries (a new request needs a prefill and a slot decision)
+— never inside the steady-state tick loop.  This is the serving-side
+application of the paper's §VII.C lesson: round-trips off the fast path
+compound directly into tail latency.
 
 Per-slot prefill uses a single-sequence prefill jit and writes the result
 into the batch cache at the slot index (dynamic_update_slice), so a new
-request joins without recompiling or disturbing other slots.
+request joins without recompiling or disturbing other slots.  Admission is
+batched: all admissible pending requests are prefilled, then their first
+tokens cross to the host in one stacked transfer.
 
 ``serve_step`` (what the decode_32k / long_500k dry-run cells lower) is
 exactly one engine tick: (params, tokens[B], cache) -> (logits, cache).
@@ -17,11 +30,15 @@ exactly one engine tick: (params, tokens[B], cache) -> (logits, cache).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+#: max ticks between harvest syncs once admissions have drained: bounds
+#: how much masked decode work a fully-EOS'd batch can waste
+_SYNC_STRIDE = 64
 
 
 @dataclasses.dataclass
@@ -49,11 +66,25 @@ class BatchedEngine:
         self.model = model
         self.params = params
         self.cfg = cfg
-        self.cache = model.init_cache(cfg.batch_slots, cfg.max_seq_len)
-        self.slots: List[Optional[Request]] = [None] * cfg.batch_slots
-        self.last_tokens = np.zeros((cfg.batch_slots,), np.int32)
-        self._decode = jax.jit(model.decode_step)
+        b = cfg.batch_slots
+        self.cache = model.init_cache(b, cfg.max_seq_len)
+        self.slots: List[Optional[Request]] = [None] * b
+        # ---- device-resident tick state (never read per tick) ----
+        self.last_tokens = jnp.zeros((b,), jnp.int32)
+        self.live = jnp.zeros((b,), jnp.bool_)
+        self.remaining = jnp.zeros((b,), jnp.int32)
+        self._history: List[jax.Array] = []   # [B] token vecs since sync
+        self.tick_count = 0
+        self.trace_count = 0                  # tick compilations (regression)
         self._prefill_one = jax.jit(self._prefill_one_impl)
+        # Donate liveness/budget/cache so the update is in place on
+        # backends that support donation (no-op warning on CPU).  The
+        # token vector is NOT donated: each tick's output token array is
+        # retained in self._history until sync(), and becomes the next
+        # tick's input — donating it would delete a retained buffer.
+        donate = (2, 3, 4) if jax.default_backend() in ("tpu", "gpu") \
+            else ()
+        self._tick = jax.jit(self._tick_impl, donate_argnums=donate)
 
     # ---- slot management ----
 
@@ -69,18 +100,44 @@ class BatchedEngine:
 
     def add_request(self, req: Request) -> bool:
         """Claim a slot and prefill it.  False if engine is full."""
-        slot = self._free_slot()
-        if slot is None:
-            return False
-        req.slot = slot
-        self.slots[slot] = req
-        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        logits, cache1 = self._prefill_one(self.params, toks)
-        self._write_slot(slot, cache1, len(req.prompt))
-        nxt = int(jnp.argmax(logits[0]))
-        self.last_tokens[slot] = nxt
-        req.generated.append(nxt)
-        return True
+        return self.admit([req]) == 1
+
+    def admit(self, reqs: List[Request]) -> int:
+        """Batched admission: prefill as many of ``reqs`` (in order) as
+        there are free slots, then fetch all first tokens in ONE host
+        transfer.  Returns how many requests were admitted."""
+        self.sync()                    # make slot liveness current
+        staged = []                    # (req, slot, first_token_device)
+        for req in reqs:
+            slot = self._free_slot()
+            if slot is None:
+                break
+            # reap the finished occupant (exactly the slot we claim)
+            req.slot = slot
+            self.slots[slot] = req
+            toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits, cache1 = self._prefill_one(self.params, toks)
+            self._write_slot(slot, cache1, len(req.prompt))
+            staged.append((req, slot,
+                           jnp.argmax(logits[0]).astype(jnp.int32)))
+        if not staged:
+            return 0
+        idx = jnp.asarray([s for _, s, _ in staged], jnp.int32)
+        firsts_dev = jnp.stack([t for _, _, t in staged])
+        budgets = jnp.asarray(
+            [max(r.max_new_tokens - 1, 0) for r, _, _ in staged], jnp.int32)
+        firsts = np.asarray(firsts_dev)          # the one admission sync
+        alive = []
+        for (req, _, _), tok in zip(staged, firsts):
+            tok = int(tok)
+            req.generated.append(tok)
+            req.done = (tok == self.cfg.eos_id
+                        or len(req.generated) >= req.max_new_tokens)
+            alive.append(not req.done)
+        self.last_tokens = self.last_tokens.at[idx].set(firsts_dev)
+        self.live = self.live.at[idx].set(jnp.asarray(alive))
+        self.remaining = self.remaining.at[idx].set(budgets)
+        return len(staged)
 
     def _write_slot(self, slot: int, cache1, prompt_len: int):
         """Copy a batch-1 prefill cache into batch slot ``slot``."""
@@ -110,41 +167,78 @@ class BatchedEngine:
 
     # ---- ticking ----
 
-    def step(self) -> Dict[int, int]:
-        """One decode tick for all slots; returns {rid: new_token}."""
-        tokens = jnp.asarray(self.last_tokens)
-        logits, self.cache = self._decode(self.params, tokens, self.cache)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-        out = {}
-        for slot, req in enumerate(self.slots):
-            if req is None or req.done:
-                continue
-            tok = int(nxt[slot])
-            req.generated.append(tok)
-            self.last_tokens[slot] = tok
-            out[req.rid] = tok
-            if tok == self.cfg.eos_id or \
-                    len(req.generated) >= req.max_new_tokens:
-                req.done = True
-        return out
+    def _tick_impl(self, params, tokens, live, remaining, cache):
+        """Fused decode tick: decode + argmax + EOS/length masking.
+
+        One compiled program; every input/output stays on device.  Dead
+        slots keep their token frozen (the cache still advances, into
+        masked positions — the fixed-shape batching contract)."""
+        self.trace_count += 1            # python side effect: traces only
+        logits, cache = self.model.decode_step(params, tokens, cache)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        nxt = jnp.where(live, nxt, tokens)
+        remaining = jnp.where(live, remaining - 1, remaining)
+        live = live & (nxt != self.cfg.eos_id) & (remaining > 0)
+        return nxt, live, remaining, cache
+
+    def step(self) -> None:
+        """One decode tick for all slots — zero host transfers.
+
+        Emitted tokens land in the device-side history; call :meth:`sync`
+        (or :meth:`run`, which does) to drain them into the requests."""
+        nxt, self.live, self.remaining, self.cache = self._tick(
+            self.params, self.last_tokens, self.live, self.remaining,
+            self.cache)
+        self.last_tokens = nxt
+        self._history.append(nxt)
+        self.tick_count += 1
+
+    def sync(self) -> None:
+        """Drain the device-side token history into the Request objects
+        with a single stacked device->host transfer."""
+        if not self._history:
+            return
+        hist = np.asarray(jnp.stack(self._history))   # [T, B], one transfer
+        self._history = []
+        for t in range(hist.shape[0]):
+            for slot, req in enumerate(self.slots):
+                if req is None or req.done:
+                    continue
+                tok = int(hist[t, slot])
+                req.generated.append(tok)
+                if tok == self.cfg.eos_id or \
+                        len(req.generated) >= req.max_new_tokens:
+                    req.done = True
 
     def run(self, requests: List[Request],
             max_ticks: int = 10_000) -> List[Request]:
         """Continuous batching: admit whenever a slot frees, tick until
-        all requests finish."""
+        all requests finish.  Host syncs happen only at admission/harvest
+        boundaries; between them the tick loop is transfer-free."""
         pending = list(requests)
         admitted: List[Request] = []
-        ticks = 0
-        while (pending or any(r is not None and not r.done
-                              for r in self.slots)) and ticks < max_ticks:
-            while pending and self._free_slot() is not None:
-                req = pending.pop(0)
-                # reap the finished occupant, if any
-                slot = self._free_slot()
-                if self.slots[slot] is not None:
-                    self.slots[slot] = None
-                self.add_request(req)
-                admitted.append(req)
-            self.step()
-            ticks += 1
+        while self.tick_count < max_ticks:
+            if pending:
+                n = self.admit(pending)       # syncs + reaps done slots
+                admitted.extend(pending[:n])
+                del pending[:n]
+            else:
+                self.sync()
+            active = [r for r in self.slots if r is not None and not r.done]
+            if not pending and not active:
+                break
+            if pending:
+                # full house: tick once, then re-check for freed slots
+                self.step()
+            else:
+                # no admissions left: run a transfer-free stretch, capped
+                # so EOS-finished batches don't burn unbounded masked
+                # ticks before the next sync notices everyone is done
+                bound = max(r.max_new_tokens - len(r.generated)
+                            for r in active)
+                bound = min(bound, _SYNC_STRIDE,
+                            max_ticks - self.tick_count)
+                for _ in range(max(1, bound)):
+                    self.step()
+        self.sync()
         return admitted

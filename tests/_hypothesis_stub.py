@@ -1,0 +1,42 @@
+"""No-op hypothesis shim (optional dev dep — see requirements-dev.txt).
+
+When ``hypothesis`` is not installed, test modules fall back to this shim
+so that *only* the property tests skip; every example-based test in the
+same module still collects and runs.  The shim mirrors exactly the API
+surface the test suite uses: ``given``, ``settings`` (as decorator and as
+profile registry), and the ``strategies`` namespace (whose strategy
+constructors are evaluated at decoration time, hence must exist).
+"""
+import pytest
+
+
+class _Strategies:
+    def __getattr__(self, name):
+        return lambda *args, **kwargs: None
+
+
+st = _Strategies()
+
+
+def given(*_args, **_kwargs):
+    def deco(fn):
+        return pytest.mark.skip(
+            reason="hypothesis not installed (pip install -r "
+                   "requirements-dev.txt)")(fn)
+    return deco
+
+
+class settings:
+    def __init__(self, *_args, **_kwargs):
+        pass
+
+    def __call__(self, fn):
+        return fn
+
+    @staticmethod
+    def register_profile(*_args, **_kwargs):
+        pass
+
+    @staticmethod
+    def load_profile(*_args, **_kwargs):
+        pass

@@ -6,7 +6,10 @@ invariants the core layer enforces.
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep (requirements-dev.txt)
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import (Classification, ContractViolation, DIALECTS,
                         Dialect, IsaMode, KernelContract, LaunchError,

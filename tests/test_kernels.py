@@ -101,7 +101,8 @@ class TestReduction:
 class TestHistogram:
     @pytest.mark.parametrize("n", [4096, 50000, 1 << 17])
     @pytest.mark.parametrize("bins", [128, 256])
-    @pytest.mark.parametrize("mode", ["abstract", "native", "library"])
+    @pytest.mark.parametrize(
+        "mode", ["abstract", "abstract+shuffle", "native", "library"])
     def test_matches_oracle(self, n, bins, mode):
         v = jax.random.randint(KEY, (n,), 0, bins, jnp.int32)
         got = ops.histogram(v, bins, mode=mode)
@@ -147,7 +148,8 @@ ATTN_SHAPES = [
 
 class TestFlashAttention:
     @pytest.mark.parametrize("b,h,hkv,sq,skv,d,causal", ATTN_SHAPES)
-    @pytest.mark.parametrize("mode", ["abstract", "native"])
+    @pytest.mark.parametrize("mode", ["abstract", "abstract+shuffle",
+                                      "native"])
     def test_matches_oracle(self, b, h, hkv, sq, skv, d, causal, mode):
         kq, kk, kv = keys(3)
         q = jax.random.normal(kq, (b, h, sq, d), jnp.float32)
@@ -185,7 +187,8 @@ class TestFlashAttention:
 
 class TestRmsnorm:
     @pytest.mark.parametrize("shape", [(4, 128), (2, 7, 256), (64, 512)])
-    @pytest.mark.parametrize("mode", ["abstract", "native", "library"])
+    @pytest.mark.parametrize(
+        "mode", ["abstract", "abstract+shuffle", "native", "library"])
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
     def test_matches_oracle(self, shape, mode, dtype):
         kx, kw = keys(2)

@@ -6,7 +6,10 @@ break."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep (requirements-dev.txt)
+    from _hypothesis_stub import given, settings, st
 
 from repro.kernels import ops, ref
 

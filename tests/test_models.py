@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep (requirements-dev.txt)
+    from _hypothesis_stub import given, settings, st
 
 from repro.kernels import ref
 from repro.models import build_model, common, mlp, ssd

@@ -1,0 +1,211 @@
+"""The lane-shuffle primitive layer (§VII.C as an API) and the shared
+pipeline planner: exchange semantics, tree-reduce identities, Eq. 1
+block sizing, and the scratch-traffic deltas every kernel now reports."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (TARGET, lane_shuffle_down, lane_shuffle_up,
+                        lane_shuffle_xor, lane_tree_reduce, fold_rows,
+                        row_reduce_shuffle, plan_row_pipeline,
+                        tree_stages, scratch_tree_bytes)
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(11)
+LANES = TARGET.W
+
+
+class TestShuffleSemantics:
+    def test_down_up_are_inverse_rotations(self):
+        x = jax.random.normal(KEY, (4, 128), jnp.float32)
+        np.testing.assert_array_equal(
+            lane_shuffle_up(lane_shuffle_down(x, 5), 5), x)
+
+    def test_down_matches_indexing(self):
+        x = jnp.arange(128.0)[None, :]
+        got = lane_shuffle_down(x, 3)
+        want = x[0, (jnp.arange(128) + 3) % 128][None, :]
+        np.testing.assert_array_equal(got, want)
+
+    def test_xor_is_an_involution(self):
+        x = jax.random.normal(KEY, (2, 128), jnp.float32)
+        for mask in (1, 2, 16, 64):
+            np.testing.assert_array_equal(
+                lane_shuffle_xor(lane_shuffle_xor(x, mask), mask), x)
+
+    def test_xor_matches_indexing(self):
+        x = jnp.arange(128.0)[None, :]
+        got = lane_shuffle_xor(x, 8)
+        want = x[0, jnp.arange(128) ^ 8][None, :]
+        np.testing.assert_array_equal(got, want)
+
+    def test_xor_rejects_bad_masks(self):
+        x = jnp.zeros((1, 128))
+        for mask in (0, 3, 128, -2):
+            with pytest.raises(ValueError):
+                lane_shuffle_xor(x, mask)
+
+    def test_tree_reduce_is_an_allreduce(self):
+        """After the rotate tree EVERY lane holds the full reduction."""
+        x = jax.random.normal(KEY, (3, 128), jnp.float32)
+        got = lane_tree_reduce(x)
+        want = jnp.sum(x, axis=-1, keepdims=True)
+        np.testing.assert_allclose(got, jnp.broadcast_to(want, got.shape),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_tree_reduce_max(self):
+        x = jax.random.normal(KEY, (2, 64), jnp.float32)
+        got = lane_tree_reduce(x, jnp.maximum)
+        want = jnp.max(x, axis=-1, keepdims=True)
+        np.testing.assert_array_equal(got, jnp.broadcast_to(want, got.shape))
+
+    def test_tree_reduce_rejects_non_pow2(self):
+        with pytest.raises(ValueError):
+            lane_tree_reduce(jnp.zeros((1, 96)))
+
+    def test_row_reduce_folds_multi_vreg_rows(self):
+        for d in (128, 256, 384, 512):
+            x = jax.random.normal(KEY, (5, d), jnp.float32)
+            np.testing.assert_allclose(
+                row_reduce_shuffle(x), jnp.sum(x, axis=-1, keepdims=True),
+                rtol=1e-5, atol=1e-4)
+            np.testing.assert_array_equal(
+                row_reduce_shuffle(x, jnp.maximum),
+                jnp.max(x, axis=-1, keepdims=True))
+
+    def test_fold_rows_shape_and_value(self):
+        x = jnp.ones((2, 3 * LANES))
+        acc = fold_rows(x)
+        assert acc.shape == (2, LANES)
+        np.testing.assert_array_equal(acc, jnp.full((2, LANES), 3.0))
+
+
+class TestPipelinePlan:
+    def test_occupancy_algebra(self):
+        """O = floor(S / (n_buffers × block_bytes)) — Eq. 1 rederived."""
+        plan = plan_row_pipeline(1 << 20, 512, mode="native", n_buffers=2)
+        assert plan.occupancy == TARGET.S // (2 * plan.block_bytes)
+        assert plan.occupancy >= 2          # min_occupancy honored
+
+    def test_block_cap_and_grid_cover(self):
+        plan = plan_row_pipeline(1000, 512, mode="native",
+                                 max_block_rows=64)
+        assert plan.block_rows <= 64
+        assert plan.grid[0] * plan.block_rows == plan.padded_rows
+        assert plan.padded_rows >= 1000
+
+    def test_small_inputs_do_not_overpad(self):
+        plan = plan_row_pipeline(5, 512, mode="abstract")
+        assert plan.padded_rows == 8        # one sublane granule
+
+    def test_pow2_blocks(self):
+        plan = plan_row_pipeline(24, 512, mode="abstract",
+                                 max_block_rows=32, pow2_blocks=True)
+        assert plan.block_rows & (plan.block_rows - 1) == 0
+
+    def test_native_only_gets_pipeline_annotations(self):
+        nat = plan_row_pipeline(1024, 512, mode="native")
+        abs_ = plan_row_pipeline(1024, 512, mode="abstract")
+        shf = plan_row_pipeline(1024, 512, mode="abstract+shuffle")
+        assert nat.compiler_params is not None
+        assert abs_.compiler_params is None and shf.compiler_params is None
+
+
+class TestScratchTrafficDeltas:
+    """Acceptance: each rewritten kernel reports ZERO scratch round-trips
+    in abstract+shuffle mode and a positive count in abstract mode."""
+
+    def test_rmsnorm(self):
+        from repro.kernels.rmsnorm import structural_cost
+        c_abs = structural_cost(4096, 4096, "abstract")
+        c_shf = structural_cost(4096, 4096, "abstract+shuffle")
+        c_nat = structural_cost(4096, 4096, "native")
+        assert c_shf["scratch_round_trips_per_block"] == 0
+        assert c_shf["scratch_bytes_total"] == 0
+        assert c_shf["lane_shuffles_per_block"] == tree_stages(LANES)
+        assert c_abs["scratch_round_trips_per_block"] > 0
+        assert c_abs["scratch_bytes_total"] > 0
+        assert c_nat["scratch_round_trips_per_block"] == 0
+        assert c_abs["hbm_bytes"] == c_shf["hbm_bytes"]   # only delta: scratch
+
+    def test_attention(self):
+        from repro.kernels.attention import structural_cost
+        args = (1, 8, 4096, 4096, 128, True)
+        c_abs = structural_cost(*args, "abstract")
+        c_shf = structural_cost(*args, "abstract+shuffle")
+        assert c_shf["scratch_round_trips_per_block"] == 0
+        assert c_shf["scratch_bytes_total"] == 0
+        assert c_shf["lane_shuffles_per_block"] == 2 * tree_stages(LANES)
+        assert c_abs["scratch_round_trips_per_block"] == \
+            2 * tree_stages(LANES)                 # row-max + row-sum
+        assert c_abs["scratch_bytes_total"] > 0
+        # shuffle does not unlock grid-level block-skip (native feature)
+        assert c_shf["skip_fraction"] == 0.0
+
+    def test_histogram(self):
+        from repro.kernels.histogram import structural_cost
+        c_abs = structural_cost(1 << 24, 256, "abstract")
+        c_shf = structural_cost(1 << 24, 256, "abstract+shuffle")
+        assert c_shf["scratch_round_trips_per_block"] == 0
+        assert c_shf["scratch_bytes_total"] == 0
+        assert c_shf["lane_shuffles_per_block"] == tree_stages(LANES)
+        assert c_abs["scratch_round_trips_per_block"] > 0
+        assert c_abs["scratch_bytes_total"] > 0
+        # shuffle mode privatizes per sublane row, like native
+        assert c_shf["private_histograms_per_block"] > 1
+
+    def test_reduction_unchanged_mechanism(self):
+        from repro.kernels.reduction import structural_cost
+        c_abs = structural_cost(1 << 24, "abstract")
+        c_shf = structural_cost(1 << 24, "abstract+shuffle")
+        assert c_abs["scratch_round_trips_per_block"] == tree_stages(LANES)
+        assert c_shf["scratch_round_trips_per_block"] == 0
+
+    def test_cost_vocabulary(self):
+        assert tree_stages(128) == 7
+        assert scratch_tree_bytes(128) == sum(
+            3 * (128 >> k) * 4 for k in range(1, 8))
+        with pytest.raises(ValueError):
+            tree_stages(100)
+
+
+class TestShuffleModeEquivalence:
+    """Acceptance: abstract+shuffle numerically matches the library
+    reference at atol <= 1e-5 (histogram: exact)."""
+
+    @pytest.mark.parametrize("shape", [(4, 128), (2, 7, 256), (16, 384)])
+    def test_rmsnorm(self, shape):
+        kx, kw = jax.random.split(KEY)
+        x = jax.random.normal(kx, shape, jnp.float32)
+        w = jax.random.normal(kw, (shape[-1],), jnp.float32) + 1.0
+        want = ops.rmsnorm(x, w, mode="library")
+        for mode in ("abstract", "abstract+shuffle", "native"):
+            got = ops.rmsnorm(x, w, mode=mode)
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("sq,skv,hkv", [(128, 128, 4), (200, 328, 2)])
+    def test_attention(self, sq, skv, hkv):
+        kq, kk, kv = jax.random.split(KEY, 3)
+        q = jax.random.normal(kq, (1, 4, sq, 64), jnp.float32)
+        k = jax.random.normal(kk, (1, hkv, skv, 64), jnp.float32)
+        v = jax.random.normal(kv, (1, hkv, skv, 64), jnp.float32)
+        want = ops.flash_attention(q, k, v, causal=True, mode="library")
+        for mode in ("abstract", "abstract+shuffle", "native"):
+            got = ops.flash_attention(q, k, v, causal=True, mode=mode,
+                                      block_q=128, block_kv=128)
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("n", [4096, 50000])
+    def test_histogram(self, n):
+        vals = jax.random.randint(KEY, (n,), -3, 260, jnp.int32)
+        want = np.asarray(ops.histogram(vals, 256, mode="library"))
+        for mode in ("abstract", "abstract+shuffle", "native"):
+            got = np.asarray(ops.histogram(vals, 256, mode=mode))
+            np.testing.assert_array_equal(got, want)
+
+    def test_reduction(self):
+        x = jax.random.normal(KEY, (70001,), jnp.float32)
+        want = ops.reduce_sum(x, mode="library")
+        got = ops.reduce_sum(x, mode="abstract+shuffle")
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
