@@ -34,18 +34,20 @@ except ModuleNotFoundError:  # `python benchmarks/bench_kernels.py`
     sys.path.insert(0, os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))))
     from benchmarks.common import fmt_table, time_fn
+from repro.core.registry import REGISTRY
 from repro.kernels import ops
 
 KEY = jax.random.PRNGKey(0)
 
-#: modes per kernel (gemm's cross-lane stage is the MXU contraction
-#: itself, so shuffle does not participate — see ops.matmul)
-FULL_MODES = ("abstract", "abstract+shuffle", "native", "library")
-GEMM_MODES = ("abstract", "native", "library")
-
 
 def _cases(quick: bool):
-    """(kernel, modes, make_args, run, cost) table for both sizings."""
+    """(kernel, run, shape) table for both sizings.
+
+    The mode axis of the matrix is NOT listed here: it is enumerated from
+    the lowering registry (each kernel's registered variants), so a newly
+    registered variant shows up in the matrix without touching this file —
+    and gemm's lack of a shuffle row falls out of its registration rather
+    than a hardcoded mode list."""
     ks = jax.random.split(KEY, 8)
     if quick:
         n_red, rows_rms, d_rms = 1 << 15, 64, 256
@@ -70,28 +72,25 @@ def _cases(quick: bool):
     a_g = jax.random.normal(ks[7], (m, k), jnp.float32)
     b_g = jax.random.normal(ks[0], (k, n), jnp.float32)
 
-    from repro.kernels import (attention as _attn, gemm as _gemm,
-                               histogram as _hist, reduction as _red,
-                               rmsnorm as _rms)
     cases = [
-        ("reduction", FULL_MODES,
+        ("reduction",
          lambda mode: ops.reduce_sum(x_red, mode=mode),
-         lambda mode: _red.structural_cost(n_red, mode)),
-        ("rmsnorm", FULL_MODES,
+         dict(n=n_red)),
+        ("rmsnorm",
          lambda mode: ops.rmsnorm(x_rms, w_rms, mode=mode),
-         lambda mode: _rms.structural_cost(rows_rms, d_rms, mode)),
-        ("histogram", FULL_MODES,
+         dict(rows=rows_rms, d=d_rms)),
+        ("histogram",
          lambda mode: ops.histogram(v_hist, bins, mode=mode),
-         lambda mode: _hist.structural_cost(n_hist, bins, mode)),
-        ("flash_attention", FULL_MODES,
+         dict(n=n_hist, num_bins=bins)),
+        ("flash_attention",
          lambda mode: ops.flash_attention(q, kk, vv, causal=True,
                                           mode=mode, block_q=blk,
                                           block_kv=blk),
-         lambda mode: _attn.structural_cost(b, h, s, s, hd, True, mode,
-                                            block_q=blk, block_kv=blk)),
-        ("gemm", GEMM_MODES,
+         dict(b=b, h=h, sq=s, skv=s, d=hd, causal=True,
+              block_q=blk, block_kv=blk)),
+        ("gemm",
          lambda mode: ops.matmul(a_g, b_g, mode=mode),
-         lambda mode: _gemm.structural_cost(m, n, k, mode)),
+         dict(m=m, n=n, k=k)),
     ]
     return cases, warmup, iters
 
@@ -99,11 +98,11 @@ def _cases(quick: bool):
 def run(quick: bool = False, out: str = "BENCH_kernels.json") -> dict:
     cases, warmup, iters = _cases(quick)
     rows = []
-    for kernel, modes, fn, cost_fn in cases:
-        for mode in modes:
+    for kernel, fn, shape in cases:
+        for mode in REGISTRY.modes(kernel):
             timing = time_fn(lambda mode=mode, fn=fn: fn(mode),
                              warmup=warmup, iters=iters)
-            cost = cost_fn(mode)
+            cost = dict(REGISTRY.structural_cost(kernel, mode, **shape))
             rows.append({
                 "kernel": kernel,
                 "mode": mode,
@@ -130,6 +129,9 @@ def run(quick: bool = False, out: str = "BENCH_kernels.json") -> dict:
             "quick": quick,
             "jax": jax.__version__,
             "python": platform.python_version(),
+            # the mode axis comes from registry enumeration, not a list
+            "matrix": {op: list(REGISTRY.modes(op))
+                       for op in REGISTRY.ops()},
         },
         "rows": rows,
     }

@@ -1,0 +1,97 @@
+"""CI contract-drift guard: validate the lowering registry on every dialect.
+
+Imports the registry (which installs every kernel variant,
+contract-checked) and asserts, without needing a TPU:
+
+1. every registered contract names its own op and mode (no drift) and
+   validates on the dialect it targets;
+2. for every (op, mode, dialect) the registry's ``legal`` verdict agrees
+   with ``validate_contract`` — native lowerings pinned to their target;
+3. an ``ExecutionPolicy("auto")`` resolves a legal lowering for every op
+   on every registered dialect, including the no-shuffle universal-10
+   profile (library escape only where no portable variant is legal).
+
+  PYTHONPATH=src python scripts/validate_contracts.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+import warnings
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.core import (DIALECTS, ExecutionPolicy, IsaMode,  # noqa: E402
+                        LoweringFallbackWarning, REGISTRY, TARGET,
+                        validate_contract)
+from repro.core.primitives import ContractViolation  # noqa: E402
+from repro.kernels.ops import PROBE_SHAPES  # noqa: E402 (installs registry)
+
+
+def main() -> int:
+    failures = []
+    checked = 0
+    missing = [op for op in REGISTRY.ops() if op not in PROBE_SHAPES]
+    if missing:
+        failures.append(
+            f"ops with no PROBE_SHAPES row (add one in "
+            f"repro/kernels/ops.py): {missing}")
+    for op in REGISTRY.ops():
+        for mode in REGISTRY.modes(op):
+            low = REGISTRY.variant(op, mode)
+            c = low.contract
+            if c.kernel != op or c.mode is not IsaMode(mode):
+                failures.append(f"{op}[{mode}]: contract drift "
+                                f"({c.kernel}[{c.mode.value}])")
+            try:
+                validate_contract(
+                    c, TARGET if low.target is None
+                    else DIALECTS[low.target])
+            except ContractViolation as e:
+                failures.append(f"{op}[{mode}] invalid on its own "
+                                f"target: {e}")
+            for dialect in DIALECTS.values():
+                checked += 1
+                legal = REGISTRY.legal(op, mode, dialect)
+                if low.target is not None and low.target != dialect.name:
+                    if legal:
+                        failures.append(
+                            f"{op}[{mode}] target-pinned to {low.target} "
+                            f"but reported legal on {dialect.name}")
+                    continue
+                try:
+                    validate_contract(c, dialect)
+                    expect = True
+                except ContractViolation:
+                    expect = False
+                if legal != expect:
+                    failures.append(
+                        f"{op}[{mode}] on {dialect.name}: registry says "
+                        f"legal={legal}, validate_contract says {expect}")
+    # auto resolvability everywhere
+    for dialect in DIALECTS.values():
+        pol = ExecutionPolicy(mode="auto", dialect=dialect.name)
+        for op in REGISTRY.ops():
+            try:
+                with warnings.catch_warnings():
+                    warnings.simplefilter("ignore",
+                                          LoweringFallbackWarning)
+                    low = REGISTRY.select(op, pol,
+                                          shape=PROBE_SHAPES.get(op, {}))
+            except Exception as e:            # noqa: BLE001
+                failures.append(f"auto({op}, {dialect.name}) failed: {e}")
+                continue
+            print(f"auto {dialect.name:18s} {op:16s} -> {low.mode.value}")
+    if failures:
+        print(f"\nFAIL: {len(failures)} contract-drift findings")
+        for f in failures:
+            print("  -", f)
+        return 1
+    print(f"\nOK: {len(REGISTRY.ops())} ops x {len(DIALECTS)} dialects "
+          f"({checked} contract/legality checks) all consistent")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -8,9 +8,12 @@
 - :mod:`repro.core.mapping` — Fig. 3 mapping reports.
 - :mod:`repro.core.shuffle` — primitive 11 as a first-class API (§VII.C).
 - :mod:`repro.core.pipeline` — shared multi-buffer staging plans (Eq. 1).
+- :mod:`repro.core.registry` — dialect-aware lowering registry + execution
+  policy (Table V dispatch as a subsystem).
 """
 from repro.core.dialect import (Dialect, DIALECTS, TARGET, TPU_V5E,
-                                get_dialect, gpu_dialects, mxu_align, align_up)
+                                UISA_UNIVERSAL10, get_dialect, gpu_dialects,
+                                mxu_align, align_up)
 from repro.core.primitives import (Primitive, IsaMode, KernelContract,
                                    ContractViolation, validate_contract,
                                    UNIVERSAL_SET, UNIVERSAL_PLUS_SHUFFLE,
@@ -27,9 +30,15 @@ from repro.core.shuffle import (lane_shuffle_down, lane_shuffle_up,
                                 scratch_tree_reduce, tree_stages,
                                 scratch_tree_bytes)
 from repro.core.pipeline import PipelinePlan, plan_row_pipeline, pad_rows
+from repro.core.registry import (AUTO_POLICY, DEFAULT_POLICY, ExecutionPolicy,
+                                 LIBRARY_POLICY, Lowering,
+                                 LoweringFallbackWarning, LoweringRegistry,
+                                 REGISTRY, UnsupportedLowering,
+                                 current_policy, resolve_policy, use_policy)
 
 __all__ = [
-    "Dialect", "DIALECTS", "TARGET", "TPU_V5E", "get_dialect", "gpu_dialects",
+    "Dialect", "DIALECTS", "TARGET", "TPU_V5E", "UISA_UNIVERSAL10",
+    "get_dialect", "gpu_dialects",
     "mxu_align", "align_up", "Primitive", "IsaMode", "KernelContract",
     "ContractViolation", "validate_contract", "UNIVERSAL_SET",
     "UNIVERSAL_PLUS_SHUFFLE", "SPECS", "Classification", "LaunchGeometry",
@@ -39,4 +48,7 @@ __all__ = [
     "lane_shuffle_up", "lane_shuffle_xor", "lane_tree_reduce", "fold_rows",
     "row_reduce_shuffle", "scratch_tree_reduce", "tree_stages",
     "scratch_tree_bytes", "PipelinePlan", "plan_row_pipeline", "pad_rows",
+    "AUTO_POLICY", "DEFAULT_POLICY", "ExecutionPolicy", "LIBRARY_POLICY",
+    "Lowering", "LoweringFallbackWarning", "LoweringRegistry", "REGISTRY",
+    "UnsupportedLowering", "current_policy", "resolve_policy", "use_policy",
 ]

@@ -229,8 +229,33 @@ TPU_V5E = Dialect(
     notes="systolic+VLIW; latency hidden by async DMA buffers, not waves.",
 )
 
+# The paper's pre-§VII.C counterfactual: the ten-invariant universal
+# profile WITHOUT primitive 11 (and without HW atomics — the conservative
+# minimum every vendor satisfies).  Registered so the lowering registry can
+# be exercised against a target where the shuffle budget is illegal and the
+# scratch-tree lowering is the only legal cross-lane realization.
+UISA_UNIVERSAL10 = Dialect(
+    name="uisa-universal10",
+    vendor="UISA",
+    wave_width=(32,),
+    max_regs_per_thread=128,
+    scratchpad_bytes=48 * 1024,
+    regfile_bytes_per_core=64 * 1024,
+    max_workgroup=256,
+    named_barriers=1,
+    native_fp64=False,
+    memory_levels=("reg", "scratch", "DRAM"),
+    divergence_mechanism="abstract (vendor-managed)",
+    matrix_unit=None,
+    has_hw_atomics=False,
+    has_lane_shuffle=False,
+    notes="hypothetical minimum universal profile (paper §V, before the "
+          "§VII.C shuffle finding promoted primitive 11 to mandatory)",
+)
+
 DIALECTS: Dict[str, Dialect] = {
-    d.name: d for d in (NVIDIA_SM89, AMD_RDNA3, INTEL_XE_HPG, APPLE_G13, TPU_V5E)
+    d.name: d for d in (NVIDIA_SM89, AMD_RDNA3, INTEL_XE_HPG, APPLE_G13,
+                        TPU_V5E, UISA_UNIVERSAL10)
 }
 
 #: the dialect every kernel in this framework is compiled against

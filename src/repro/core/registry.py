@@ -1,0 +1,343 @@
+"""Dialect-aware lowering registry + execution policy (the Table V dispatch).
+
+The paper's central mechanism is that programs never hardcode vendor
+parameters — they query a dialect and the runtime picks the legal lowering.
+This module is that mechanism as a subsystem:
+
+- Every kernel variant registers a :class:`Lowering` —
+  ``(op, IsaMode, KernelContract, structural_cost, impl)`` — and is
+  contract-checked **at registration time** (a variant whose primitive
+  budget is out of contract cannot even be installed).
+- An :class:`ExecutionPolicy` (dialect, mode preference or ``"auto"``,
+  interpret flag) is resolved once per model/run and threaded through the
+  layers above the kernels; every norm/attention/reduce hot spot routes
+  through :meth:`LoweringRegistry.select` instead of per-call-site mode
+  strings.
+- ``"auto"`` selects the cheapest registered variant whose contract is
+  legal for the active dialect, ranked by the kernel's own
+  ``structural_cost`` model (scratch traffic first — the §VII.C currency),
+  falling back to the jnp ``library`` reference only when no Pallas
+  lowering is legal (e.g. a shuffle-only op on a ``has_lane_shuffle=False``
+  dialect).
+- Unsupported modes are handled by **declared fallbacks** (e.g. GEMM has
+  no shuffle variant: the MXU contraction *is* its cross-lane stage), which
+  warn and are recorded in :attr:`LoweringRegistry.fallback_events` — never
+  by silent rewrites.
+
+Native lowerings are *pinned* to the dialect they were built against
+(their ``native_features`` are that target's feature set), so under a
+foreign dialect only the portable budgets compete — the paper's Table V
+discipline as runtime behavior.
+"""
+from __future__ import annotations
+
+import collections
+import contextlib
+import contextvars
+import dataclasses
+import warnings
+from typing import Callable, Dict, Mapping, Optional, Tuple
+
+from repro.core.dialect import Dialect, TARGET, get_dialect
+from repro.core.primitives import (ContractViolation, IsaMode,
+                                   KernelContract, validate_contract)
+
+#: the mode strings a policy may request, beyond the IsaMode values
+AUTO = "auto"
+POLICY_MODES = tuple(m.value for m in IsaMode) + (AUTO,)
+
+#: stable cheapness tiebreak: smaller primitive budget wins a cost tie,
+#: the library escape hatch never wins one.
+_PORTABILITY = {IsaMode.ABSTRACT: 0, IsaMode.ABSTRACT_SHUFFLE: 1,
+                IsaMode.NATIVE: 2, IsaMode.LIBRARY: 3}
+
+
+class UnsupportedLowering(RuntimeError):
+    """Requested a lowering the registry cannot legally provide."""
+
+
+class LoweringFallbackWarning(UserWarning):
+    """A declared fallback (or the auto library escape) was taken."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPolicy:
+    """How the layers above the kernels want their hot spots lowered.
+
+    ``mode`` is an :class:`IsaMode` value or ``"auto"``; ``dialect`` names
+    the target whose legality rules apply; ``interpret`` overrides the
+    Pallas interpret default (None = backend-derived).  ``kernel_mode``
+    optionally overrides ``mode`` for explicitly kernel-routed paths (the
+    ``use_pallas_attn`` flash hot spot keeps its target-native variant
+    while model norms default to the XLA library lowering).
+    """
+
+    mode: str = AUTO
+    dialect: str = TARGET.name
+    interpret: Optional[bool] = None
+    kernel_mode: Optional[str] = None
+
+    def __post_init__(self):
+        for m in (self.mode, self.kernel_mode):
+            if m is not None and m not in POLICY_MODES:
+                raise ValueError(
+                    f"unknown isa mode {m!r}; valid: {POLICY_MODES}")
+
+    def resolved_dialect(self) -> Dialect:
+        return get_dialect(self.dialect)
+
+    def kernel(self) -> "ExecutionPolicy":
+        """The policy for kernel-routed hot spots (flash attention)."""
+        if self.kernel_mode is None or self.kernel_mode == self.mode:
+            return self
+        return dataclasses.replace(self, mode=self.kernel_mode,
+                                   kernel_mode=None)
+
+
+#: seed-equivalent defaults: bare kernel-API calls keep the target-native
+#: variant; model-level norms keep the XLA library lowering.
+DEFAULT_POLICY = ExecutionPolicy(mode=IsaMode.NATIVE.value)
+LIBRARY_POLICY = ExecutionPolicy(mode=IsaMode.LIBRARY.value)
+AUTO_POLICY = ExecutionPolicy(mode=AUTO)
+
+_policy_var: contextvars.ContextVar[Optional[ExecutionPolicy]] = \
+    contextvars.ContextVar("uisa_execution_policy", default=None)
+
+
+def current_policy() -> Optional[ExecutionPolicy]:
+    """The ambient policy installed by :func:`use_policy`, if any."""
+    return _policy_var.get()
+
+
+@contextlib.contextmanager
+def use_policy(policy: ExecutionPolicy):
+    """Install ``policy`` as the ambient default for the dynamic extent.
+
+    Read at *trace* time: code already jitted under a different policy
+    keeps its traced lowering (policies are resolved once, not per call).
+    """
+    token = _policy_var.set(policy)
+    try:
+        yield policy
+    finally:
+        _policy_var.reset(token)
+
+
+def resolve_policy(mode=None, policy: Optional[ExecutionPolicy] = None,
+                   default: ExecutionPolicy = DEFAULT_POLICY
+                   ) -> ExecutionPolicy:
+    """One resolution point: explicit mode > explicit policy > ambient >
+    ``default``.  A ``mode`` override keeps the rest of the resolved
+    policy (dialect, interpret) — the legality check must still run
+    against the caller's dialect, not silently revert to the target."""
+    base = policy or current_policy() or default
+    if mode is not None:
+        if isinstance(mode, IsaMode):
+            mode = mode.value
+        return dataclasses.replace(base, mode=mode, kernel_mode=None)
+    return base
+
+
+@dataclasses.dataclass(frozen=True)
+class Lowering:
+    """One registered realization of an abstract op."""
+
+    op: str
+    mode: IsaMode
+    impl: Callable
+    contract: KernelContract
+    cost: Optional[Callable[..., Mapping]] = None
+    #: dialect a native lowering is pinned to (its native_features are that
+    #: target's feature set); portable lowerings carry None
+    target: Optional[str] = None
+
+    def structural_cost(self, **shape) -> Mapping:
+        return self.cost(**shape) if self.cost is not None else {}
+
+
+@dataclasses.dataclass(frozen=True)
+class Fallback:
+    op: str
+    missing: IsaMode
+    to: IsaMode
+    reason: str
+
+
+@dataclasses.dataclass(frozen=True)
+class FallbackEvent:
+    op: str
+    requested: str
+    used: str
+    reason: str
+
+
+def cost_key(cost: Mapping, mode: IsaMode) -> Tuple:
+    """Cheapness ranking for auto selection.
+
+    Scratch traffic is the §VII.C currency, round trips its latency proxy,
+    HBM bytes the bandwidth term; the primitive-budget rank breaks ties in
+    favor of the more portable variant (so abstract+shuffle beats native
+    when both model to zero scratch)."""
+    return (cost.get("scratch_bytes_total", 0),
+            cost.get("scratch_round_trips_per_block", 0),
+            cost.get("hbm_bytes", 0),
+            _PORTABILITY[mode])
+
+
+class LoweringRegistry:
+    """op -> {IsaMode -> Lowering}, plus declared fallbacks + event log."""
+
+    #: retained fallback events — bounded so a long-lived serving process
+    #: whose policy takes a fallback on every retrace cannot grow it
+    EVENT_LOG_MAXLEN = 256
+
+    def __init__(self):
+        self._variants: Dict[str, Dict[IsaMode, Lowering]] = {}
+        self._fallbacks: Dict[Tuple[str, IsaMode], Fallback] = {}
+        self.fallback_events: "collections.deque[FallbackEvent]" = \
+            collections.deque(maxlen=self.EVENT_LOG_MAXLEN)
+
+    # ---- registration (contract-checked) ----
+
+    def register(self, op: str, mode, impl: Callable, *,
+                 contract: Optional[KernelContract] = None,
+                 cost: Optional[Callable[..., Mapping]] = None,
+                 target: Optional[str] = None,
+                 override: bool = False) -> Lowering:
+        """Install a variant.  Raises :class:`ContractViolation` when the
+        declared contract is out of budget, drifted (wrong op/mode), or
+        illegal on its own target dialect."""
+        mode = IsaMode(mode)
+        if contract is None:
+            if mode is not IsaMode.LIBRARY:
+                raise ContractViolation(
+                    f"{op} [{mode.value}]: non-library lowerings must "
+                    f"declare a KernelContract")
+            # the XLA-native op: no Pallas primitive budget to police
+            contract = KernelContract(kernel=op, mode=IsaMode.LIBRARY,
+                                      primitives=frozenset())
+        if contract.kernel != op or contract.mode is not mode:
+            raise ContractViolation(
+                f"contract drift: registering {op} [{mode.value}] with a "
+                f"contract for {contract.kernel} [{contract.mode.value}]")
+        if contract.native_features and target is None:
+            target = TARGET.name
+        validate_contract(contract,
+                          TARGET if target is None else get_dialect(target))
+        variants = self._variants.setdefault(op, {})
+        if mode in variants and not override:
+            raise ValueError(f"{op} [{mode.value}] already registered")
+        low = Lowering(op=op, mode=mode, impl=impl, contract=contract,
+                       cost=cost, target=target)
+        variants[mode] = low
+        return low
+
+    def declare_fallback(self, op: str, missing, to, reason: str) -> None:
+        """Declare that requesting ``missing`` for ``op`` legally lowers to
+        ``to`` — the explicit replacement for silent mode rewrites."""
+        missing, to = IsaMode(missing), IsaMode(to)
+        self._fallbacks[(op, missing)] = Fallback(op, missing, to, reason)
+
+    def unregister(self, op: str, mode=None) -> None:
+        if mode is None:
+            self._variants.pop(op, None)
+            for key in [k for k in self._fallbacks if k[0] == op]:
+                del self._fallbacks[key]
+        else:
+            self._variants.get(op, {}).pop(IsaMode(mode), None)
+
+    # ---- introspection (drives benchmarks and CI validation) ----
+
+    def ops(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._variants))
+
+    def modes(self, op: str) -> Tuple[str, ...]:
+        """Registered mode strings in canonical (portability) order."""
+        modes = sorted(self._variants[op], key=_PORTABILITY.__getitem__)
+        return tuple(m.value for m in modes)
+
+    def variant(self, op: str, mode) -> Lowering:
+        try:
+            return self._variants[op][IsaMode(mode)]
+        except KeyError:
+            raise UnsupportedLowering(
+                f"{op} has no registered {mode!r} lowering") from None
+
+    def contracts(self, op: str) -> Tuple[KernelContract, ...]:
+        modes = sorted(self._variants[op], key=_PORTABILITY.__getitem__)
+        return tuple(self._variants[op][m].contract for m in modes)
+
+    def structural_cost(self, op: str, mode, **shape) -> Mapping:
+        return self.variant(op, mode).structural_cost(**shape)
+
+    def fallback_for(self, op: str, mode) -> Optional[Fallback]:
+        return self._fallbacks.get((op, IsaMode(mode)))
+
+    # ---- legality ----
+
+    def legal(self, op: str, mode, dialect: Dialect) -> bool:
+        """Table V legality of a registered variant under ``dialect``."""
+        low = self._variants[op].get(IsaMode(mode))
+        if low is None:
+            return False
+        if low.target is not None and low.target != dialect.name:
+            return False          # native lowerings are target-pinned
+        try:
+            validate_contract(low.contract, dialect)
+            return True
+        except ContractViolation:
+            return False
+
+    # ---- the dispatch point ----
+
+    def select(self, op: str, policy: Optional[ExecutionPolicy] = None,
+               shape: Optional[Mapping] = None) -> Lowering:
+        """Resolve policy -> one legal Lowering (the single dispatch
+        point every call site above repro/kernels routes through)."""
+        policy = policy or current_policy() or DEFAULT_POLICY
+        dialect = policy.resolved_dialect()
+        try:
+            variants = self._variants[op]
+        except KeyError:
+            raise UnsupportedLowering(f"unknown op {op!r}; registered: "
+                                      f"{self.ops()}") from None
+        if policy.mode != AUTO:
+            mode = IsaMode(policy.mode)
+            if mode in variants and self.legal(op, mode, dialect):
+                return variants[mode]
+            fb = self._fallbacks.get((op, mode))
+            if fb is not None and fb.to in variants \
+                    and self.legal(op, fb.to, dialect):
+                self._record(op, mode.value, fb.to.value, fb.reason)
+                return variants[fb.to]
+            raise UnsupportedLowering(
+                f"{op} [{mode.value}] is not a legal lowering for dialect "
+                f"{dialect.name} and declares no fallback")
+        # auto: cheapest legal non-library variant by structural cost
+        candidates = [low for m, low in variants.items()
+                      if m is not IsaMode.LIBRARY
+                      and self.legal(op, m, dialect)]
+        if candidates:
+            shape = shape or {}
+            return min(candidates,
+                       key=lambda lo: cost_key(lo.structural_cost(**shape),
+                                               lo.mode))
+        library = variants.get(IsaMode.LIBRARY)
+        if library is not None:
+            self._record(op, AUTO, IsaMode.LIBRARY.value,
+                         f"no portable lowering legal for {dialect.name}")
+            return library
+        raise UnsupportedLowering(
+            f"{op}: no lowering legal for dialect {dialect.name} and no "
+            f"library reference registered")
+
+    def _record(self, op: str, requested: str, used: str,
+                reason: str) -> None:
+        event = FallbackEvent(op, requested, used, reason)
+        self.fallback_events.append(event)
+        warnings.warn(f"{op}: {requested} -> {used} ({reason})",
+                      LoweringFallbackWarning, stacklevel=3)
+
+
+#: the process-wide registry every kernel module installs its variants in
+REGISTRY = LoweringRegistry()

@@ -33,11 +33,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import (IsaMode, KernelContract, Primitive, TARGET,
-                        align_up, fold_rows, row_reduce_shuffle,
+from repro.core import (IsaMode, KernelContract, Primitive, REGISTRY,
+                        TARGET, align_up, fold_rows, row_reduce_shuffle,
                         scratch_tree_bytes, scratch_tree_reduce,
                         tree_stages, validate_contract)
 from repro.core.pipeline import CompilerParams
+from repro.kernels import ref as _ref
 
 NEG_INF = -1e30  # finite sentinel: keeps exp() NaN-free on fully-masked rows
 LANES = TARGET.W
@@ -260,3 +261,23 @@ def structural_cost(b: int, h: int, sq: int, skv: int, d: int,
         "scratch_bytes_total": scratch_bytes,
         "lane_shuffles_per_block": shuffles,
     }
+
+
+def _library_attention(q, k, v, *, causal: bool = True,
+                       kv_offset=None, interpret=None,
+                       block_q: int = 256, block_kv: int = 256):
+    """XLA-native reference (the cuBLAS-analogue row of Table V)."""
+    del kv_offset, interpret, block_q, block_kv   # library: XLA decides
+    return _ref.attention(q, k, v, causal=causal)
+
+
+# Registry: the compound hot-spot carries the full mode matrix.
+for _mode, _contract in (("abstract", ABSTRACT_CONTRACT),
+                         ("abstract+shuffle", SHUFFLE_CONTRACT),
+                         ("native", NATIVE_CONTRACT)):
+    REGISTRY.register("flash_attention", _mode,
+                      functools.partial(flash_attention, mode=_mode),
+                      contract=_contract,
+                      cost=functools.partial(structural_cost, mode=_mode))
+REGISTRY.register("flash_attention", IsaMode.LIBRARY, _library_attention,
+                  cost=functools.partial(structural_cost, mode="library"))

@@ -30,8 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import (IsaMode, KernelContract, Primitive, TARGET,
-                        UNIVERSAL_SET, align_up, choose_block_bytes,
+from repro.core import (IsaMode, KernelContract, Primitive, REGISTRY,
+                        TARGET, UNIVERSAL_SET, align_up, choose_block_bytes,
                         validate_contract)
 from repro.core.pipeline import CompilerParams
 
@@ -182,3 +182,26 @@ def structural_cost(m: int, n: int, k: int, mode: str,
                         and bk % mxu_tile == 0),
         "vmem_working_set": (bm * bk + bk * bn) * itemsize + bm * bn * 4,
     }
+
+
+# --------------------------------------------------------------------------
+# Registry: contract-checked installation of every variant (Table V row 1).
+# The cross-lane stage of GEMM *is* the MXU contraction, so there is no
+# shuffle variant — requesting one takes the declared (recorded, warned)
+# fallback instead of a silent rewrite.
+# --------------------------------------------------------------------------
+
+REGISTRY.register("gemm", IsaMode.ABSTRACT,
+                  functools.partial(gemm, mode="abstract"),
+                  contract=ABSTRACT_CONTRACT,
+                  cost=functools.partial(structural_cost, mode="abstract"))
+REGISTRY.register("gemm", IsaMode.NATIVE,
+                  functools.partial(gemm, mode="native"),
+                  contract=NATIVE_CONTRACT,
+                  cost=functools.partial(structural_cost, mode="native"))
+REGISTRY.register("gemm", IsaMode.LIBRARY,
+                  functools.partial(gemm, mode="library"),
+                  cost=functools.partial(structural_cost, mode="library"))
+REGISTRY.declare_fallback(
+    "gemm", IsaMode.ABSTRACT_SHUFFLE, IsaMode.ABSTRACT,
+    reason="lane shuffle does not participate in the MXU contraction")

@@ -35,8 +35,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import (IsaMode, KernelContract, Primitive, TARGET,
-                        lane_tree_reduce, plan_row_pipeline,
+from repro.core import (IsaMode, KernelContract, Primitive, REGISTRY,
+                        TARGET, lane_tree_reduce, plan_row_pipeline,
                         scratch_tree_bytes, scratch_tree_reduce,
                         tree_stages, validate_contract)
 
@@ -182,3 +182,16 @@ def structural_cost(n: int, num_bins: int, mode: str) -> dict:
         "lane_shuffles_per_block": tree_stages(LANES)
         if mode == "abstract+shuffle" else 0,
     }
+
+
+# Registry: all variants lower ATOMIC_RMW through privatize+reduce, which
+# the contracts encode (scratchpad+barrier companions) — validated on every
+# dialect the registry is asked about, including the no-atomics TPU.
+for _mode, _contract in (("abstract", ABSTRACT_CONTRACT),
+                         ("abstract+shuffle", SHUFFLE_CONTRACT),
+                         ("native", NATIVE_CONTRACT),
+                         ("library", None)):
+    REGISTRY.register("histogram", _mode,
+                      functools.partial(histogram, mode=_mode),
+                      contract=_contract,
+                      cost=functools.partial(structural_cost, mode=_mode))

@@ -1,34 +1,56 @@
-"""Public kernel API with ISA-mode dispatch — the Table V switchboard.
+"""Public kernel API — a thin compatibility shim over the lowering registry.
 
-Everything above this layer (models, train/serve steps) calls these
-wrappers; the active :class:`repro.core.IsaMode` decides which variant
-runs.  ``interpret`` defaults to True off-TPU so the same code path is
-exercised (and allclose-tested) on CPU; on a real TPU backend the Mosaic
-kernels compile natively.
+Importing this module installs every kernel variant in
+:data:`repro.core.registry.REGISTRY`; the wrappers here only derive the
+call's shape signature and hand dispatch to
+:meth:`~repro.core.registry.LoweringRegistry.select`.  Callers pick a
+lowering one of three ways, in precedence order:
 
-``ParallelConfig.use_pallas_attn`` gates whether models route their
-attention hot-spot through the Pallas flash kernel: the multi-pod
-dry-run lowers the pure-jnp chunked implementation (compilable for the
-CPU placeholder backend), while TPU execution and the kernel-equivalence
-tests use the Pallas path.  See DESIGN.md §2.
+1. ``mode=`` — kernel-layer compatibility (tests/benchmarks of a specific
+   variant).  Equivalent to an :class:`ExecutionPolicy` with that mode.
+2. ``policy=`` — an explicit :class:`ExecutionPolicy` threaded from the
+   layers above (models/train/serve resolve theirs once from config).
+3. ambient — a :func:`repro.core.registry.use_policy` context, else
+   :data:`DEFAULT_POLICY` (the target-native variant, the seed default).
+
+``interpret`` defaults to True off-TPU so the same code path is exercised
+(and allclose-tested) on CPU; on a real TPU backend the Mosaic kernels
+compile natively.  Unsupported mode requests follow *declared* registry
+fallbacks (warned + recorded) — see ``gemm``'s abstract+shuffle row —
+never silent rewrites.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import IsaMode
-from repro.kernels import attention as _attention
+from repro.core.registry import (DEFAULT_POLICY, ExecutionPolicy, REGISTRY,
+                                 resolve_policy)
+# importing the kernel modules installs their registry variants
+from repro.kernels import attention as _attention  # noqa: F401
 from repro.kernels import gemm as _gemm
 from repro.kernels import histogram as _histogram
 from repro.kernels import reduction as _reduction
 from repro.kernels import rmsnorm as _rmsnorm
 from repro.kernels import ref as ref  # noqa: F401 (re-export for tests)
 
+# Kernel-layer mode strings (the registry's POLICY_MODES additionally
+# accepts "auto"); kept for API compatibility with the seed switchboard.
 MODES = tuple(m.value for m in IsaMode)
+
+#: representative shapes per op for cost-ranked selection probes — shared
+#: by tests/test_registry.py and scripts/validate_contracts.py so the two
+#: cannot drift when an op is added (register the op, add its row here).
+PROBE_SHAPES = {
+    "gemm": dict(m=1024, n=1024, k=1024),
+    "reduction": dict(n=1 << 20),
+    "rmsnorm": dict(rows=1024, d=1024),
+    "histogram": dict(n=1 << 18, num_bins=256),
+    "flash_attention": dict(b=1, h=4, sq=1024, skv=1024, d=64, causal=True),
+}
 
 
 def default_interpret() -> bool:
@@ -36,59 +58,64 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _norm_mode(mode) -> str:
-    if isinstance(mode, IsaMode):
-        return mode.value
-    if mode not in MODES:
-        raise ValueError(f"unknown isa mode {mode!r}; valid: {MODES}")
-    return mode
+def _resolve(mode, policy, interpret):
+    pol = resolve_policy(mode, policy, DEFAULT_POLICY)
+    if interpret is None:
+        interpret = pol.interpret
+    if interpret is None:
+        interpret = default_interpret()
+    return pol, interpret
 
 
-def matmul(a: jax.Array, b: jax.Array, *, mode="native",
+def matmul(a: jax.Array, b: jax.Array, *, mode=None,
+           policy: Optional[ExecutionPolicy] = None,
            out_dtype=jnp.float32, interpret: Optional[bool] = None):
-    mode = _norm_mode(mode)
-    if mode == "abstract+shuffle":
-        mode = "abstract"  # shuffle does not participate in GEMM
-    interpret = default_interpret() if interpret is None else interpret
-    return _gemm.gemm(a, b, mode=mode, out_dtype=out_dtype,
-                      interpret=interpret)
+    pol, interpret = _resolve(mode, policy, interpret)
+    low = REGISTRY.select("gemm", pol, shape=dict(
+        m=a.shape[0], n=b.shape[1], k=a.shape[1], dtype=a.dtype))
+    return low.impl(a, b, out_dtype=out_dtype, interpret=interpret)
 
 
-def reduce_sum(x: jax.Array, *, mode="native",
+def reduce_sum(x: jax.Array, *, mode=None,
+               policy: Optional[ExecutionPolicy] = None,
                interpret: Optional[bool] = None):
-    mode = _norm_mode(mode)
-    interpret = default_interpret() if interpret is None else interpret
-    return _reduction.reduce_sum(x, mode=mode, interpret=interpret)
+    pol, interpret = _resolve(mode, policy, interpret)
+    low = REGISTRY.select("reduction", pol, shape=dict(n=x.size))
+    return low.impl(x, interpret=interpret)
 
 
-def histogram(values: jax.Array, num_bins: int = 256, *, mode="native",
+def histogram(values: jax.Array, num_bins: int = 256, *, mode=None,
+              policy: Optional[ExecutionPolicy] = None,
               interpret: Optional[bool] = None):
-    mode = _norm_mode(mode)
-    interpret = default_interpret() if interpret is None else interpret
-    # abstract+shuffle dispatches to the rotate-tree private merge
-    return _histogram.histogram(values, num_bins, mode=mode,
-                                interpret=interpret)
+    pol, interpret = _resolve(mode, policy, interpret)
+    low = REGISTRY.select("histogram", pol,
+                          shape=dict(n=values.size, num_bins=num_bins))
+    return low.impl(values, num_bins, interpret=interpret)
 
 
 def flash_attention(q, k, v, *, causal: bool = True,
-                    kv_offset: Optional[int] = None, mode="native",
+                    kv_offset: Optional[int] = None, mode=None,
+                    policy: Optional[ExecutionPolicy] = None,
                     interpret: Optional[bool] = None,
                     block_q: int = 256, block_kv: int = 256):
-    mode = _norm_mode(mode)
-    interpret = default_interpret() if interpret is None else interpret
-    if mode == "library":
-        return ref.attention(q, k, v, causal=causal)
-    return _attention.flash_attention(
-        q, k, v, causal=causal, kv_offset=kv_offset, mode=mode,
-        interpret=interpret, block_q=block_q, block_kv=block_kv)
+    pol, interpret = _resolve(mode, policy, interpret)
+    low = REGISTRY.select("flash_attention", pol, shape=dict(
+        b=q.shape[0], h=q.shape[1], sq=q.shape[2], skv=k.shape[2],
+        d=q.shape[3], causal=causal, block_q=block_q, block_kv=block_kv))
+    return low.impl(q, k, v, causal=causal, kv_offset=kv_offset,
+                    interpret=interpret, block_q=block_q, block_kv=block_kv)
 
 
-def rmsnorm(x, weight, *, eps: float = 1e-6, mode="native",
+def rmsnorm(x, weight, *, eps: float = 1e-6, mode=None,
+            policy: Optional[ExecutionPolicy] = None,
             interpret: Optional[bool] = None):
-    mode = _norm_mode(mode)
-    interpret = default_interpret() if interpret is None else interpret
-    return _rmsnorm.rmsnorm(x, weight, eps=eps, mode=mode,
-                            interpret=interpret)
+    pol, interpret = _resolve(mode, policy, interpret)
+    rows = 1
+    for s in x.shape[:-1]:
+        rows *= s
+    low = REGISTRY.select("rmsnorm", pol,
+                          shape=dict(rows=rows, d=x.shape[-1]))
+    return low.impl(x, weight, eps=eps, interpret=interpret)
 
 
 STRUCTURAL_COSTS = {
@@ -99,15 +126,11 @@ STRUCTURAL_COSTS = {
     "rmsnorm": _rmsnorm.structural_cost,
 }
 
+#: Pallas-variant contracts per op, in portability order (registry view;
+#: the library rows carry empty synthesized contracts and are omitted to
+#: keep the seed-era shape of this table).
 CONTRACTS = {
-    "gemm": (_gemm.ABSTRACT_CONTRACT, _gemm.NATIVE_CONTRACT),
-    "reduction": (_reduction.ABSTRACT_CONTRACT, _reduction.SHUFFLE_CONTRACT,
-                  _reduction.NATIVE_CONTRACT),
-    "histogram": (_histogram.ABSTRACT_CONTRACT, _histogram.SHUFFLE_CONTRACT,
-                  _histogram.NATIVE_CONTRACT),
-    "flash_attention": (_attention.ABSTRACT_CONTRACT,
-                        _attention.SHUFFLE_CONTRACT,
-                        _attention.NATIVE_CONTRACT),
-    "rmsnorm": (_rmsnorm.ABSTRACT_CONTRACT, _rmsnorm.SHUFFLE_CONTRACT,
-                _rmsnorm.NATIVE_CONTRACT),
+    op: tuple(c for c in REGISTRY.contracts(op)
+              if c.mode is not IsaMode.LIBRARY)
+    for op in REGISTRY.ops()
 }

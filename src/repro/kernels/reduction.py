@@ -32,10 +32,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import (IsaMode, KernelContract, Primitive, TARGET,
-                        lane_tree_reduce, pad_rows, plan_row_pipeline,
-                        scratch_tree_bytes, scratch_tree_reduce,
-                        tree_stages, validate_contract)
+from repro.core import (IsaMode, KernelContract, Primitive, REGISTRY,
+                        TARGET, lane_tree_reduce, pad_rows,
+                        plan_row_pipeline, scratch_tree_bytes,
+                        scratch_tree_reduce, tree_stages, validate_contract)
 
 LANES = TARGET.W          # 128 — queried, never assumed (Table III)
 _MAX_BLOCK_ROWS = 512     # latency/tail cap: 512x128 f32 = 256 KB per step
@@ -143,3 +143,14 @@ def structural_cost(n: int, mode: str, dtype=jnp.float32) -> dict:
         "block_rows": plan.block_rows,
         "pipeline_occupancy": plan.occupancy,
     }
+
+
+# Registry: the §VII.C kernel carries the full Table V mode matrix.
+for _mode, _contract in (("abstract", ABSTRACT_CONTRACT),
+                         ("abstract+shuffle", SHUFFLE_CONTRACT),
+                         ("native", NATIVE_CONTRACT),
+                         ("library", None)):
+    REGISTRY.register("reduction", _mode,
+                      functools.partial(reduce_sum, mode=_mode),
+                      contract=_contract,
+                      cost=functools.partial(structural_cost, mode=_mode))

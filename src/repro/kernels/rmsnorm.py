@@ -27,9 +27,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import (IsaMode, KernelContract, Primitive, TARGET,
-                        plan_row_pipeline, row_reduce_shuffle, fold_rows,
-                        scratch_tree_bytes, scratch_tree_reduce,
+from repro.core import (IsaMode, KernelContract, Primitive, REGISTRY,
+                        TARGET, plan_row_pipeline, row_reduce_shuffle,
+                        fold_rows, scratch_tree_bytes, scratch_tree_reduce,
                         tree_stages, validate_contract)
 
 LANES = TARGET.W
@@ -171,3 +171,16 @@ def structural_cost(rows: int, d: int, mode: str, dtype=jnp.float32) -> dict:
         "pipeline_occupancy": plan.occupancy,
         "fused_epilogue": mode in ("native", "library"),
     }
+
+
+# Registry: the library variant is the jnp path model norms used to call
+# directly — registering it here puts those call sites under Table V
+# dispatch instead of bypassing the kernel layer (ISSUE 2 satellite).
+for _mode, _contract in (("abstract", ABSTRACT_CONTRACT),
+                         ("abstract+shuffle", SHUFFLE_CONTRACT),
+                         ("native", NATIVE_CONTRACT),
+                         ("library", None)):
+    REGISTRY.register("rmsnorm", _mode,
+                      functools.partial(rmsnorm, mode=_mode),
+                      contract=_contract,
+                      cost=functools.partial(structural_cost, mode=_mode))

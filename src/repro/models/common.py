@@ -14,6 +14,8 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.registry import (ExecutionPolicy, LIBRARY_POLICY,
+                                 resolve_policy)
 from repro.parallel.sharding import ShardCtx, shard
 
 # --------------------------------------------------------------------------
@@ -34,16 +36,22 @@ def embed_init(key, shape, dtype=jnp.float32):
 
 
 # --------------------------------------------------------------------------
-# Norms / activations (jnp implementations; the fused Pallas RMSNorm is the
-# TPU-native execution path, selected in kernels/ops.py)
+# Norms / activations.  RMSNorm routes through the lowering registry
+# (core/registry.py): the pure-jnp path is the registered `library`
+# variant, so model norms no longer bypass the kernel layer — an
+# ExecutionPolicy of abstract/abstract+shuffle/native/auto selects the
+# corresponding Pallas lowering at every norm hot spot.
 # --------------------------------------------------------------------------
 
 
-def rmsnorm(x, weight, eps: float = 1e-6):
-    xf = x.astype(jnp.float32)
-    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
-    return ((xf * jax.lax.rsqrt(var + eps)) * weight.astype(jnp.float32)
-            ).astype(x.dtype)
+def rmsnorm(x, weight, eps: float = 1e-6,
+            policy: Optional[ExecutionPolicy] = None):
+    from repro.kernels import ops as kernel_ops
+    # explicit > ambient (use_policy) > the seed-equivalent XLA library
+    # lowering (what model norms always were)
+    return kernel_ops.rmsnorm(
+        x, weight, eps=eps,
+        policy=resolve_policy(policy=policy, default=LIBRARY_POLICY))
 
 
 def layernorm(x, weight, bias, eps: float = 1e-5):
@@ -55,9 +63,10 @@ def layernorm(x, weight, bias, eps: float = 1e-5):
             ).astype(x.dtype)
 
 
-def apply_norm(x, params, kind: str, eps: float):
+def apply_norm(x, params, kind: str, eps: float,
+               policy: Optional[ExecutionPolicy] = None):
     if kind == "rmsnorm":
-        return rmsnorm(x, params["scale"], eps)
+        return rmsnorm(x, params["scale"], eps, policy=policy)
     return layernorm(x, params["scale"], params["bias"], eps)
 
 

@@ -181,6 +181,29 @@ class ParallelConfig:
     # dry-run keeps the jnp path (compilable for the CPU placeholder
     # backend).
     use_pallas_attn: bool = False
+    # Lowering policy for every registry-dispatched hot spot (norms,
+    # reduce, attention kernel): an IsaMode value, "auto" (cheapest legal
+    # variant for isa_dialect, per structural_cost), or None for the
+    # seed-equivalent split — XLA library lowering for model norms, the
+    # target-native variant on the Pallas attention path.
+    isa_mode: Optional[str] = None
+    isa_dialect: Optional[str] = None   # defaults to the framework TARGET
+
+    def execution_policy(self):
+        """Resolve this config's ExecutionPolicy — the ONE place mode
+        strings are decided; call sites only thread the result."""
+        from repro.core.dialect import TARGET
+        from repro.core.registry import ExecutionPolicy
+        dialect = self.isa_dialect or TARGET.name
+        if self.isa_mode is not None:
+            return ExecutionPolicy(mode=self.isa_mode, dialect=dialect,
+                                   kernel_mode=self.isa_mode)
+        # Native lowerings are pinned to the framework TARGET; under a
+        # foreign dialect the kernel path must degrade to a legal variant
+        # ("auto") instead of requesting an unlowerable native kernel.
+        kernel_mode = "native" if dialect == TARGET.name else "auto"
+        return ExecutionPolicy(mode="library", dialect=dialect,
+                               kernel_mode=kernel_mode)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -87,30 +87,37 @@ def _cross_attend(params, x, k, v, cfg: ModelConfig, par: ParallelConfig,
 
 
 def dec_block_seq(params, x, memory_kv, cfg, par, positions, ctx,
-                  return_kv: bool = False):
-    h = common.apply_norm(x, params["ln1"], cfg.norm, cfg.norm_eps)
+                  return_kv: bool = False, policy=None):
+    h = common.apply_norm(x, params["ln1"], cfg.norm, cfg.norm_eps,
+                          policy=policy)
     if return_kv:
         a, kv = transformer.attn_seq(params["self_attn"], h, cfg, par,
-                                     positions, ctx, return_kv=True)
+                                     positions, ctx, return_kv=True,
+                                     policy=policy)
     else:
         a = transformer.attn_seq(params["self_attn"], h, cfg, par,
-                                 positions, ctx)
+                                 positions, ctx, policy=policy)
         kv = None
     x = x + a
-    h = common.apply_norm(x, params["ln2"], cfg.norm, cfg.norm_eps)
+    h = common.apply_norm(x, params["ln2"], cfg.norm, cfg.norm_eps,
+                          policy=policy)
     x = x + _cross_attend(params["cross_attn"], h, *memory_kv, cfg, par, ctx)
-    h = common.apply_norm(x, params["ln3"], cfg.norm, cfg.norm_eps)
+    h = common.apply_norm(x, params["ln3"], cfg.norm, cfg.norm_eps,
+                          policy=policy)
     x = x + mlp.apply_mlp(params["mlp"], h, cfg.act, ctx)
     x = shard(x, ("act_batch", "act_seq", "act_embed"), ctx)
     return (x, kv) if return_kv else x
 
 
-def dec_block_decode(params, x_t, memory_kv, cfg, kv_cache, pos, ctx):
-    h = common.apply_norm(x_t, params["ln1"], cfg.norm, cfg.norm_eps)
+def dec_block_decode(params, x_t, memory_kv, cfg, kv_cache, pos, ctx,
+                     policy=None):
+    h = common.apply_norm(x_t, params["ln1"], cfg.norm, cfg.norm_eps,
+                          policy=policy)
     a, kv_cache = transformer.attn_decode(params["self_attn"], h, cfg,
-                                          kv_cache, pos, ctx)
+                                          kv_cache, pos, ctx, policy=policy)
     x_t = x_t + a
-    h = common.apply_norm(x_t, params["ln2"], cfg.norm, cfg.norm_eps)
+    h = common.apply_norm(x_t, params["ln2"], cfg.norm, cfg.norm_eps,
+                          policy=policy)
     b = x_t.shape[0]
     hq, hd = cfg.num_heads, cfg.resolved_head_dim
     q = jnp.einsum("bsd,dh->bsh", h,
@@ -123,7 +130,8 @@ def dec_block_decode(params, x_t, memory_kv, cfg, kv_cache, pos, ctx):
     o = o.transpose(0, 2, 1, 3).reshape(b, 1, -1)
     x_t = x_t + jnp.einsum("bsh,hd->bsd", o,
                            params["cross_attn"]["wo"].astype(x_t.dtype))
-    h = common.apply_norm(x_t, params["ln3"], cfg.norm, cfg.norm_eps)
+    h = common.apply_norm(x_t, params["ln3"], cfg.norm, cfg.norm_eps,
+                          policy=policy)
     x_t = x_t + mlp.apply_mlp(params["mlp"], h, cfg.act, ctx)
     return x_t, kv_cache
 
@@ -132,9 +140,13 @@ class EncDecLM:
     """Whisper-family: scanned encoder + scanned decoder, stub frontend."""
 
     def __init__(self, cfg: ModelConfig, par: ParallelConfig,
-                 ctx: Optional[ShardCtx] = None):
+                 ctx: Optional[ShardCtx] = None, policy=None):
         assert cfg.encdec is not None
         self.cfg, self.par, self.ctx = cfg, par, ctx
+        self.policy = policy or par.execution_policy()
+
+    def with_policy(self, policy) -> "EncDecLM":
+        return type(self)(self.cfg, self.par, self.ctx, policy=policy)
 
     def _dtype(self):
         return jnp.dtype(self.cfg.dtype)
@@ -194,12 +206,13 @@ class EncDecLM:
         def body(h, layer_params):
             # non-causal self-attention (encoder)
             hn = common.apply_norm(h, layer_params["ln1"], cfg.norm,
-                                   cfg.norm_eps)
+                                   cfg.norm_eps, policy=self.policy)
             a = transformer.attn_seq(layer_params["attn"], hn, cfg, par,
-                                     positions, ctx, causal=False)
+                                     positions, ctx, causal=False,
+                                     policy=self.policy)
             h = h + a
             hn = common.apply_norm(h, layer_params["ln2"], cfg.norm,
-                                   cfg.norm_eps)
+                                   cfg.norm_eps, policy=self.policy)
             h = h + mlp.apply_mlp(layer_params["mlp"], hn, cfg.act, ctx)
             return h, None
 
@@ -208,7 +221,7 @@ class EncDecLM:
                 body, policy=jax.checkpoint_policies.nothing_saveable)
         x, _ = jax.lax.scan(body, x, params["enc_blocks"])
         return common.apply_norm(x, params["enc_norm"], cfg.norm,
-                                 cfg.norm_eps)
+                                 cfg.norm_eps, policy=self.policy)
 
     # ---- decoder ----
 
@@ -227,7 +240,7 @@ class EncDecLM:
     def _head(self, params, x):
         cfg = self.cfg
         x = common.apply_norm(x, params["final_norm"], cfg.norm,
-                              cfg.norm_eps)
+                              cfg.norm_eps, policy=self.policy)
         logits = jnp.einsum("bsd,vd->bsv", x,
                             params["embed"].astype(x.dtype))  # tied head
         return shard(logits.astype(jnp.float32),
@@ -242,10 +255,11 @@ class EncDecLM:
             mem_kv = _cross_kv(layer_params["cross_attn"], memory, cfg, ctx)
             if return_kv:
                 h, kv = dec_block_seq(layer_params, h, mem_kv, cfg, par,
-                                      positions, ctx, return_kv=True)
+                                      positions, ctx, return_kv=True,
+                                      policy=self.policy)
                 return h, kv
             h = dec_block_seq(layer_params, h, mem_kv, cfg, par, positions,
-                              ctx)
+                              ctx, policy=self.policy)
             return h, None
 
         if par.remat == "full":
@@ -308,7 +322,7 @@ class EncDecLM:
             layer_params, kv = layer
             mem_kv = _cross_kv(layer_params["cross_attn"], memory, cfg, ctx)
             h, new_kv = dec_block_decode(layer_params, h, mem_kv, cfg, kv,
-                                         pos, ctx)
+                                         pos, ctx, policy=self.policy)
             return h, new_kv
 
         x, new_kvs = jax.lax.scan(

@@ -13,6 +13,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.registry import ExecutionPolicy
 from repro.models import common, ssd, transformer
 from repro.models.config import ModelConfig, ParallelConfig
 from repro.parallel.sharding import ShardCtx, shard
@@ -20,10 +21,15 @@ from repro.parallel.sharding import ShardCtx, shard
 
 class HybridLM:
     def __init__(self, cfg: ModelConfig, par: ParallelConfig,
-                 ctx: Optional[ShardCtx] = None):
+                 ctx: Optional[ShardCtx] = None,
+                 policy: Optional[ExecutionPolicy] = None):
         assert cfg.ssm is not None and cfg.hybrid is not None
         self.cfg, self.par, self.ctx = cfg, par, ctx
+        self.policy = policy or par.execution_policy()
         self.n_apps = cfg.num_layers // cfg.hybrid.attn_every
+
+    def with_policy(self, policy: ExecutionPolicy) -> "HybridLM":
+        return type(self)(self.cfg, self.par, self.ctx, policy=policy)
 
     def _dtype(self):
         return jnp.dtype(self.cfg.dtype)
@@ -84,14 +90,16 @@ class HybridLM:
 
         def body(h, layer):
             lp, np_ = layer
-            hin = common.apply_norm(h, np_, cfg.norm, cfg.norm_eps)
+            hin = common.apply_norm(h, np_, cfg.norm, cfg.norm_eps,
+                                    policy=self.policy)
             if return_state:
                 out, st = ssd.apply_mamba_block(
                     lp, hin, cfg.ssm, cfg.d_model, cfg.norm_eps, ctx,
-                    return_state=True)
+                    return_state=True, policy=self.policy)
                 return h + out, st
             out = ssd.apply_mamba_block(lp, hin, cfg.ssm, cfg.d_model,
-                                        cfg.norm_eps, ctx)
+                                        cfg.norm_eps, ctx,
+                                        policy=self.policy)
             return h + out, None
 
         if par.remat == "full" and not return_state:
@@ -107,7 +115,7 @@ class HybridLM:
     def _head(self, params, x):
         cfg = self.cfg
         x = common.apply_norm(x, params["final_norm"], cfg.norm,
-                              cfg.norm_eps)
+                              cfg.norm_eps, policy=self.policy)
         logits = jnp.einsum("bsd,dv->bsv", x,
                             params["lm_head"].astype(x.dtype))
         return shard(logits.astype(jnp.float32),
@@ -129,11 +137,12 @@ class HybridLM:
             if collect_cache:
                 x, _, kv = transformer.block_seq(
                     params["shared_attn"], x, cfg, par, positions, ctx,
-                    return_kv=True)
+                    return_kv=True, policy=self.policy)
                 attn_kvs.append(kv)
             else:
                 x, _ = transformer.block_seq(params["shared_attn"], x, cfg,
-                                             par, positions, ctx)
+                                             par, positions, ctx,
+                                             policy=self.policy)
         if rem[1] > rem[0]:
             x, st = self._mamba_span(params, x, rem[0], rem[1],
                                      return_state=collect_cache)
@@ -211,10 +220,11 @@ class HybridLM:
 
             def body(h, layer):
                 lp, np_, st, cv = layer
-                hin = common.apply_norm(h, np_, cfg.norm, cfg.norm_eps)
+                hin = common.apply_norm(h, np_, cfg.norm, cfg.norm_eps,
+                                        policy=self.policy)
                 out, st, cv = ssd.mamba_decode_step(
                     lp, hin, cfg.ssm, cfg.d_model, cfg.norm_eps, st, cv,
-                    ctx)
+                    ctx, policy=self.policy)
                 return h + out, (st, cv)
             return jax.lax.scan(body, x, span)
 
@@ -224,7 +234,8 @@ class HybridLM:
             new_conv.append(cv)
             x2, kv = transformer.block_decode(
                 params["shared_attn"], x[:, None, :], cfg,
-                (cache["attn_k"][app], cache["attn_v"][app]), pos, ctx)
+                (cache["attn_k"][app], cache["attn_v"][app]), pos, ctx,
+                policy=self.policy)
             x = x2[:, 0, :]
             new_k.append(kv[0])
             new_v.append(kv[1])

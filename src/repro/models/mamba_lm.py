@@ -6,6 +6,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.registry import ExecutionPolicy
 from repro.models import common, ssd
 from repro.models.config import ModelConfig, ParallelConfig
 from repro.parallel.sharding import ShardCtx, shard
@@ -13,9 +14,14 @@ from repro.parallel.sharding import ShardCtx, shard
 
 class MambaLM:
     def __init__(self, cfg: ModelConfig, par: ParallelConfig,
-                 ctx: Optional[ShardCtx] = None):
+                 ctx: Optional[ShardCtx] = None,
+                 policy: Optional[ExecutionPolicy] = None):
         assert cfg.ssm is not None
         self.cfg, self.par, self.ctx = cfg, par, ctx
+        self.policy = policy or par.execution_policy()
+
+    def with_policy(self, policy: ExecutionPolicy) -> "MambaLM":
+        return type(self)(self.cfg, self.par, self.ctx, policy=policy)
 
     def _dtype(self):
         return jnp.dtype(self.cfg.dtype)
@@ -65,7 +71,7 @@ class MambaLM:
     def _head(self, params, x):
         cfg = self.cfg
         x = common.apply_norm(x, params["final_norm"], cfg.norm,
-                              cfg.norm_eps)
+                              cfg.norm_eps, policy=self.policy)
         w = params.get("lm_head")
         if w is None:
             w = params["embed"].T
@@ -76,19 +82,21 @@ class MambaLM:
 
     def _scan_blocks(self, params, x, return_state: bool = False):
         cfg, par, ctx = self.cfg, self.par, self.ctx
+        policy = self.policy
 
         def body(h, layer):
             lp, np_ = layer
-            hin = common.apply_norm(h, np_, cfg.norm, cfg.norm_eps)
+            hin = common.apply_norm(h, np_, cfg.norm, cfg.norm_eps,
+                                    policy=policy)
             if return_state:
                 out, (state, conv) = ssd.apply_mamba_block(
                     lp, hin, cfg.ssm, cfg.d_model, cfg.norm_eps, ctx,
-                    return_state=True)
+                    return_state=True, policy=policy)
                 h = h + out
                 h = shard(h, ("act_batch", "act_seq", "act_embed"), ctx)
                 return h, (state, conv)
             out = ssd.apply_mamba_block(lp, hin, cfg.ssm, cfg.d_model,
-                                        cfg.norm_eps, ctx)
+                                        cfg.norm_eps, ctx, policy=policy)
             h = h + out
             h = shard(h, ("act_batch", "act_seq", "act_embed"), ctx)
             return h, None
@@ -145,10 +153,11 @@ class MambaLM:
 
         def body(h, layer):
             lp, np_, state, conv = layer
-            hin = common.apply_norm(h, np_, cfg.norm, cfg.norm_eps)
+            hin = common.apply_norm(h, np_, cfg.norm, cfg.norm_eps,
+                                    policy=self.policy)
             out, state, conv = ssd.mamba_decode_step(
                 lp, hin, cfg.ssm, cfg.d_model, cfg.norm_eps, state, conv,
-                ctx)
+                ctx, policy=self.policy)
             return h + out, (state, conv)
 
         x, new = jax.lax.scan(

@@ -172,7 +172,7 @@ def _split_proj(z_xbc_dt, d_inner: int, gn2: int, nh: int):
 def apply_mamba_block(params, x, cfg: SSMConfig, d_model: int,
                       eps: float, ctx: Optional[ShardCtx],
                       initial_state: Optional[jax.Array] = None,
-                      return_state: bool = False):
+                      return_state: bool = False, policy=None):
     """Full mamba2 block (train/prefill). x: [B,L,D] -> [B,L,D]."""
     b, l, d = x.shape
     d_inner = cfg.expand * d
@@ -199,7 +199,8 @@ def apply_mamba_block(params, x, cfg: SSMConfig, d_model: int,
     y = y + (params["D"].reshape(nh, 1)
              * xh.astype(jnp.float32)).astype(y.dtype)
     y = y.reshape(b, l, d_inner)
-    y = common.rmsnorm(y * jax.nn.silu(z), params["norm_scale"], eps)
+    y = common.rmsnorm(y * jax.nn.silu(z), params["norm_scale"], eps,
+                       policy=policy)
     out = jnp.einsum("ble,ed->bld", y, params["out_proj"].astype(x.dtype))
     if return_state:
         conv_tail = _conv_tail(xbc_pre_conv=proj[..., d_inner:2 * d_inner + gn2],
@@ -219,7 +220,7 @@ def _conv_tail(xbc_pre_conv, width: int):
 
 def mamba_decode_step(params, x_t, cfg: SSMConfig, d_model: int,
                       eps: float, state: jax.Array, conv_buf: jax.Array,
-                      ctx: Optional[ShardCtx] = None):
+                      ctx: Optional[ShardCtx] = None, policy=None):
     """One-token mamba2 step.
 
     x_t: [B,D]; state: [B,G,Hg,N,P]; conv_buf: [B,W-1,conv_dim].
@@ -253,6 +254,7 @@ def mamba_decode_step(params, x_t, cfg: SSMConfig, d_model: int,
     y = y + (params["D"].reshape(nh, 1)
              * xh.astype(jnp.float32)).astype(y.dtype)
     y = y.reshape(b, d_inner)
-    y = common.rmsnorm(y * jax.nn.silu(z), params["norm_scale"], eps)
+    y = common.rmsnorm(y * jax.nn.silu(z), params["norm_scale"], eps,
+                       policy=policy)
     out = jnp.einsum("be,ed->bd", y, params["out_proj"].astype(x_t.dtype))
     return out, state, new_conv_buf

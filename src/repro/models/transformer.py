@@ -16,6 +16,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.registry import ExecutionPolicy
 from repro.models import common, mlp
 from repro.models.attention import (chunked_attention, decode_attention,
                                     dequantize_kv, quantize_kv,
@@ -77,7 +78,7 @@ def init_block(key, cfg: ModelConfig, dtype):
 
 
 def _project_qkv(params, x, cfg: ModelConfig, positions, ctx,
-                 constrain_kv: bool = True):
+                 constrain_kv: bool = True, policy=None):
     b, s, _ = x.shape
     h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     q = jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(x.dtype))
@@ -87,8 +88,8 @@ def _project_qkv(params, x, cfg: ModelConfig, positions, ctx,
     k = k.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
     v = v.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
     if cfg.qk_norm:
-        q = common.rmsnorm(q, params["q_norm"], cfg.norm_eps)
-        k = common.rmsnorm(k, params["k_norm"], cfg.norm_eps)
+        q = common.rmsnorm(q, params["q_norm"], cfg.norm_eps, policy=policy)
+        k = common.rmsnorm(k, params["k_norm"], cfg.norm_eps, policy=policy)
     if cfg.pos_emb == "rope":
         q = common.apply_rope(q, positions[:, None, :], cfg.rope_theta)
         k = common.apply_rope(k, positions[:, None, :], cfg.rope_theta)
@@ -132,20 +133,23 @@ def _repeat_kv(k, v, group: int, ctx):
 
 def attn_seq(params, x, cfg: ModelConfig, par: ParallelConfig,
              positions, ctx, causal: bool = True,
-             return_kv: bool = False):
+             return_kv: bool = False, policy=None):
     """Full-sequence attention (train / prefill)."""
     b, s, d = x.shape
+    policy = policy or par.execution_policy()
     q, k, v = _project_qkv(params, x, cfg, positions, ctx,
-                           constrain_kv=par.constrain_kv_pre_repeat)
+                           constrain_kv=par.constrain_kv_pre_repeat,
+                           policy=policy)
     k_rep, v_rep = _repeat_kv(k, v, cfg.num_heads // cfg.num_kv_heads, ctx)
     if par.use_pallas_attn:
-        # TPU execution path: the framework's own flash kernel (native
-        # mode: MXU-aligned blocks + causal block-skip predication).
+        # TPU execution path: the framework's own flash kernel.  The
+        # variant comes from the threaded policy's kernel view — the
+        # registry, not this call site, decides the lowering.
         from repro.kernels import ops as kernel_ops
         o = kernel_ops.flash_attention(
             q, k_rep, v_rep, causal=causal,
             block_q=min(par.attn_chunk_q, 256),
-            block_kv=min(par.attn_chunk_kv, 256), mode="native")
+            block_kv=min(par.attn_chunk_kv, 256), policy=policy.kernel())
     else:
         o = chunked_attention(
             q, k_rep, v_rep, causal=causal, kv_offset=0,
@@ -163,12 +167,13 @@ def attn_seq(params, x, cfg: ModelConfig, par: ParallelConfig,
 
 
 def attn_decode(params, x_t, cfg: ModelConfig, kv_cache, pos, ctx,
-                int8: bool = False):
+                int8: bool = False, policy=None):
     """One-token attention. x_t: [B,1,D]; kv_cache: (K,V) [B,Hkv,S,hd]
     (bf16) or (Kq,Ks,Vq,Vs) (int8 + scales)."""
     b = x_t.shape[0]
     positions = pos[:, None]                       # [B,1]
-    q, k_new, v_new = _project_qkv(params, x_t, cfg, positions, ctx)
+    q, k_new, v_new = _project_qkv(params, x_t, cfg, positions, ctx,
+                                   policy=policy)
     if int8:
         k_q, k_s, v_q, v_s = kv_cache
         k_q, k_s = update_cache_int8(k_q, k_s, k_new, pos)
@@ -193,16 +198,20 @@ def attn_decode(params, x_t, cfg: ModelConfig, kv_cache, pos, ctx,
 
 
 def block_seq(params, x, cfg: ModelConfig, par: ParallelConfig, positions,
-              ctx, return_kv: bool = False):
-    h = common.apply_norm(x, params["ln1"], cfg.norm, cfg.norm_eps)
+              ctx, return_kv: bool = False, policy=None):
+    policy = policy or par.execution_policy()
+    h = common.apply_norm(x, params["ln1"], cfg.norm, cfg.norm_eps,
+                          policy=policy)
     if return_kv:
         a, kv = attn_seq(params["attn"], h, cfg, par, positions, ctx,
-                         return_kv=True)
+                         return_kv=True, policy=policy)
     else:
-        a = attn_seq(params["attn"], h, cfg, par, positions, ctx)
+        a = attn_seq(params["attn"], h, cfg, par, positions, ctx,
+                     policy=policy)
         kv = None
     x = x + a
-    h = common.apply_norm(x, params["ln2"], cfg.norm, cfg.norm_eps)
+    h = common.apply_norm(x, params["ln2"], cfg.norm, cfg.norm_eps,
+                          policy=policy)
     if cfg.moe is not None:
         m, aux = mlp.apply_moe(params["moe"], h, cfg.moe, cfg.act, ctx)
     else:
@@ -215,12 +224,14 @@ def block_seq(params, x, cfg: ModelConfig, par: ParallelConfig, positions,
 
 
 def block_decode(params, x_t, cfg: ModelConfig, kv_cache, pos, ctx,
-                 int8: bool = False):
-    h = common.apply_norm(x_t, params["ln1"], cfg.norm, cfg.norm_eps)
+                 int8: bool = False, policy=None):
+    h = common.apply_norm(x_t, params["ln1"], cfg.norm, cfg.norm_eps,
+                          policy=policy)
     a, kv_cache = attn_decode(params["attn"], h, cfg, kv_cache, pos, ctx,
-                              int8=int8)
+                              int8=int8, policy=policy)
     x_t = x_t + a
-    h = common.apply_norm(x_t, params["ln2"], cfg.norm, cfg.norm_eps)
+    h = common.apply_norm(x_t, params["ln2"], cfg.norm, cfg.norm_eps,
+                          policy=policy)
     if cfg.moe is not None:
         m, _ = mlp.apply_moe(params["moe"], h, cfg.moe, cfg.act, ctx)
     else:
@@ -237,11 +248,17 @@ class TransformerLM:
     """Functional decoder-only LM with scanned layers."""
 
     def __init__(self, cfg: ModelConfig, par: ParallelConfig,
-                 ctx: Optional[ShardCtx] = None):
+                 ctx: Optional[ShardCtx] = None,
+                 policy: Optional[ExecutionPolicy] = None):
         self.cfg = cfg
         self.par = par
         self.ctx = ctx
+        # the lowering policy every hot spot below threads (resolved ONCE)
+        self.policy = policy or par.execution_policy()
         self.aux_weight = 0.01 if cfg.moe is not None else 0.0
+
+    def with_policy(self, policy: ExecutionPolicy) -> "TransformerLM":
+        return type(self)(self.cfg, self.par, self.ctx, policy=policy)
 
     # ---- params ----
 
@@ -294,7 +311,7 @@ class TransformerLM:
     def _head(self, params, x):
         cfg = self.cfg
         x = common.apply_norm(x, params["final_norm"], cfg.norm,
-                              cfg.norm_eps)
+                              cfg.norm_eps, policy=self.policy)
         w = params.get("lm_head")
         if w is None:
             w = params["embed"].T
@@ -307,14 +324,16 @@ class TransformerLM:
 
     def _scan_blocks(self, params, x, positions, return_kv=False):
         cfg, par, ctx = self.cfg, self.par, self.ctx
+        policy = self.policy
 
         def body(carry, layer_params):
             h, aux = carry
             if return_kv:
                 h, a, kv = block_seq(layer_params, h, cfg, par, positions,
-                                     ctx, return_kv=True)
+                                     ctx, return_kv=True, policy=policy)
                 return (h, aux + a), kv
-            h, a = block_seq(layer_params, h, cfg, par, positions, ctx)
+            h, a = block_seq(layer_params, h, cfg, par, positions, ctx,
+                             policy=policy)
             return (h, aux + a), None
 
         if par.remat == "full":
@@ -403,7 +422,7 @@ class TransformerLM:
         def body(h, layer):
             layer_params, kv = layer
             h, new_kv = block_decode(layer_params, h, cfg, kv, pos, ctx,
-                                     int8=int8)
+                                     int8=int8, policy=self.policy)
             return h, new_kv
 
         if int8:

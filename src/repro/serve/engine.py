@@ -62,8 +62,15 @@ class Request:
 
 
 class BatchedEngine:
-    def __init__(self, model, params, cfg: ServeConfig):
+    def __init__(self, model, params, cfg: ServeConfig, policy=None):
+        # ``policy`` (an ExecutionPolicy) overrides the model's resolved
+        # lowering policy for this engine's jitted prefill/tick programs —
+        # resolved once here, at trace-ownership time, so the engine's
+        # compiled programs and the policy can never disagree.
+        if policy is not None:
+            model = model.with_policy(policy)
         self.model = model
+        self.policy = getattr(model, "policy", None)
         self.params = params
         self.cfg = cfg
         b = cfg.batch_slots

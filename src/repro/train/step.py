@@ -18,6 +18,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.registry import ExecutionPolicy
 from repro.models.config import ParallelConfig
 from repro.parallel.sharding import ShardCtx, tree_shardings
 from repro.train.optim import OptConfig, adamw_update, init_opt_state, opt_state_specs
@@ -33,11 +34,18 @@ def _split_microbatches(batch: Dict[str, jax.Array], n: int):
 
 
 def build_train_step(model, opt_cfg: OptConfig,
-                     ctx: Optional[ShardCtx] = None):
+                     ctx: Optional[ShardCtx] = None,
+                     policy: Optional[ExecutionPolicy] = None):
     """Returns (train_step, shardings dict).
 
     train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+
+    ``policy`` overrides the model's resolved ExecutionPolicy for this
+    step's lowering decisions (resolved once, at build time — the step is
+    jitted downstream, so per-call policy switches would be stale).
     """
+    if policy is not None:
+        model = model.with_policy(policy)
     par: ParallelConfig = model.par
     ctx = ctx if ctx is not None else model.ctx
 
@@ -114,7 +122,11 @@ def batch_shardings(model, ctx: Optional[ShardCtx], batch_tree):
     return jax.tree.map(leaf, batch_tree)
 
 
-def build_eval_step(model, ctx: Optional[ShardCtx] = None):
+def build_eval_step(model, ctx: Optional[ShardCtx] = None,
+                    policy: Optional[ExecutionPolicy] = None):
+    if policy is not None:
+        model = model.with_policy(policy)
+
     def eval_step(params, batch):
         loss, metrics = model.loss_fn(params, batch)
         return dict(metrics, loss=loss)

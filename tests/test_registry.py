@@ -1,0 +1,272 @@
+"""Lowering registry + execution policy (ISSUE 2).
+
+Covers: registration-time contract rejection, auto selection (shuffle
+variant when the dialect has lane shuffle, scratch-tree otherwise, jnp
+library when no portable lowering is legal), declared fallbacks replacing
+silent mode rewrites, and policy threading through the model stack (same
+outputs under abstract / native / library policies within tolerance).
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ExecutionPolicy, IsaMode, KernelContract,
+                        LoweringFallbackWarning, Primitive, REGISTRY,
+                        TARGET, UISA_UNIVERSAL10, UnsupportedLowering,
+                        use_policy)
+from repro.core.primitives import ContractViolation
+from repro.kernels import ops, ref
+from repro.kernels.ops import PROBE_SHAPES as AUTO_SHAPES
+
+KEY = jax.random.PRNGKey(3)
+
+
+@pytest.fixture
+def scratch_op():
+    """A throwaway op name, always unregistered afterwards."""
+    name = "test_scratch_op"
+    yield name
+    REGISTRY.unregister(name)
+
+
+# ---------------------------------------------------------------------------
+# Registration-time contract rejection
+# ---------------------------------------------------------------------------
+
+
+class TestRegistration:
+    def test_out_of_budget_contract_rejected(self, scratch_op):
+        bad = KernelContract(
+            kernel=scratch_op, mode=IsaMode.ABSTRACT,
+            primitives=frozenset({Primitive.LANE_SHUFFLE}))
+        with pytest.raises(ContractViolation):
+            REGISTRY.register(scratch_op, IsaMode.ABSTRACT,
+                              lambda *a, **k: None, contract=bad)
+
+    def test_contract_drift_rejected(self, scratch_op):
+        other = KernelContract(
+            kernel="some_other_op", mode=IsaMode.ABSTRACT,
+            primitives=frozenset({Primitive.LOCKSTEP_GROUP}))
+        with pytest.raises(ContractViolation):
+            REGISTRY.register(scratch_op, IsaMode.ABSTRACT,
+                              lambda *a, **k: None, contract=other)
+        mode_drift = KernelContract(
+            kernel=scratch_op, mode=IsaMode.NATIVE,
+            primitives=frozenset(Primitive))
+        with pytest.raises(ContractViolation):
+            REGISTRY.register(scratch_op, IsaMode.ABSTRACT,
+                              lambda *a, **k: None, contract=mode_drift)
+
+    def test_non_library_requires_contract(self, scratch_op):
+        with pytest.raises(ContractViolation):
+            REGISTRY.register(scratch_op, IsaMode.ABSTRACT,
+                              lambda *a, **k: None)
+
+    def test_duplicate_registration_rejected(self, scratch_op):
+        REGISTRY.register(scratch_op, IsaMode.LIBRARY, lambda x: x)
+        with pytest.raises(ValueError):
+            REGISTRY.register(scratch_op, IsaMode.LIBRARY, lambda x: x)
+
+    def test_all_kernels_registered(self):
+        assert set(REGISTRY.ops()) >= {"gemm", "reduction", "histogram",
+                                       "flash_attention", "rmsnorm"}
+        # gemm has no shuffle variant — by registration, not by rewrite
+        assert REGISTRY.modes("gemm") == ("abstract", "native", "library")
+        for op in ("reduction", "rmsnorm", "histogram", "flash_attention"):
+            assert REGISTRY.modes(op) == ("abstract", "abstract+shuffle",
+                                          "native", "library")
+
+
+# ---------------------------------------------------------------------------
+# Auto selection (the Table V discipline as runtime behavior)
+# ---------------------------------------------------------------------------
+
+
+class TestAutoSelection:
+    def test_shuffle_variant_when_dialect_has_lane_shuffle(self):
+        assert TARGET.has_lane_shuffle
+        pol = ExecutionPolicy(mode="auto", dialect=TARGET.name)
+        for op in ("reduction", "rmsnorm", "histogram", "flash_attention"):
+            low = REGISTRY.select(op, pol, shape=AUTO_SHAPES[op])
+            assert low.mode is IsaMode.ABSTRACT_SHUFFLE, (op, low.mode)
+
+    def test_scratch_tree_when_dialect_lacks_lane_shuffle(self):
+        assert not UISA_UNIVERSAL10.has_lane_shuffle
+        pol = ExecutionPolicy(mode="auto", dialect=UISA_UNIVERSAL10.name)
+        for op in ("reduction", "rmsnorm", "histogram", "flash_attention"):
+            low = REGISTRY.select(op, pol, shape=AUTO_SHAPES[op])
+            assert low.mode is IsaMode.ABSTRACT, (op, low.mode)
+
+    def test_auto_legal_everywhere(self):
+        """Acceptance: an auto policy resolves a legal variant for every
+        op on both the target and a no-shuffle dialect."""
+        for dialect in (TARGET, UISA_UNIVERSAL10):
+            pol = ExecutionPolicy(mode="auto", dialect=dialect.name)
+            for op in REGISTRY.ops():
+                low = REGISTRY.select(op, pol,
+                                      shape=AUTO_SHAPES.get(op, {}))
+                assert REGISTRY.legal(op, low.mode, dialect) \
+                    or low.mode is IsaMode.LIBRARY, (op, low.mode)
+
+    def test_library_fallback_when_no_portable_lowering(self, scratch_op):
+        """Missing-primitive case: an op with only a shuffle lowering must
+        fall back to the jnp reference on a no-shuffle dialect."""
+        contract = KernelContract(
+            kernel=scratch_op, mode=IsaMode.ABSTRACT_SHUFFLE,
+            primitives=frozenset({Primitive.LOCKSTEP_GROUP,
+                                  Primitive.LANE_SHUFFLE}))
+        REGISTRY.register(scratch_op, IsaMode.ABSTRACT_SHUFFLE,
+                          lambda x: ("shuffle", x), contract=contract)
+        REGISTRY.register(scratch_op, IsaMode.LIBRARY,
+                          lambda x: ("library", x))
+        n0 = len(REGISTRY.fallback_events)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", LoweringFallbackWarning)
+            low = REGISTRY.select(scratch_op, ExecutionPolicy(
+                mode="auto", dialect=UISA_UNIVERSAL10.name))
+        assert low.mode is IsaMode.LIBRARY
+        ev = REGISTRY.fallback_events[n0]
+        assert ev.op == scratch_op and ev.requested == "auto" \
+            and ev.used == "library"
+
+    def test_auto_matches_reference(self):
+        x = jax.random.normal(KEY, (3000,), jnp.float32)
+        got = ops.reduce_sum(x, policy=ExecutionPolicy(mode="auto"))
+        np.testing.assert_allclose(got, ref.reduce_sum(x), rtol=1e-5,
+                                   atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Declared fallbacks (the gemm abstract+shuffle satellite)
+# ---------------------------------------------------------------------------
+
+
+class TestDeclaredFallback:
+    def test_gemm_shuffle_request_is_declared_warned_recorded(self):
+        ka, kb = jax.random.split(KEY)
+        a = jax.random.normal(ka, (64, 32), jnp.float32)
+        b = jax.random.normal(kb, (32, 48), jnp.float32)
+        n0 = len(REGISTRY.fallback_events)
+        with pytest.warns(LoweringFallbackWarning):
+            got = ops.matmul(a, b, mode="abstract+shuffle")
+        np.testing.assert_allclose(got, ref.gemm(a, b), rtol=1e-4,
+                                   atol=1e-4)
+        ev = REGISTRY.fallback_events[n0]
+        assert ev.op == "gemm"
+        assert ev.requested == "abstract+shuffle" and ev.used == "abstract"
+
+    def test_undeclared_illegal_mode_raises(self):
+        # shuffle reduction on a no-shuffle dialect: no declared fallback
+        pol = ExecutionPolicy(mode="abstract+shuffle",
+                              dialect=UISA_UNIVERSAL10.name)
+        with pytest.raises(UnsupportedLowering):
+            REGISTRY.select("reduction", pol, shape=AUTO_SHAPES["reduction"])
+
+    def test_unknown_mode_rejected(self):
+        with pytest.raises(ValueError):
+            ExecutionPolicy(mode="warp_specialized")
+        a = jnp.ones((8, 8))
+        with pytest.raises(ValueError):
+            ops.matmul(a, a, mode="warp_specialized")
+
+
+# ---------------------------------------------------------------------------
+# Policy threading through the model stack
+# ---------------------------------------------------------------------------
+
+
+def _tiny_model(isa_mode=None):
+    from repro.models.config import ModelConfig, ParallelConfig
+    from repro.models.transformer import TransformerLM
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=128,
+                      num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=128,
+                      qk_norm=True, dtype="float32")
+    par = ParallelConfig(remat="none", isa_mode=isa_mode)
+    return TransformerLM(cfg, par)
+
+
+class TestPolicyThreading:
+    def test_model_outputs_agree_across_policies(self):
+        """abstract vs native policies: every norm hot spot lowers through
+        a different kernel variant yet the model output is unchanged."""
+        batch = {"tokens": jnp.arange(32).reshape(2, 16) % 128,
+                 "labels": jnp.arange(32).reshape(2, 16) % 128}
+        ref_model = _tiny_model(None)      # seed default: library norms
+        params = ref_model.init_params(jax.random.PRNGKey(0))
+        want, _ = ref_model.loss_fn(params, batch)
+        for isa_mode in ("abstract", "native"):
+            model = _tiny_model(isa_mode)
+            assert model.policy.mode == isa_mode
+            got, _ = model.loss_fn(params, batch)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-4, atol=1e-4)
+
+    def test_no_literal_modes_above_kernels(self):
+        """Call sites above repro/kernels thread policies, not strings."""
+        import pathlib
+        root = pathlib.Path(__file__).resolve().parent.parent \
+            / "src" / "repro"
+        offenders = []
+        for sub in ("models", "train", "serve", "launch", "data",
+                    "parallel", "checkpoint"):
+            for path in (root / sub).rglob("*.py"):
+                if path.name == "config.py":
+                    # ParallelConfig.execution_policy IS the one
+                    # resolution point where mode literals are decided
+                    continue
+                text = path.read_text()
+                for i, line in enumerate(text.splitlines(), 1):
+                    if "mode=\"native\"" in line or "mode='native'" in line \
+                            or "mode=\"abstract" in line:
+                        offenders.append(f"{path}:{i}: {line.strip()}")
+        assert not offenders, offenders
+
+    def test_with_policy_and_ambient_override(self):
+        model = _tiny_model(None)
+        lib = model.policy
+        assert lib.mode == "library" and lib.kernel_mode == "native"
+        m2 = model.with_policy(ExecutionPolicy(mode="abstract"))
+        assert m2.policy.mode == "abstract"
+        assert model.policy.mode == "library"      # original untouched
+        # ambient use_policy reaches common.rmsnorm when no explicit policy
+        from repro.models import common
+        x = jax.random.normal(KEY, (4, 128), jnp.float32)
+        w = jnp.ones((128,), jnp.float32)
+        with use_policy(ExecutionPolicy(mode="abstract")):
+            got = common.rmsnorm(x, w)
+        np.testing.assert_allclose(got, ref.rmsnorm(x, w), rtol=1e-5,
+                                   atol=1e-5)
+
+    def test_engine_accepts_policy(self):
+        from repro.serve.engine import BatchedEngine, Request, ServeConfig
+        model = _tiny_model(None)
+        params = model.init_params(jax.random.PRNGKey(1))
+        eng = BatchedEngine(model, params,
+                            ServeConfig(batch_slots=2, max_seq_len=32,
+                                        max_new_tokens=4),
+                            policy=ExecutionPolicy(mode="library"))
+        assert eng.policy.mode == "library"
+        done = eng.run([Request(rid=0, prompt=[3, 5, 7],
+                                max_new_tokens=4)])
+        assert done[0].generated
+
+
+# ---------------------------------------------------------------------------
+# Contract legality across all registered dialects (CI drift guard)
+# ---------------------------------------------------------------------------
+
+
+class TestCrossDialectLegality:
+    def test_validate_contracts_script(self):
+        """The cross-dialect legality/auto-resolvability check lives ONCE,
+        in scripts/validate_contracts.py (the CI step); this test runs it
+        so local pytest and CI cannot drift apart."""
+        import pathlib
+        import runpy
+        script = pathlib.Path(__file__).resolve().parent.parent \
+            / "scripts" / "validate_contracts.py"
+        mod = runpy.run_path(str(script))
+        assert mod["main"]() == 0
