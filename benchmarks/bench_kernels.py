@@ -11,6 +11,15 @@ diff the JSON.
   PYTHONPATH=src python benchmarks/bench_kernels.py            # full
   PYTHONPATH=src python benchmarks/bench_kernels.py --quick    # CI smoke
   PYTHONPATH=src python benchmarks/bench_kernels.py --out path.json
+  PYTHONPATH=src python benchmarks/bench_kernels.py --compare OLD.json
+
+``--compare`` is the regression gate: it diffs this run against a prior
+JSON and exits non-zero when a (kernel, mode) row disappeared, when the
+*modeled* structural cost regressed at the old row's recorded shape
+(scratch/HBM bytes are backend-independent, so this check is meaningful
+even when the sizings differ — it is how CI's --quick run gates against
+the committed full-size baseline), or — when both runs share a backend +
+sizing — when a median slowed past ``--threshold``.
 
 Off-TPU the kernels run in Pallas interpret mode (see
 ``repro.kernels.ops.default_interpret``): absolute times are then
@@ -62,9 +71,15 @@ def _cases(quick: bool):
         m = k = n = 1024
         warmup, iters = 2, 5
 
+    n_proj = d_rms                       # norm -> square projection
+    # fresh streams for the fused cases (fold_in: the eight pre-existing
+    # streams below keep their values and stay independent of these)
+    kp, kr = jax.random.split(jax.random.fold_in(KEY, 1))
     x_red = jax.random.normal(ks[0], (n_red,), jnp.float32)
     x_rms = jax.random.normal(ks[1], (rows_rms, d_rms), jnp.float32)
     w_rms = jax.random.normal(ks[2], (d_rms,), jnp.float32) + 1.0
+    p_rms = jax.random.normal(kp, (d_rms, n_proj), jnp.float32)
+    r_rms = jax.random.normal(kr, (rows_rms, d_rms), jnp.float32)
     v_hist = jax.random.randint(ks[3], (n_hist,), 0, bins, jnp.int32)
     q = jax.random.normal(ks[4], (b, h, s, hd), jnp.float32)
     kk = jax.random.normal(ks[5], (b, h, s, hd), jnp.float32)
@@ -91,6 +106,15 @@ def _cases(quick: bool):
         ("gemm",
          lambda mode: ops.matmul(a_g, b_g, mode=mode),
          dict(m=m, n=n, k=k)),
+        # the fused multi-op lowerings: HBM traffic is the treatment here
+        ("rmsnorm_matmul",
+         lambda mode: ops.fused_rmsnorm_matmul(x_rms, w_rms, p_rms,
+                                               mode=mode),
+         dict(rows=rows_rms, d=d_rms, n=n_proj)),
+        ("add_rmsnorm",
+         lambda mode: ops.fused_add_rmsnorm(x_rms, r_rms, w_rms,
+                                            mode=mode),
+         dict(rows=rows_rms, d=d_rms)),
     ]
     return cases, warmup, iters
 
@@ -106,6 +130,7 @@ def run(quick: bool = False, out: str = "BENCH_kernels.json") -> dict:
             rows.append({
                 "kernel": kernel,
                 "mode": mode,
+                "shape": shape,
                 "median_s": timing["median_s"],
                 "p25_s": timing["p25_s"],
                 "p75_s": timing["p75_s"],
@@ -150,13 +175,90 @@ def run(quick: bool = False, out: str = "BENCH_kernels.json") -> dict:
     return result
 
 
+def compare(old: dict, new: dict, threshold: float = 1.5) -> list:
+    """Regression-diff two bench artifacts; returns failure strings.
+
+    Three gates, strongest applicable wins:
+    1. coverage — every old (kernel, mode) row must still exist in the
+       new run's matrix (a dropped variant is a silent de-registration);
+    2. structural — the new code's *modeled* cost, recomputed at the old
+       row's recorded shape, must not exceed the old row's recorded
+       scratch/HBM bytes (backend- and sizing-independent: this is the
+       §VII.C currency, and the gate CI applies between its --quick run
+       and the committed full-size baseline);
+    3. timing — only when both runs share (backend, quick, interpret)
+       and the row shapes match: new median must stay under
+       ``threshold × old median``.
+    """
+    failures = []
+    new_matrix = new["meta"]["matrix"]
+    meta_match = all(
+        old.get("meta", {}).get(k) == new["meta"].get(k)
+        for k in ("backend", "quick", "interpret"))
+    new_rows = {(r["kernel"], r["mode"]): r for r in new["rows"]}
+    deltas = []
+    for r in old["rows"]:
+        kernel, mode = r["kernel"], r["mode"]
+        if mode not in new_matrix.get(kernel, []):
+            failures.append(f"{kernel}[{mode}]: variant disappeared from "
+                            f"the registry matrix")
+            continue
+        shape = r.get("shape")
+        if shape:
+            cost = dict(REGISTRY.structural_cost(kernel, mode, **shape))
+            for key, col in (("scratch_bytes_total", "scratch_bytes"),
+                             ("hbm_bytes", "hbm_bytes")):
+                if cost.get(key, 0) > r.get(col, 0):
+                    failures.append(
+                        f"{kernel}[{mode}] @ {shape}: modeled {col} "
+                        f"regressed {r.get(col, 0)} -> {cost.get(key, 0)}")
+        nr = new_rows.get((kernel, mode))
+        if nr is None:
+            continue
+        if meta_match and shape and nr.get("shape") == shape:
+            ratio = nr["median_s"] / max(r["median_s"], 1e-12)
+            deltas.append([kernel, mode, f"{r['median_s'] * 1e3:.2f}",
+                           f"{nr['median_s'] * 1e3:.2f}", f"{ratio:.2f}x"])
+            if ratio > threshold:
+                failures.append(
+                    f"{kernel}[{mode}]: median regressed "
+                    f"{r['median_s'] * 1e3:.2f} -> "
+                    f"{nr['median_s'] * 1e3:.2f} ms "
+                    f"({ratio:.2f}x > {threshold}x)")
+    if deltas:
+        print("\n[bench_kernels] timing deltas vs baseline:")
+        print(fmt_table(["kernel", "mode", "old_ms", "new_ms", "ratio"],
+                        deltas))
+    elif not meta_match:
+        print("\n[bench_kernels] timing compare skipped (baseline meta "
+              "differs: backend/sizing); structural gate still applied")
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="small sizes + few iters (CI smoke)")
     ap.add_argument("--out", default="BENCH_kernels.json")
+    ap.add_argument("--compare", metavar="OLD.json", default=None,
+                    help="regression-diff against a prior artifact; "
+                    "exits non-zero past --threshold or on structural/"
+                    "coverage regressions")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="max allowed new/old median ratio (same-meta "
+                    "runs only)")
     args = ap.parse_args()
-    run(quick=args.quick, out=args.out)
+    result = run(quick=args.quick, out=args.out)
+    if args.compare:
+        with open(args.compare) as f:
+            old = json.load(f)
+        failures = compare(old, result, threshold=args.threshold)
+        if failures:
+            print(f"\n[bench_kernels] REGRESSIONS vs {args.compare}:")
+            for fail in failures:
+                print("  -", fail)
+            raise SystemExit(1)
+        print(f"\n[bench_kernels] compare vs {args.compare}: OK")
 
 
 if __name__ == "__main__":

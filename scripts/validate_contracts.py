@@ -6,10 +6,17 @@ contract-checked) and asserts, without needing a TPU:
 1. every registered contract names its own op and mode (no drift) and
    validates on the dialect it targets;
 2. for every (op, mode, dialect) the registry's ``legal`` verdict agrees
-   with ``validate_contract`` — native lowerings pinned to their target;
+   with ``validate_contract`` — native lowerings pinned to their target
+   (the fused multi-op lowerings ride through the same sweep);
 3. an ``ExecutionPolicy("auto")`` resolves a legal lowering for every op
    on every registered dialect, including the no-shuffle universal-10
-   profile (library escape only where no portable variant is legal).
+   profile (library escape only where no portable variant is legal);
+4. every fused lowering's modeled ``hbm_bytes`` is strictly below its
+   unfused pair's sum (the round-trip saving cannot silently evaporate),
+   with the ``library`` row equal to the pair by construction;
+5. the committed tuning table (core/tuning_table.json) is in sync with
+   the candidate grid: stale ops/modes/dialects or params outside the
+   legal Eq. 1 grid fail the build.
 
   PYTHONPATH=src python scripts/validate_contracts.py
 """
@@ -25,8 +32,38 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
 from repro.core import (DIALECTS, ExecutionPolicy, IsaMode,  # noqa: E402
                         LoweringFallbackWarning, REGISTRY, TARGET,
                         validate_contract)
+from repro.core import tuning  # noqa: E402
 from repro.core.primitives import ContractViolation  # noqa: E402
 from repro.kernels.ops import PROBE_SHAPES  # noqa: E402 (installs registry)
+
+def check_fused_costs() -> list:
+    """Gate 4: the fused rows' round-trip saving is real and recorded."""
+    failures = []
+    for op in ("rmsnorm_matmul", "add_rmsnorm"):
+        if op not in REGISTRY.ops():
+            failures.append(f"fused op {op!r} not registered")
+            continue
+        shape = PROBE_SHAPES[op]
+        for mode in REGISTRY.modes(op):
+            cost = REGISTRY.structural_cost(op, mode, **shape)
+            unfused = cost.get("hbm_bytes_unfused_pair")
+            saved = cost.get("hbm_bytes_saved")
+            if unfused is None or saved is None:
+                failures.append(f"{op}[{mode}]: cost lacks the fused "
+                                f"accounting keys")
+                continue
+            if cost["hbm_bytes"] != unfused - saved:
+                failures.append(
+                    f"{op}[{mode}]: hbm_bytes {cost['hbm_bytes']} != "
+                    f"unfused {unfused} - saved {saved}")
+            if mode == "library":
+                if saved != 0:
+                    failures.append(f"{op}[library]: the unfused pair "
+                                    f"cannot claim a saving ({saved})")
+            elif saved <= 0:
+                failures.append(f"{op}[{mode}]: no recorded round-trip "
+                                f"saving")
+    return failures
 
 
 def main() -> int:
@@ -83,6 +120,15 @@ def main() -> int:
                 failures.append(f"auto({op}, {dialect.name}) failed: {e}")
                 continue
             print(f"auto {dialect.name:18s} {op:16s} -> {low.mode.value}")
+    # gate 4: fused-lowering round-trip accounting
+    failures.extend(check_fused_costs())
+    # gate 5: committed tuning table in sync with the candidate grid
+    table_failures = tuning.check_table(REGISTRY)
+    if table_failures:
+        failures.extend(f"tuning table: {f}" for f in table_failures)
+    else:
+        print(f"\ntuning table: {len(tuning.TUNING_TABLE.entries)} entries "
+              f"all inside the legal candidate grid")
     if failures:
         print(f"\nFAIL: {len(failures)} contract-drift findings")
         for f in failures:

@@ -30,6 +30,9 @@ from repro.core.shuffle import (lane_shuffle_down, lane_shuffle_up,
                                 scratch_tree_reduce, tree_stages,
                                 scratch_tree_bytes)
 from repro.core.pipeline import PipelinePlan, plan_row_pipeline, pad_rows
+from repro.core.tuning import (TUNING_TABLE, TuningTable, register_op_space,
+                               tuned_attention_blocks, tuned_block,
+                               tuned_plan)
 from repro.core.registry import (AUTO_POLICY, DEFAULT_POLICY, ExecutionPolicy,
                                  LIBRARY_POLICY, Lowering,
                                  LoweringFallbackWarning, LoweringRegistry,

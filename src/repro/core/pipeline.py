@@ -18,7 +18,7 @@ features — see ``repro.core.primitives.NATIVE_FEATURES``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -67,23 +67,40 @@ def plan_row_pipeline(total_rows: int, row_bytes: int, *, mode: str,
                       dialect: Dialect = TARGET, n_buffers: int = 2,
                       max_block_rows: Optional[int] = None,
                       min_occupancy: int = 2, pow2_blocks: bool = False,
-                      semantics: Tuple[str, ...] = ("arbitrary",)
-                      ) -> PipelinePlan:
+                      semantics: Tuple[str, ...] = ("arbitrary",),
+                      tuned: Optional[Mapping] = None) -> PipelinePlan:
     """Size a row-block from the dialect scratchpad budget.
 
     ``max_block_rows`` is the kernel's latency/tail cap (small inputs
     should not pad up to a 16 MB block just because VMEM would fit one).
     ``pow2_blocks`` rounds the block down to a power of two — required by
     kernels whose cross-lane stage tree-reduces over the block rows.
+
+    ``tuned`` is an optional autotuner override (``repro.core.tuning``):
+    a mapping with ``block_rows`` / ``n_buffers`` keys.  A tuned block
+    supersedes the heuristic *and* the ``max_block_rows`` cap (the cap is
+    the untuned guard; table entries are validated against the bounded
+    candidate corridor by CI), but the Eq. 1 occupancy invariant and the
+    problem-size/pow2 clamps still apply — an entry that would break them
+    silently degrades to the heuristic point.
     """
     if total_rows <= 0 or row_bytes <= 0:
         raise ValueError("total_rows and row_bytes must be positive")
+    tuned_block = None
+    if tuned:
+        n_buffers = int(tuned.get("n_buffers", n_buffers))
+        if tuned.get("block_rows"):
+            tuned_block = max(SUBLANES,
+                              int(tuned["block_rows"]) // SUBLANES * SUBLANES)
     budget = choose_block_bytes(total_rows * row_bytes, dialect,
                                 n_buffers=n_buffers,
                                 min_occupancy=min_occupancy)
     block_rows = max(SUBLANES, (budget // row_bytes) // SUBLANES * SUBLANES)
     if max_block_rows is not None:
         block_rows = min(block_rows, max_block_rows)
+    if tuned_block is not None and dialect.buffer_occupancy(
+            tuned_block * row_bytes, n_buffers) >= min_occupancy:
+        block_rows = tuned_block
     # never pad a small input past one block of its own (rounded) size
     rounded_total = -(-total_rows // SUBLANES) * SUBLANES
     block_rows = min(block_rows, rounded_total)

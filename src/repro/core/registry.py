@@ -70,12 +70,20 @@ class ExecutionPolicy:
     optionally overrides ``mode`` for explicitly kernel-routed paths (the
     ``use_pallas_attn`` flash hot spot keeps its target-native variant
     while model norms default to the XLA library lowering).
+
+    ``fuse`` gates the multi-op fused lowerings (``rmsnorm_matmul`` /
+    ``add_rmsnorm``) at the model hot pairs: ``True`` routes the pairs
+    through the fused ops, ``False`` keeps the unfused sequence, and
+    ``None`` (default) fuses exactly when ``mode == "auto"`` — the policy
+    that ranks lowerings by structural cost is the one that should pick
+    the variant whose ``hbm_bytes`` dropped by an activation round trip.
     """
 
     mode: str = AUTO
     dialect: str = TARGET.name
     interpret: Optional[bool] = None
     kernel_mode: Optional[str] = None
+    fuse: Optional[bool] = None
 
     def __post_init__(self):
         for m in (self.mode, self.kernel_mode):
@@ -92,6 +100,12 @@ class ExecutionPolicy:
             return self
         return dataclasses.replace(self, mode=self.kernel_mode,
                                    kernel_mode=None)
+
+    def fuses(self) -> bool:
+        """Whether model hot pairs route through the fused lowerings."""
+        if self.fuse is not None:
+            return self.fuse
+        return self.mode == AUTO
 
 
 #: seed-equivalent defaults: bare kernel-API calls keep the target-native

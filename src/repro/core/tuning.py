@@ -1,0 +1,463 @@
+"""Cost-model autotuner for pipeline staging parameters (Eq. 1 driven).
+
+``plan_row_pipeline`` picks ONE heuristic point per kernel: the largest
+block that keeps ``min_occupancy`` stages resident at ``n_buffers=2``,
+clamped by a hand-derived per-kernel latency cap.  Microbenchmark-driven
+work (Demystifying the Nvidia Ampere Architecture, arXiv:2208.11174) and
+binary-portability systems (HetGPU, arXiv:2506.15993) both show that the
+winning block/staging parameters are *target-measured*, not hand-derived —
+the gap between "portable" and "as fast as the hardware allows".
+
+This module closes that gap in three steps:
+
+1. **Candidate grids** — :func:`rowwise_candidates`,
+   :func:`gemm_candidates`, :func:`attention_candidates` enumerate every
+   ``(block, n_buffers)`` point that is *legal* under the dialect's Eq. 1
+   occupancy algebra (``Dialect.buffer_occupancy``), exploring up to a
+   bounded corridor beyond each kernel's static latency cap.
+2. **Structural ranking** — candidates are ordered by the modeled cost the
+   paper says decides outcomes (§VII.C): fewest DMA grid steps first, then
+   enough resident pipeline stages (capped — beyond ``OCCUPANCY_CAP``
+   extra stages hide no additional latency), deeper buffering breaking
+   ties.  :func:`measure_candidates` optionally re-ranks the structural
+   top-k by live wall clock on the active backend.
+3. **Persistence** — winners live in a per-``(op, mode, dialect,
+   shape-bucket)`` JSON table (:data:`DEFAULT_TABLE_PATH`, committed,
+   loaded at import as :data:`TABLE`).  Kernels consult it through
+   :func:`tuned_plan` / :func:`tuned_block` / :func:`tuned_attention_blocks`;
+   a missing or illegal entry silently degrades to the heuristic, so the
+   table can never make a legal plan illegal.
+
+``scripts/autotune.py`` regenerates the table;
+``scripts/validate_contracts.py`` asserts (via :func:`check_table`) that
+every committed entry is inside its op's legal candidate grid — stale or
+illegal entries fail CI without needing a TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.dialect import DIALECTS, Dialect, TARGET, get_dialect
+from repro.core.pipeline import SUBLANES, plan_row_pipeline
+
+#: resident pipeline stages beyond this hide no additional DMA latency
+OCCUPANCY_CAP = 8
+
+#: DMA buffer depths the candidate grids explore
+N_BUFFER_CHOICES = (2, 3, 4)
+
+#: how far beyond a kernel's static latency cap the tuner may explore —
+#: the cap is a hand-derived tail-latency guard the structural model does
+#: not capture, so the corridor is bounded rather than unbounded
+CAP_CORRIDOR = 4
+
+DEFAULT_TABLE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                  "tuning_table.json")
+
+
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= x (bucket edge for shape binning)."""
+    if x <= 1:
+        return 1
+    return 1 << (x - 1).bit_length()
+
+
+# ---------------------------------------------------------------------------
+# Shape buckets: tuning generalizes across shapes within a pow2 bucket
+# ---------------------------------------------------------------------------
+
+
+def rowwise_bucket(total_rows: int, row_bytes: int) -> str:
+    return f"rows{next_pow2(total_rows)}:rb{next_pow2(row_bytes)}"
+
+
+def gemm_bucket(m: int, n: int, k: int) -> str:
+    return f"m{next_pow2(m)}:n{next_pow2(n)}:k{next_pow2(k)}"
+
+
+def attention_bucket(sq: int, skv: int, d: int) -> str:
+    return f"sq{next_pow2(sq)}:skv{next_pow2(skv)}:d{next_pow2(d)}"
+
+
+def parse_bucket(bucket: str) -> Dict[str, int]:
+    """Inverse of the bucket formatters: field name -> representative
+    (pow2 upper-edge) value.  The representative shape is what
+    :func:`check_table` validates entries against."""
+    out: Dict[str, int] = {}
+    for part in bucket.split(":"):
+        name = part.rstrip("0123456789")
+        if not name or name == part:
+            raise ValueError(f"malformed bucket field {part!r} in {bucket!r}")
+        out[name] = int(part[len(name):])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Candidate grids (legality = the Eq. 1 occupancy algebra)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RowwiseCandidate:
+    """One legal staging point for a rowwise (1-D grid) kernel."""
+
+    block_rows: int
+    n_buffers: int
+    grid_steps: int
+    occupancy: int
+
+    def params(self) -> Dict[str, int]:
+        return {"block_rows": self.block_rows, "n_buffers": self.n_buffers}
+
+
+def _rank_key(c: RowwiseCandidate) -> Tuple:
+    """Structural cost order: fewest DMA issues, then enough resident
+    stages (capped), deeper buffering and larger blocks breaking ties."""
+    return (c.grid_steps, -min(c.occupancy, OCCUPANCY_CAP), -c.n_buffers,
+            -c.block_rows)
+
+
+def rowwise_candidates(total_rows: int, row_bytes: int,
+                       dialect: Dialect = TARGET, *,
+                       max_block_rows: Optional[int] = None,
+                       pow2_blocks: bool = False,
+                       min_occupancy: int = 2,
+                       n_buffer_choices: Sequence[int] = N_BUFFER_CHOICES
+                       ) -> List[RowwiseCandidate]:
+    """Every legal ``(block_rows, n_buffers)`` point, structurally ranked.
+
+    Block rows walk the power-of-two ladder from ``SUBLANES`` up to the
+    rounded problem size, allowed up to ``CAP_CORRIDOR``× beyond the
+    kernel's static ``max_block_rows`` cap (the cap is the *untuned*
+    heuristic's guard; a validated table entry may supersede it within the
+    corridor).  Legality is ``buffer_occupancy >= min_occupancy`` — the
+    same Eq. 1 algebra the heuristic planner uses.
+    """
+    if total_rows <= 0 or row_bytes <= 0:
+        raise ValueError("total_rows and row_bytes must be positive")
+    rounded_total = -(-total_rows // SUBLANES) * SUBLANES
+    cap = rounded_total
+    if max_block_rows is not None:
+        cap = min(cap, max_block_rows * CAP_CORRIDOR)
+    blocks = []
+    b = SUBLANES
+    while b <= cap:
+        blocks.append(b)
+        b *= 2
+    if not pow2_blocks and blocks and cap != blocks[-1]:
+        # the non-pow2 roof block (largest SUBLANES multiple under the cap)
+        roof = (cap // SUBLANES) * SUBLANES
+        if roof > blocks[-1]:
+            blocks.append(roof)
+    out = []
+    for br in blocks:
+        steps = -(-rounded_total // br)
+        for nb in n_buffer_choices:
+            occ = dialect.buffer_occupancy(br * row_bytes, nb)
+            if occ >= min_occupancy:
+                out.append(RowwiseCandidate(br, nb, steps, occ))
+    if not out:
+        # tiny scratchpad budgets: the floor plan is the only choice — the
+        # planner documents that the invariant clamps at one SUBLANES block
+        out.append(RowwiseCandidate(
+            SUBLANES, 2, -(-rounded_total // SUBLANES),
+            dialect.buffer_occupancy(SUBLANES * row_bytes, 2)))
+    return sorted(out, key=_rank_key)
+
+
+def gemm_candidates(m: int, n: int, k: int, dialect: Dialect = TARGET,
+                    dtype=jnp.float32) -> List[Dict]:
+    """Legal ``(bm, bn, bk)`` tiles ranked by the tiled-GEMM traffic model.
+
+    Working set of one step = A tile + B tile + f32 accumulator; legality
+    keeps a double-buffered occupancy of at least 2 under Eq. 1.  Rank is
+    the modeled HBM traffic (A re-read ``ceil(n/bn)`` times, B re-read
+    ``ceil(m/bm)`` times), ties broken toward matrix-tile alignment and
+    deeper k-tiles (pipeline depth).
+    """
+    itemsize = jnp.dtype(dtype).itemsize
+    tile = dialect.matrix_unit.tile[0] if dialect.matrix_unit else 128
+    edges = (128, 256, 512, 1024)
+    out = []
+    for bm in edges:
+        for bn in edges:
+            for bk in (128, 256, 512):
+                working = (bm * bk + bk * bn) * itemsize + bm * bn * 4
+                if dialect.buffer_occupancy(working, 2) < 2:
+                    continue
+                hbm = (m * k * itemsize * -(-n // bn)
+                       + k * n * itemsize * -(-m // bm)
+                       + m * n * 4)
+                aligned = (bm % tile == 0 and bn % tile == 0
+                           and bk % tile == 0)
+                out.append((hbm, 0 if aligned else 1, -bk,
+                            {"block": [bm, bn, bk]}))
+    out.sort(key=lambda t: t[:3])
+    return [params for *_rank, params in out]
+
+
+def attention_candidates(sq: int, skv: int, d: int,
+                         dialect: Dialect = TARGET) -> List[Dict]:
+    """Legal ``(block_q, block_kv)`` pairs for the flash kernel.
+
+    Working set of one step = q block + k/v blocks + f32 accumulator +
+    the (bq, bkv) score tile; rank prefers fewer grid steps (larger
+    blocks), kv depth breaking ties (longer sequential arbitrary axis per
+    revisit)."""
+    out = []
+    for bq in (128, 256, 512):
+        for bkv in (128, 256, 512):
+            working = (bq * d + 2 * bkv * d + bq * d) * 4 + bq * bkv * 4
+            if dialect.buffer_occupancy(working, 2) < 2:
+                continue
+            steps = -(-sq // bq) * -(-skv // bkv)
+            out.append((steps, -bkv, -bq,
+                        {"block_q": bq, "block_kv": bkv}))
+    out.sort(key=lambda t: t[:3])
+    return [params for *_rank, params in out]
+
+
+# ---------------------------------------------------------------------------
+# Per-op tuning spaces: kernels register how their parameters are derived,
+# so table validation and the autotune CLI share one source of truth.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSpace:
+    """How one op's tuning candidates are enumerated from a bucket."""
+
+    kind: str                                 # rowwise | gemm | attention
+    max_block_rows: Optional[int] = None      # rowwise: static latency cap
+    pow2_blocks: bool = False                 # rowwise: tree-reduce granule
+    min_occupancy: int = 2
+
+
+OP_SPACES: Dict[str, OpSpace] = {}
+
+
+def register_op_space(op: str, kind: str, **kw) -> OpSpace:
+    """Kernels call this at import so the tuner knows their constraints."""
+    space = OpSpace(kind=kind, **kw)
+    OP_SPACES[op] = space
+    return space
+
+
+def candidates_for(op: str, bucket: str,
+                   dialect: Dialect = TARGET) -> List[Dict]:
+    """The legal candidate params for ``op`` at a bucket's representative
+    shape — the grid :func:`check_table` validates entries against."""
+    space = OP_SPACES[op]
+    rep = parse_bucket(bucket)
+    if space.kind == "rowwise":
+        cands = rowwise_candidates(
+            rep["rows"], rep["rb"], dialect,
+            max_block_rows=space.max_block_rows,
+            pow2_blocks=space.pow2_blocks,
+            min_occupancy=space.min_occupancy)
+        return [c.params() for c in cands]
+    if space.kind == "gemm":
+        return gemm_candidates(rep["m"], rep["n"], rep["k"], dialect)
+    if space.kind == "attention":
+        return attention_candidates(rep["sq"], rep["skv"], rep["d"], dialect)
+    raise ValueError(f"unknown tuning space kind {space.kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# The persisted table
+# ---------------------------------------------------------------------------
+
+
+class TuningTable:
+    """Per-``(op, mode, dialect, shape-bucket)`` winning parameters."""
+
+    def __init__(self, entries: Optional[Dict[str, Dict]] = None,
+                 path: Optional[str] = None):
+        self.entries = dict(entries or {})
+        self.path = path
+
+    @staticmethod
+    def key(op: str, mode: str, dialect: str, bucket: str) -> str:
+        return f"{op}|{mode}|{dialect}|{bucket}"
+
+    @classmethod
+    def load(cls, path: str = DEFAULT_TABLE_PATH) -> "TuningTable":
+        if not os.path.exists(path):
+            return cls({}, path)
+        with open(path) as f:
+            data = json.load(f)
+        return cls(data.get("entries", {}), path)
+
+    def save(self, path: Optional[str] = None) -> str:
+        path = path or self.path or DEFAULT_TABLE_PATH
+        data = {"version": 1,
+                "entries": {k: self.entries[k]
+                            for k in sorted(self.entries)}}
+        with open(path, "w") as f:
+            json.dump(data, f, indent=1, sort_keys=True)
+            f.write("\n")
+        return path
+
+    def lookup(self, op: str, mode: str, dialect: str,
+               bucket: str) -> Optional[Dict]:
+        return self.entries.get(self.key(op, mode, dialect, bucket))
+
+    def record(self, op: str, mode: str, dialect: str, bucket: str,
+               params: Mapping, source: str = "structural") -> None:
+        entry = dict(params)
+        entry["source"] = source
+        self.entries[self.key(op, mode, dialect, bucket)] = entry
+
+
+#: the committed table every kernel consults (loaded once at import)
+TUNING_TABLE = TuningTable.load()
+
+
+# ---------------------------------------------------------------------------
+# Kernel-facing consultation API (missing/illegal entries degrade silently)
+# ---------------------------------------------------------------------------
+
+
+def tuned_plan(op: str, total_rows: int, row_bytes: int, *, mode: str,
+               dialect: Dialect = TARGET,
+               table: Optional[TuningTable] = None, **plan_kw):
+    """``plan_row_pipeline`` with the table's winner for this bucket.
+
+    The entry's ``block_rows`` / ``n_buffers`` ride in through the plan's
+    ``tuned=`` override, which still enforces the occupancy invariant and
+    the problem-size clamps — a bad entry degrades to the heuristic."""
+    table = TUNING_TABLE if table is None else table
+    entry = table.lookup(op, mode, dialect.name,
+                         rowwise_bucket(total_rows, row_bytes))
+    return plan_row_pipeline(total_rows, row_bytes, mode=mode,
+                             dialect=dialect, tuned=entry, **plan_kw)
+
+
+def tuned_block(op: str, mode: str, m: int, n: int, k: int,
+                dialect: Dialect = TARGET,
+                table: Optional[TuningTable] = None
+                ) -> Optional[Tuple[int, int, int]]:
+    """The table's ``(bm, bn, bk)`` for a GEMM-shaped op, if recorded."""
+    table = TUNING_TABLE if table is None else table
+    entry = table.lookup(op, mode, dialect.name, gemm_bucket(m, n, k))
+    if entry and "block" in entry:
+        bm, bn, bk = entry["block"]
+        return int(bm), int(bn), int(bk)
+    return None
+
+
+def tuned_attention_blocks(mode: str, sq: int, skv: int, d: int,
+                           dialect: Dialect = TARGET,
+                           table: Optional[TuningTable] = None
+                           ) -> Optional[Tuple[int, int]]:
+    """The table's ``(block_q, block_kv)`` for the flash kernel, if any."""
+    table = TUNING_TABLE if table is None else table
+    entry = table.lookup("flash_attention", mode, dialect.name,
+                         attention_bucket(sq, skv, d))
+    if entry and "block_q" in entry and "block_kv" in entry:
+        return int(entry["block_q"]), int(entry["block_kv"])
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Autotuning (structural by default; live measurement optional)
+# ---------------------------------------------------------------------------
+
+
+def measure_candidates(build_fn: Callable[[Mapping], Callable],
+                       candidates: Sequence[Mapping], *,
+                       warmup: int = 1, iters: int = 3,
+                       top_k: int = 4) -> Tuple[Dict, List[Tuple[float, Dict]]]:
+    """Re-rank the structural top-``k`` by live wall clock.
+
+    ``build_fn(params)`` returns a zero-arg callable that runs the kernel
+    with those staging parameters on the live backend (the caller owns
+    cache invalidation — see ``scripts/autotune.py``).  Returns the winner
+    and the full ``(median_s, params)`` ladder.
+    """
+    import time
+
+    import jax
+
+    timed = []
+    for params in list(candidates)[:top_k]:
+        fn = build_fn(params)
+        for _ in range(warmup):
+            jax.block_until_ready(fn())
+        samples = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            samples.append(time.perf_counter() - t0)
+        timed.append((float(sorted(samples)[len(samples) // 2]),
+                      dict(params)))
+    timed.sort(key=lambda t: t[0])
+    return timed[0][1], timed
+
+
+def autotune_entry(table: TuningTable, op: str, mode: str, bucket: str,
+                   dialect: Dialect = TARGET,
+                   build_fn: Optional[Callable] = None, **measure_kw
+                   ) -> Optional[Dict]:
+    """Pick and record the winner for one ``(op, mode, dialect, bucket)``.
+
+    Structural ranking decides unless ``build_fn`` is given, in which case
+    the structural top-k is re-ranked by measurement."""
+    cands = candidates_for(op, bucket, dialect)
+    if not cands:
+        return None
+    if build_fn is not None:
+        winner, _ = measure_candidates(build_fn, cands, **measure_kw)
+        source = "measured"
+    else:
+        winner, source = cands[0], "structural"
+    table.record(op, mode, dialect.name, bucket, winner, source)
+    return winner
+
+
+# ---------------------------------------------------------------------------
+# CI sync check: committed entries must live inside the candidate grid
+# ---------------------------------------------------------------------------
+
+
+def check_table(registry, table: Optional[TuningTable] = None) -> List[str]:
+    """Validate every table entry against the live registry + candidate
+    grids.  Returns failure strings (empty = in sync).  Stale ops/modes/
+    dialects and params outside the legal grid all fail — the check needs
+    no TPU, so CI runs it on every push."""
+    table = TUNING_TABLE if table is None else table
+    failures = []
+    for key, entry in table.entries.items():
+        parts = key.split("|")
+        if len(parts) != 4:
+            failures.append(f"{key}: malformed key")
+            continue
+        op, mode, dialect_name, bucket = parts
+        if op not in registry.ops():
+            failures.append(f"{key}: op {op!r} not registered")
+            continue
+        if mode not in registry.modes(op):
+            failures.append(f"{key}: mode {mode!r} not registered for {op}")
+            continue
+        if dialect_name not in DIALECTS:
+            failures.append(f"{key}: unknown dialect {dialect_name!r}")
+            continue
+        if op not in OP_SPACES:
+            failures.append(f"{key}: op has no registered tuning space")
+            continue
+        try:
+            cands = candidates_for(op, bucket, get_dialect(dialect_name))
+        except (KeyError, ValueError) as e:
+            failures.append(f"{key}: bad bucket ({e})")
+            continue
+        params = {k: v for k, v in entry.items() if k != "source"}
+        if params not in cands:
+            failures.append(
+                f"{key}: params {params} outside the legal candidate grid "
+                f"({len(cands)} candidates)")
+    return failures

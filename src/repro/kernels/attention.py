@@ -34,14 +34,31 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import (IsaMode, KernelContract, Primitive, REGISTRY,
-                        TARGET, align_up, fold_rows, row_reduce_shuffle,
-                        scratch_tree_bytes, scratch_tree_reduce,
-                        tree_stages, validate_contract)
+                        TARGET, align_up, fold_rows, register_op_space,
+                        row_reduce_shuffle, scratch_tree_bytes,
+                        scratch_tree_reduce, tree_stages,
+                        tuned_attention_blocks, validate_contract)
 from repro.core.pipeline import CompilerParams
 from repro.kernels import ref as _ref
 
 NEG_INF = -1e30  # finite sentinel: keeps exp() NaN-free on fully-masked rows
 LANES = TARGET.W
+DEFAULT_BLOCK_Q = 256
+DEFAULT_BLOCK_KV = 256
+register_op_space("flash_attention", "attention")
+
+
+def resolve_blocks(mode: str, sq: int, skv: int, d: int,
+                   block_q=None, block_kv=None):
+    """Caller-pinned blocks win; otherwise the autotuner table, then the
+    static defaults.  Shared by the kernel and ``structural_cost`` so the
+    modeled block accounting matches the executed tiling."""
+    if block_q is None or block_kv is None:
+        tuned = tuned_attention_blocks(mode, sq, skv, d)
+        tq, tkv = tuned if tuned else (DEFAULT_BLOCK_Q, DEFAULT_BLOCK_KV)
+        block_q = tq if block_q is None else block_q
+        block_kv = tkv if block_kv is None else block_kv
+    return block_q, block_kv
 
 ABSTRACT_CONTRACT = KernelContract(
     kernel="flash_attention", mode=IsaMode.ABSTRACT,
@@ -149,7 +166,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, kv_offset: int | None = None,
                     mode: str = "native", interpret: bool = True,
-                    block_q: int = 256, block_kv: int = 256) -> jax.Array:
+                    block_q: int | None = None,
+                    block_kv: int | None = None) -> jax.Array:
     """q: [B,H,Sq,D]; k/v: [B,Hkv,Skv,D] (GQA via index-map head folding)."""
     b, h, sq, d = q.shape
     _, hkv, skv, _ = k.shape
@@ -159,6 +177,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         kv_offset = skv - sq
     scale = 1.0 / (d ** 0.5)
 
+    block_q, block_kv = resolve_blocks(mode, sq, skv, d, block_q, block_kv)
     block_q = min(block_q, align_up(sq, 128))
     block_kv = min(block_kv, align_up(skv, 128))
     if mode != "native":
@@ -218,7 +237,8 @@ def _pad_seq(x: jax.Array, block: int) -> jax.Array:
 
 def structural_cost(b: int, h: int, sq: int, skv: int, d: int,
                     causal: bool, mode: str,
-                    block_q: int = 256, block_kv: int = 256) -> dict:
+                    block_q: int | None = None,
+                    block_kv: int | None = None) -> dict:
     """Visited-block accounting + the §VII.C scratch-traffic delta.
 
     Grid-level predication (native block-skip) controls how many blocks
@@ -226,6 +246,7 @@ def structural_cost(b: int, h: int, sq: int, skv: int, d: int,
     block pays: two rowwise reductions (max, sum) per block, each either
     log2(W) scratch round-trips (abstract), log2(W) register shuffles
     (abstract+shuffle), or one native fused reduce."""
+    block_q, block_kv = resolve_blocks(mode, sq, skv, d, block_q, block_kv)
     nq = -(-sq // block_q)
     nk = -(-skv // block_kv)
     total = nq * nk

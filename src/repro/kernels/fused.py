@@ -1,0 +1,429 @@
+"""Fused-epilogue lowerings — eliminating the inter-kernel HBM round trip.
+
+The paper's §VII.C lesson generalized one level up: traffic to the
+nearest memory that *could* have stayed on-chip is the quantity that
+decides performance.  Between two kernels, that traffic is the activation
+staged to HBM by the producer and immediately read back by the consumer —
+one full ``hbm_bytes`` round trip per transformer sublayer that no
+per-kernel optimization can remove.  These are the first registrations
+where HBM traffic is the *treatment*, not the control:
+
+- :func:`rmsnorm_matmul` — the norm is computed as a GEMM prologue: each
+  row block is normalized in VMEM and consumed directly by the MXU
+  contraction, so the normalized activation is **never materialized to
+  HBM**.  Its ``structural_cost.hbm_bytes`` is the unfused
+  ``rmsnorm + gemm`` sum minus exactly one activation round trip
+  (``2 · rows · d · itemsize``: the write plus the read-back).
+- :func:`add_rmsnorm` — the residual add is fused into the norm's load
+  stage: the kernel reads the two addends directly and emits both the
+  summed residual (the stream the next sublayer needs) and its norm.
+  The *read-back* leg of the staging round trip disappears
+  (``rows · d · itemsize``); the write survives because the residual
+  stream owns the sum — the cost model says so honestly rather than
+  claiming the full round trip.
+
+Both ops carry the full Table V mode matrix.  The fused *program
+structure* (two abstract ops realized by one kernel) is a lowering
+decision available to every budget; within the kernel each mode spends
+only its own cross-lane budget — the abstract variant still pays the
+scratch-tree round-trips for the moment reduction and the moment
+re-stage (the universal budget carries no fusion guarantee *inside* the
+kernel either), while only ``native`` claims the target's
+``fused_epilogue`` feature.  The ``library`` row is the **unfused jnp
+pair** — simultaneously the numerical reference and the declared
+fallback target when no fused lowering is legal (never a silent rewrite).
+
+Tile shapes come from the shared GEMM resolver
+(``repro.kernels.gemm.block_shape_for``, autotuner-aware) so the modeled
+traffic and the executed tiling cannot drift apart, and the row plan of
+``add_rmsnorm`` consults the tuning table like every other rowwise
+kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import (IsaMode, KernelContract, Primitive, REGISTRY,
+                        TARGET, align_up, register_op_space,
+                        scratch_tree_bytes, tree_stages, tuned_plan,
+                        validate_contract)
+from repro.core.pipeline import CompilerParams
+from repro.kernels import gemm as _gemm
+from repro.kernels import ref as _ref
+from repro.kernels import rmsnorm as _rmsnorm
+
+LANES = TARGET.W
+_MAX_BLOCK_ROWS = 64          # add_rmsnorm latency cap (mirrors rmsnorm)
+register_op_space("add_rmsnorm", "rowwise", max_block_rows=_MAX_BLOCK_ROWS)
+# rmsnorm_matmul's tile IS a GEMM tile: it shares the "gemm" tuning space
+# (one table row tunes both), so no separate op space is registered.
+
+# --------------------------------------------------------------------------
+# Contracts: the fused ops spend the union of their constituents' budgets.
+# --------------------------------------------------------------------------
+
+_RM_ABSTRACT = KernelContract(
+    kernel="rmsnorm_matmul", mode=IsaMode.ABSTRACT,
+    primitives=frozenset({
+        Primitive.LOCKSTEP_GROUP, Primitive.MANAGED_SCRATCHPAD,
+        Primitive.WORKGROUP_BARRIER, Primitive.HIERARCHICAL_MEMORY,
+        Primitive.IDENTITY_REGISTERS, Primitive.ASYNC_MEMORY,
+        Primitive.REGISTER_OCCUPANCY,
+    }))
+_RM_SHUFFLE = KernelContract(
+    kernel="rmsnorm_matmul", mode=IsaMode.ABSTRACT_SHUFFLE,
+    primitives=_RM_ABSTRACT.primitives | {Primitive.LANE_SHUFFLE})
+_RM_NATIVE = KernelContract(
+    kernel="rmsnorm_matmul", mode=IsaMode.NATIVE,
+    primitives=frozenset(Primitive),
+    native_features=frozenset({"fused_epilogue", "mxu_aligned_tiles",
+                               "dimension_semantics", "multi_buffering"}))
+
+_AR_ABSTRACT = KernelContract(
+    kernel="add_rmsnorm", mode=IsaMode.ABSTRACT,
+    primitives=frozenset({
+        Primitive.LOCKSTEP_GROUP, Primitive.MANAGED_SCRATCHPAD,
+        Primitive.WORKGROUP_BARRIER, Primitive.HIERARCHICAL_MEMORY,
+        Primitive.IDENTITY_REGISTERS, Primitive.ASYNC_MEMORY,
+    }))
+_AR_SHUFFLE = KernelContract(
+    kernel="add_rmsnorm", mode=IsaMode.ABSTRACT_SHUFFLE,
+    primitives=_AR_ABSTRACT.primitives | {Primitive.LANE_SHUFFLE})
+_AR_NATIVE = KernelContract(
+    kernel="add_rmsnorm", mode=IsaMode.NATIVE,
+    primitives=frozenset(Primitive),
+    native_features=frozenset({"fused_epilogue", "dimension_semantics",
+                               "multi_buffering"}))
+
+for _c in (_RM_ABSTRACT, _RM_SHUFFLE, _RM_NATIVE,
+           _AR_ABSTRACT, _AR_SHUFFLE, _AR_NATIVE):
+    validate_contract(_c)
+
+
+# --------------------------------------------------------------------------
+# rmsnorm @ w_proj: the norm as a GEMM prologue
+# --------------------------------------------------------------------------
+
+
+def _rmsnorm_matmul_kernel(x_ref, w_ref, p_ref, o_ref, scratch_ref, *,
+                           eps: float, mode: str, d_true: int):
+    x = x_ref[...].astype(jnp.float32)                    # (bm, d)
+    w = w_ref[...].astype(jnp.float32)                    # (1, d)
+    # one shared source for the per-mode moment discipline (rmsnorm.py)
+    y = _rmsnorm.normalize_block(x, w, scratch_ref, eps=eps, mode=mode,
+                                 d_true=d_true)
+    # the epilogue: the normalized block goes straight into the MXU
+    # contraction from VMEM — it never exists in HBM.
+    o_ref[...] = jax.lax.dot_general(
+        y, p_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "eps", "interpret"))
+def rmsnorm_matmul(x: jax.Array, weight: jax.Array, w_proj: jax.Array, *,
+                   eps: float = 1e-6, mode: str = "native",
+                   interpret: bool = True) -> jax.Array:
+    """``rmsnorm(x, weight) @ w_proj`` in one kernel.
+
+    x: [..., D]; weight: [D]; w_proj: [D, N] -> [..., N] (x.dtype, f32
+    accumulation).  Tiled over (row blocks × N blocks) with the shared
+    GEMM tile resolver; the full feature row stays resident per block
+    (the moment needs the whole row), so D is not tiled.
+    """
+    if mode == "library":
+        y = _ref.rmsnorm(x, weight, eps)
+        return jnp.einsum("...d,dn->...n", y, w_proj.astype(y.dtype))
+    *lead, d = x.shape
+    n = w_proj.shape[1]
+    assert w_proj.shape[0] == d, (x.shape, w_proj.shape)
+    rows = 1
+    for s in lead:
+        rows *= s
+    x2d = x.reshape(rows, d)
+    w2d = weight.reshape(1, d)
+    p2d = w_proj
+
+    d_padded = d
+    if mode != "native":
+        pad_d = (-d) % LANES
+        if pad_d:
+            d_padded = d + pad_d
+            x2d = jnp.pad(x2d, ((0, 0), (0, pad_d)))
+            w2d = jnp.pad(w2d, ((0, 0), (0, pad_d)))
+            p2d = jnp.pad(p2d, ((0, pad_d), (0, 0)))
+
+    bm, bn, _ = _gemm.block_shape_for(mode, rows, n, d, x.dtype)
+    bm = min(bm, align_up(rows, 128))
+    bn = min(bn, align_up(n, 128))
+    pad_m = (-rows) % bm
+    pad_n = (-n) % bn
+    if pad_m:
+        x2d = jnp.pad(x2d, ((0, pad_m), (0, 0)))
+    if pad_n:
+        p2d = jnp.pad(p2d, ((0, 0), (0, pad_n)))
+    mp, np_ = rows + pad_m, n + pad_n
+    grid = (mp // bm, np_ // bn)
+
+    params = None
+    if mode == "native":
+        params = CompilerParams(
+            dimension_semantics=("parallel", "parallel"))
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_matmul_kernel, eps=eps, mode=mode,
+                          d_true=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d_padded), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, d_padded), lambda i, j: (0, 0)),
+            pl.BlockSpec((d_padded, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        # only the abstract moment tree stages through scratch
+        scratch_shapes=[pltpu.VMEM(
+            (bm, LANES) if mode == "abstract" else (8, LANES),
+            jnp.float32)],
+        compiler_params=params,
+        interpret=interpret,
+        name=f"uisa_rmsnorm_matmul_{mode.replace('+', '_')}",
+    )(x2d, w2d, p2d)
+    return out[:rows, :n].reshape(*lead, n)
+
+
+def structural_cost_rmsnorm_matmul(rows: int, d: int, n: int, mode: str,
+                                   dtype=jnp.float32) -> dict:
+    """The unfused pair's traffic minus exactly one activation round trip.
+
+    Composes the registered ``gemm`` and ``rmsnorm`` cost models (same
+    shapes, same mode, same autotuned tiles), then removes the write and
+    read-back of the normalized activation — the two legs of the
+    inter-kernel staging this lowering eliminates.  ``library`` is the
+    unfused pair itself: full sum, nothing saved.
+    """
+    itemsize = jnp.dtype(dtype).itemsize
+    g = _gemm.structural_cost(m=rows, n=n, k=d, mode=mode, dtype=dtype)
+    r = _rmsnorm.structural_cost(rows=rows, d=d, mode=mode, dtype=dtype)
+    unfused = g["hbm_bytes"] + r["hbm_bytes"]
+    saved = 0 if mode == "library" else 2 * rows * d * itemsize
+    if mode == "library":
+        bm = bn = 512
+    else:
+        # the kernel's own problem-size clamps, so block/steps/scratch
+        # report the executed tiling (re-read counts are unaffected: a
+        # clamp only fires when the tile already covers the dimension)
+        bm, bn, _ = _gemm.block_shape_for(mode, rows, n, d, dtype)
+        bm = min(bm, align_up(rows, 128))
+        bn = min(bn, align_up(n, 128))
+    steps = -(-rows // bm) * -(-n // bn)
+    if mode == "abstract":
+        round_trips = tree_stages(LANES) + 1   # tree + moment re-stage
+        scratch_bytes = steps * (scratch_tree_bytes(LANES, rows=bm)
+                                 + 3 * bm * 4)
+    else:
+        round_trips = 0
+        scratch_bytes = 0
+    return {
+        "hbm_bytes": unfused - saved,
+        "hbm_bytes_unfused_pair": unfused,
+        "hbm_bytes_saved": saved,
+        "flops": g["flops"],
+        "block": (bm, bn),
+        "blocks": steps,
+        "scratch_round_trips_per_block": round_trips,
+        "scratch_bytes_total": scratch_bytes,
+        "lane_shuffles_per_block": tree_stages(LANES)
+        if mode == "abstract+shuffle" else 0,
+        "fused_epilogue": mode != "library",
+    }
+
+
+# --------------------------------------------------------------------------
+# (x + residual) -> rmsnorm: the add fused into the norm's load stage
+# --------------------------------------------------------------------------
+
+
+def _add_rmsnorm_kernel(x_ref, r_ref, w_ref, o_ref, s_ref, scratch_ref, *,
+                        eps: float, mode: str, d_true: int):
+    # the load stage IS the residual add: both addends arrive in VMEM and
+    # the staged sum is never read back from HBM by the norm.
+    s = x_ref[...].astype(jnp.float32) + r_ref[...].astype(jnp.float32)
+    s_ref[...] = s.astype(s_ref.dtype)
+    w = w_ref[...].astype(jnp.float32)
+    o_ref[...] = _rmsnorm.normalize_block(
+        s, w, scratch_ref, eps=eps, mode=mode,
+        d_true=d_true).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "eps", "interpret"))
+def add_rmsnorm(x: jax.Array, residual: jax.Array, weight: jax.Array, *,
+                eps: float = 1e-6, mode: str = "native",
+                interpret: bool = True):
+    """``(rmsnorm(x + residual, weight), x + residual)`` in one kernel.
+
+    Returns the norm *and* the summed residual stream (both [..., D],
+    x.dtype) — the residual→norm hot pair of every transformer sublayer.
+    """
+    assert x.shape == residual.shape, (x.shape, residual.shape)
+    if mode == "library":
+        s = x + residual
+        return _ref.rmsnorm(s, weight, eps), s
+    *lead, d = x.shape
+    rows = 1
+    for sdim in lead:
+        rows *= sdim
+    x2d = x.reshape(rows, d)
+    r2d = residual.reshape(rows, d)
+    w2d = weight.reshape(1, d)
+    d_padded = d
+    if mode != "native":
+        pad_d = (-d) % LANES
+        if pad_d:
+            d_padded = d + pad_d
+            x2d = jnp.pad(x2d, ((0, 0), (0, pad_d)))
+            r2d = jnp.pad(r2d, ((0, 0), (0, pad_d)))
+            w2d = jnp.pad(w2d, ((0, 0), (0, pad_d)))
+
+    itemsize = jnp.dtype(x.dtype).itemsize
+    plan = tuned_plan("add_rmsnorm", rows, 2 * d_padded * itemsize,
+                      mode=mode, max_block_rows=_MAX_BLOCK_ROWS,
+                      semantics=("parallel",))
+    block = plan.block_rows
+    pad = plan.padded_rows - rows
+    if pad:
+        x2d = jnp.pad(x2d, ((0, pad), (0, 0)))
+        r2d = jnp.pad(r2d, ((0, pad), (0, 0)))
+
+    normed, summed = pl.pallas_call(
+        functools.partial(_add_rmsnorm_kernel, eps=eps, mode=mode,
+                          d_true=d),
+        grid=plan.grid,
+        in_specs=[
+            pl.BlockSpec((block, d_padded), lambda i: (i, 0)),
+            pl.BlockSpec((block, d_padded), lambda i: (i, 0)),
+            pl.BlockSpec((1, d_padded), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, d_padded), lambda i: (i, 0)),
+            pl.BlockSpec((block, d_padded), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x2d.shape, x.dtype),
+            jax.ShapeDtypeStruct(x2d.shape, x.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM(
+            (block, LANES) if mode == "abstract" else (8, LANES),
+            jnp.float32)],
+        compiler_params=plan.compiler_params,
+        interpret=interpret,
+        name=f"uisa_add_rmsnorm_{mode.replace('+', '_')}",
+    )(x2d, r2d, w2d)
+    normed = normed[:rows, :d].reshape(x.shape)
+    summed = summed[:rows, :d].reshape(x.shape)
+    return normed, summed
+
+
+def structural_cost_add_rmsnorm(rows: int, d: int, mode: str,
+                                dtype=jnp.float32) -> dict:
+    """The read-back leg of the staging round trip, eliminated.
+
+    Unfused pair = elementwise add (read x, read residual, write sum) +
+    registered rmsnorm (read sum, read weight, write norm): five
+    activation-sized HBM terms.  Fused = read x, read residual, write sum,
+    write norm: four.  The surviving write is the residual stream's own
+    output, so the honest saving is ``rows·d·itemsize`` — one leg, not
+    the full round trip (cf. ``rmsnorm_matmul``, where the activation
+    vanishes from HBM entirely).
+    """
+    itemsize = jnp.dtype(dtype).itemsize
+    r = _rmsnorm.structural_cost(rows=rows, d=d, mode=mode, dtype=dtype)
+    unfused = 3 * rows * d * itemsize + r["hbm_bytes"]
+    saved = 0 if mode == "library" else rows * d * itemsize
+    d_padded = d if mode == "native" else d + ((-d) % LANES)
+    plan = tuned_plan("add_rmsnorm", rows, 2 * d_padded * itemsize,
+                      mode=mode if mode != "library" else "native",
+                      max_block_rows=_MAX_BLOCK_ROWS,
+                      semantics=("parallel",))
+    blocks = plan.grid[0]
+    if mode == "abstract":
+        round_trips = tree_stages(LANES) + 1   # tree + moment re-stage
+        scratch_bytes = blocks * (
+            scratch_tree_bytes(LANES, rows=plan.block_rows)
+            + 3 * plan.block_rows * 4)
+    else:
+        round_trips = 0
+        scratch_bytes = 0
+    return {
+        "hbm_bytes": unfused - saved,
+        "hbm_bytes_unfused_pair": unfused,
+        "hbm_bytes_saved": saved,
+        "blocks": blocks,
+        "block_rows": plan.block_rows,
+        "pipeline_occupancy": plan.occupancy,
+        "scratch_round_trips_per_block": round_trips,
+        "scratch_bytes_total": scratch_bytes,
+        "lane_shuffles_per_block": tree_stages(LANES)
+        if mode == "abstract+shuffle" else 0,
+        "fused_epilogue": mode != "library",
+    }
+
+
+# --------------------------------------------------------------------------
+# Library rows: the unfused jnp pairs (numerical reference AND the declared
+# fallback target — requesting an illegal fused mode degrades to the pair
+# with a warning + a recorded event, never silently).
+# --------------------------------------------------------------------------
+
+
+def _rmsnorm_matmul_library(x, weight, w_proj, *, eps: float = 1e-6,
+                            interpret: bool = True):
+    del interpret
+    return rmsnorm_matmul(x, weight, w_proj, eps=eps, mode="library")
+
+
+def _add_rmsnorm_library(x, residual, weight, *, eps: float = 1e-6,
+                         interpret: bool = True):
+    del interpret
+    return add_rmsnorm(x, residual, weight, eps=eps, mode="library")
+
+
+for _mode, _contract in (("abstract", _RM_ABSTRACT),
+                         ("abstract+shuffle", _RM_SHUFFLE),
+                         ("native", _RM_NATIVE)):
+    REGISTRY.register(
+        "rmsnorm_matmul", _mode,
+        functools.partial(rmsnorm_matmul, mode=_mode), contract=_contract,
+        cost=functools.partial(structural_cost_rmsnorm_matmul, mode=_mode))
+REGISTRY.register(
+    "rmsnorm_matmul", IsaMode.LIBRARY, _rmsnorm_matmul_library,
+    cost=functools.partial(structural_cost_rmsnorm_matmul, mode="library"))
+
+for _mode, _contract in (("abstract", _AR_ABSTRACT),
+                         ("abstract+shuffle", _AR_SHUFFLE),
+                         ("native", _AR_NATIVE)):
+    REGISTRY.register(
+        "add_rmsnorm", _mode,
+        functools.partial(add_rmsnorm, mode=_mode), contract=_contract,
+        cost=functools.partial(structural_cost_add_rmsnorm, mode=_mode))
+REGISTRY.register(
+    "add_rmsnorm", IsaMode.LIBRARY, _add_rmsnorm_library,
+    cost=functools.partial(structural_cost_add_rmsnorm, mode="library"))
+
+# Declared per-mode fallbacks (warned + recorded in fallback_events):
+# the shuffle moment tree degrades to scratch round-trips on a no-shuffle
+# dialect; the target-pinned native epilogue degrades to the unfused XLA
+# pair (the library row) anywhere it is illegal.
+for _op in ("rmsnorm_matmul", "add_rmsnorm"):
+    REGISTRY.declare_fallback(
+        _op, IsaMode.ABSTRACT_SHUFFLE, IsaMode.ABSTRACT,
+        reason="no lane shuffle on this dialect; the moment reduction "
+               "degrades to the scratch-tree lowering")
+    REGISTRY.declare_fallback(
+        _op, IsaMode.NATIVE, IsaMode.LIBRARY,
+        reason="fused native epilogue is target-pinned; the unfused XLA "
+               "pair is the declared escape")

@@ -32,8 +32,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import (IsaMode, KernelContract, Primitive, REGISTRY,
                         TARGET, UNIVERSAL_SET, align_up, choose_block_bytes,
-                        validate_contract)
+                        register_op_space, tuned_block, validate_contract)
 from repro.core.pipeline import CompilerParams
+
+register_op_space("gemm", "gemm")
 
 # --------------------------------------------------------------------------
 # Contracts (validated at import: the abstract variant cannot regress into
@@ -80,6 +82,23 @@ def native_block_shape(dtype=jnp.float32) -> Tuple[int, int, int]:
     return (4 * tile_m, 4 * tile_n, 2 * tile_k)
 
 
+def block_shape_for(mode: str, m: int, n: int, k: int,
+                    dtype=jnp.float32) -> Tuple[int, int, int]:
+    """The (bm, bn, bk) tile for one call: autotuner winner first.
+
+    Consulted by both the kernel and ``structural_cost`` (and by the
+    fused ``rmsnorm_matmul`` lowering), so the modeled traffic and the
+    executed tiling cannot drift apart.  The ``library`` row is XLA's own
+    tiling and is not tunable — callers keep their indicative constant.
+    """
+    tuned = tuned_block("gemm", mode, m, n, k)
+    if tuned is not None:
+        return tuned
+    if mode == "native":
+        return native_block_shape(dtype)
+    return abstract_block_shape(dtype)
+
+
 def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int, out_dtype):
     """Shared body: the algorithm is identical across variants (the paper's
     'structurally equivalent implementations' requirement)."""
@@ -114,10 +133,10 @@ def gemm(a: jax.Array, b: jax.Array, *, mode: str = "native",
         return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
 
     if mode in ("abstract", "abstract+shuffle"):
-        bm, bn, bk = abstract_block_shape(a.dtype)
+        bm, bn, bk = block_shape_for(mode, m, n, k, a.dtype)
         params = None
     elif mode == "native":
-        bm, bn, bk = native_block_shape(a.dtype)
+        bm, bn, bk = block_shape_for(mode, m, n, k, a.dtype)
         params = CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"))
     else:
@@ -161,10 +180,8 @@ def structural_cost(m: int, n: int, k: int, mode: str,
     itemsize = jnp.dtype(dtype).itemsize
     if mode == "library":
         bm = bn = bk = 512  # XLA's default-ish tiling; indicative only
-    elif mode == "native":
-        bm, bn, bk = native_block_shape(dtype)
     else:
-        bm, bn, bk = abstract_block_shape(dtype)
+        bm, bn, bk = block_shape_for(mode, m, n, k, dtype)
     n_reads_a = max(1, -(-n // bn))
     n_reads_b = max(1, -(-m // bm))
     hbm_bytes = (m * k * itemsize * n_reads_a

@@ -36,12 +36,14 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import (IsaMode, KernelContract, Primitive, REGISTRY,
-                        TARGET, lane_tree_reduce, plan_row_pipeline,
+                        TARGET, lane_tree_reduce, register_op_space,
                         scratch_tree_bytes, scratch_tree_reduce,
-                        tree_stages, validate_contract)
+                        tree_stages, tuned_plan, validate_contract)
 
 LANES = TARGET.W
 _MAX_BLOCK_ROWS = 32      # 32×128 = 4096 values per grid step
+register_op_space("histogram", "rowwise", max_block_rows=_MAX_BLOCK_ROWS,
+                  pow2_blocks=True)
 
 _ATOMIC_LOWERING = frozenset({
     Primitive.LOCKSTEP_GROUP, Primitive.MASKED_DIVERGENCE,
@@ -68,9 +70,9 @@ for _c in (ABSTRACT_CONTRACT, SHUFFLE_CONTRACT, NATIVE_CONTRACT):
 def _plan(rows: int, mode: str):
     # pow2 blocks: the abstract variant tree-reduces across the block's
     # flattened element axis, which must be a power of two.
-    return plan_row_pipeline(rows, LANES * 4, mode=mode,
-                             max_block_rows=_MAX_BLOCK_ROWS,
-                             pow2_blocks=True, semantics=("arbitrary",))
+    return tuned_plan("histogram", rows, LANES * 4, mode=mode,
+                      max_block_rows=_MAX_BLOCK_ROWS,
+                      pow2_blocks=True, semantics=("arbitrary",))
 
 
 def _histogram_kernel(x_ref, o_ref, scratch_ref, *, mode: str,

@@ -21,6 +21,7 @@ never silent rewrites.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
@@ -31,6 +32,7 @@ from repro.core.registry import (DEFAULT_POLICY, ExecutionPolicy, REGISTRY,
                                  resolve_policy)
 # importing the kernel modules installs their registry variants
 from repro.kernels import attention as _attention  # noqa: F401
+from repro.kernels import fused as _fused
 from repro.kernels import gemm as _gemm
 from repro.kernels import histogram as _histogram
 from repro.kernels import reduction as _reduction
@@ -50,12 +52,22 @@ PROBE_SHAPES = {
     "rmsnorm": dict(rows=1024, d=1024),
     "histogram": dict(n=1 << 18, num_bins=256),
     "flash_attention": dict(b=1, h=4, sq=1024, skv=1024, d=64, causal=True),
+    "rmsnorm_matmul": dict(rows=1024, d=1024, n=1024),
+    "add_rmsnorm": dict(rows=1024, d=1024),
 }
 
 
+@functools.lru_cache(maxsize=1)
+def _backend_probe() -> str:
+    # one backend query per process: the answer cannot change after the
+    # first device op, and per-call dispatch sits on every kernel hot path
+    return jax.default_backend()
+
+
 def default_interpret() -> bool:
-    """Pallas interpret mode everywhere except a real TPU backend."""
-    return jax.default_backend() != "tpu"
+    """Pallas interpret mode everywhere except a real TPU backend
+    (memoized — the probe used to re-query JAX on every kernel call)."""
+    return _backend_probe() != "tpu"
 
 
 def _resolve(mode, policy, interpret):
@@ -97,7 +109,10 @@ def flash_attention(q, k, v, *, causal: bool = True,
                     kv_offset: Optional[int] = None, mode=None,
                     policy: Optional[ExecutionPolicy] = None,
                     interpret: Optional[bool] = None,
-                    block_q: int = 256, block_kv: int = 256):
+                    block_q: Optional[int] = None,
+                    block_kv: Optional[int] = None):
+    """None block sizes defer to the autotuner table (then the static
+    defaults) via ``attention.resolve_blocks``; explicit values pin."""
     pol, interpret = _resolve(mode, policy, interpret)
     low = REGISTRY.select("flash_attention", pol, shape=dict(
         b=q.shape[0], h=q.shape[1], sq=q.shape[2], skv=k.shape[2],
@@ -118,12 +133,49 @@ def rmsnorm(x, weight, *, eps: float = 1e-6, mode=None,
     return low.impl(x, weight, eps=eps, interpret=interpret)
 
 
+def fused_rmsnorm_matmul(x: jax.Array, weight: jax.Array,
+                         w_proj: jax.Array, *, eps: float = 1e-6,
+                         mode=None,
+                         policy: Optional[ExecutionPolicy] = None,
+                         interpret: Optional[bool] = None):
+    """``rmsnorm(x, weight) @ w_proj`` without the HBM round trip.
+
+    Dispatches the fused multi-op lowering; an illegal mode request
+    follows the *declared* fallbacks (shuffle -> scratch tree, native ->
+    the unfused XLA pair), warned and recorded — never silent."""
+    pol, interpret = _resolve(mode, policy, interpret)
+    rows = 1
+    for s in x.shape[:-1]:
+        rows *= s
+    low = REGISTRY.select("rmsnorm_matmul", pol, shape=dict(
+        rows=rows, d=x.shape[-1], n=w_proj.shape[1]))
+    return low.impl(x, weight, w_proj, eps=eps, interpret=interpret)
+
+
+def fused_add_rmsnorm(x: jax.Array, residual: jax.Array,
+                      weight: jax.Array, *, eps: float = 1e-6, mode=None,
+                      policy: Optional[ExecutionPolicy] = None,
+                      interpret: Optional[bool] = None):
+    """``(rmsnorm(x + residual), x + residual)`` with the residual add
+    fused into the norm's load stage (same fallback discipline as
+    :func:`fused_rmsnorm_matmul`)."""
+    pol, interpret = _resolve(mode, policy, interpret)
+    rows = 1
+    for s in x.shape[:-1]:
+        rows *= s
+    low = REGISTRY.select("add_rmsnorm", pol,
+                          shape=dict(rows=rows, d=x.shape[-1]))
+    return low.impl(x, residual, weight, eps=eps, interpret=interpret)
+
+
 STRUCTURAL_COSTS = {
     "gemm": _gemm.structural_cost,
     "reduction": _reduction.structural_cost,
     "histogram": _histogram.structural_cost,
     "flash_attention": _attention.structural_cost,
     "rmsnorm": _rmsnorm.structural_cost,
+    "rmsnorm_matmul": _fused.structural_cost_rmsnorm_matmul,
+    "add_rmsnorm": _fused.structural_cost_add_rmsnorm,
 }
 
 #: Pallas-variant contracts per op, in portability order (registry view;

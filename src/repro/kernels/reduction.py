@@ -34,11 +34,13 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import (IsaMode, KernelContract, Primitive, REGISTRY,
                         TARGET, lane_tree_reduce, pad_rows,
-                        plan_row_pipeline, scratch_tree_bytes,
-                        scratch_tree_reduce, tree_stages, validate_contract)
+                        register_op_space, scratch_tree_bytes,
+                        scratch_tree_reduce, tree_stages, tuned_plan,
+                        validate_contract)
 
 LANES = TARGET.W          # 128 — queried, never assumed (Table III)
 _MAX_BLOCK_ROWS = 512     # latency/tail cap: 512x128 f32 = 256 KB per step
+register_op_space("reduction", "rowwise", max_block_rows=_MAX_BLOCK_ROWS)
 
 ABSTRACT_CONTRACT = KernelContract(
     kernel="reduction", mode=IsaMode.ABSTRACT,
@@ -59,9 +61,9 @@ for _c in (ABSTRACT_CONTRACT, SHUFFLE_CONTRACT, NATIVE_CONTRACT):
 
 
 def _plan(rows: int, mode: str):
-    return plan_row_pipeline(rows, LANES * 4, mode=mode,
-                             max_block_rows=_MAX_BLOCK_ROWS,
-                             semantics=("arbitrary",))
+    return tuned_plan("reduction", rows, LANES * 4, mode=mode,
+                      max_block_rows=_MAX_BLOCK_ROWS,
+                      semantics=("arbitrary",))
 
 
 def _reduction_kernel(x_ref, o_ref, scratch_ref, *, mode: str):

@@ -28,12 +28,13 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import (IsaMode, KernelContract, Primitive, REGISTRY,
-                        TARGET, plan_row_pipeline, row_reduce_shuffle,
+                        TARGET, register_op_space, row_reduce_shuffle,
                         fold_rows, scratch_tree_bytes, scratch_tree_reduce,
-                        tree_stages, validate_contract)
+                        tree_stages, tuned_plan, validate_contract)
 
 LANES = TARGET.W
 _MAX_BLOCK_ROWS = 64
+register_op_space("rmsnorm", "rowwise", max_block_rows=_MAX_BLOCK_ROWS)
 
 ABSTRACT_CONTRACT = KernelContract(
     kernel="rmsnorm", mode=IsaMode.ABSTRACT,
@@ -55,38 +56,46 @@ for _c in (ABSTRACT_CONTRACT, SHUFFLE_CONTRACT, NATIVE_CONTRACT):
 
 
 def _plan(rows: int, d_padded: int, itemsize: int, mode: str):
-    return plan_row_pipeline(rows, d_padded * itemsize, mode=mode,
-                             max_block_rows=_MAX_BLOCK_ROWS,
-                             semantics=("parallel",))
+    return tuned_plan("rmsnorm", rows, d_padded * itemsize, mode=mode,
+                      max_block_rows=_MAX_BLOCK_ROWS,
+                      semantics=("parallel",))
+
+
+def normalize_block(x, w, scratch_ref, *, eps: float, mode: str,
+                    d_true: int):
+    """One row block's normalization, cross-lane stage budget-selected.
+
+    The single source of the per-mode moment discipline, shared with the
+    fused lowerings (kernels/fused.py):
+
+    - ``native``: single residency, target-native cross-lane reduce;
+    - ``abstract+shuffle``: rotate tree in registers — zero scratch
+      round-trips (§VII.C);
+    - ``abstract``: fold to one vreg (register ops), then the
+      shuffle-free scratch tree (7 barrier-ordered round-trips), plus a
+      second round-trip re-staging the moment — the universal budget
+      gives no fusion guarantee before the normalize pass.
+    """
+    if mode == "native":
+        var = jnp.mean(x * x, axis=-1, keepdims=True)
+    elif mode == "abstract+shuffle":
+        var = row_reduce_shuffle(x * x) / d_true          # (rows, 1)
+    elif mode == "abstract":
+        acc = fold_rows(x * x)                            # (rows, LANES)
+        sumsq = scratch_tree_reduce(acc, scratch_ref)     # (rows, 1)
+        scratch_ref[:, :1] = sumsq / d_true               # moment re-stage
+        var = scratch_ref[:, :1]                          # reload
+    else:
+        raise ValueError(mode)
+    return x * jax.lax.rsqrt(var + eps) * w
 
 
 def _rmsnorm_kernel(x_ref, w_ref, o_ref, scratch_ref, *, eps: float,
                     mode: str, d_true: int):
     x = x_ref[...].astype(jnp.float32)                    # (rows, d)
     w = w_ref[...].astype(jnp.float32)                    # (1, d)
-    if mode == "native":
-        # Fused: single residency, target-native cross-lane reduce.
-        var = jnp.mean(x * x, axis=-1, keepdims=True)
-        o_ref[...] = (x * jax.lax.rsqrt(var + eps) * w).astype(o_ref.dtype)
-        return
-    x2 = x * x
-    if mode == "abstract+shuffle":
-        # Rotate tree in registers: zero scratch round-trips (§VII.C).
-        sumsq = row_reduce_shuffle(x2)                    # (rows, 1)
-        var = sumsq / d_true
-        o_ref[...] = (x * jax.lax.rsqrt(var + eps) * w).astype(o_ref.dtype)
-    elif mode == "abstract":
-        # Fold to one vreg (register ops), then the shuffle-free tree:
-        # 7 scratchpad round-trips, barrier-ordered.
-        acc = fold_rows(x2)                               # (rows, LANES)
-        sumsq = scratch_tree_reduce(acc, scratch_ref)     # (rows, 1)
-        # Second round-trip: the universal budget gives no fusion
-        # guarantee, so the moment is re-staged before the normalize pass.
-        scratch_ref[:, :1] = sumsq / d_true
-        var = scratch_ref[:, :1]                          # reload
-        o_ref[...] = (x * jax.lax.rsqrt(var + eps) * w).astype(o_ref.dtype)
-    else:
-        raise ValueError(mode)
+    o_ref[...] = normalize_block(x, w, scratch_ref, eps=eps, mode=mode,
+                                 d_true=d_true).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "eps", "interpret"))

@@ -54,6 +54,44 @@ def rmsnorm(x, weight, eps: float = 1e-6,
         policy=resolve_policy(policy=policy, default=LIBRARY_POLICY))
 
 
+def rmsnorm_matmul(x, weight, w_proj, eps: float = 1e-6,
+                   policy: Optional[ExecutionPolicy] = None):
+    """The norm→projection hot pair: ``rmsnorm(x, weight) @ w_proj``.
+
+    Policy-gated: when the resolved policy fuses (``fuse=True``, or
+    ``mode="auto"`` by default), the pair lowers through the fused
+    ``rmsnorm_matmul`` registry op and the normalized activation never
+    makes the HBM round trip; otherwise the unfused sequence runs, which
+    is bit-identical to the historical norm-then-einsum call sites."""
+    from repro.kernels import ops as kernel_ops
+    pol = resolve_policy(policy=policy, default=LIBRARY_POLICY)
+    if pol.fuses():
+        # kernel-routed hot spot: dispatch under the policy's kernel view
+        # (like the flash-attention path), so fuse_epilogues=True under
+        # the default library-norm policy selects the fused Pallas
+        # lowering instead of the library row (the unfused pair).
+        return kernel_ops.fused_rmsnorm_matmul(x, weight, w_proj, eps=eps,
+                                               policy=pol.kernel())
+    y = rmsnorm(x, weight, eps, policy=pol)
+    return jnp.einsum("...d,dn->...n", y, w_proj.astype(y.dtype))
+
+
+def add_rmsnorm(x, delta, weight, eps: float = 1e-6,
+                policy: Optional[ExecutionPolicy] = None):
+    """The residual→norm hot pair: ``(rmsnorm(x + delta), x + delta)``.
+
+    Same gate as :func:`rmsnorm_matmul`: fused policies read both addends
+    in the norm kernel's load stage (the staged sum is never read back
+    from HBM); unfused policies keep the historical add-then-norm."""
+    from repro.kernels import ops as kernel_ops
+    pol = resolve_policy(policy=policy, default=LIBRARY_POLICY)
+    if pol.fuses():
+        return kernel_ops.fused_add_rmsnorm(x, delta, weight, eps=eps,
+                                            policy=pol.kernel())
+    s = x + delta
+    return rmsnorm(s, weight, eps, policy=pol), s
+
+
 def layernorm(x, weight, bias, eps: float = 1e-5):
     xf = x.astype(jnp.float32)
     mean = jnp.mean(xf, axis=-1, keepdims=True)

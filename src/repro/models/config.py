@@ -188,6 +188,12 @@ class ParallelConfig:
     # target-native variant on the Pallas attention path.
     isa_mode: Optional[str] = None
     isa_dialect: Optional[str] = None   # defaults to the framework TARGET
+    # Fused-epilogue gate for the norm→projection and residual→norm hot
+    # pairs (kernels/fused.py): True forces the fused lowerings, False
+    # forces the unfused sequence, None (default) fuses exactly when the
+    # policy mode is "auto" — the structural-cost ranking then picks the
+    # variant whose hbm_bytes dropped by an activation round trip.
+    fuse_epilogues: Optional[bool] = None
 
     def execution_policy(self):
         """Resolve this config's ExecutionPolicy — the ONE place mode
@@ -197,13 +203,15 @@ class ParallelConfig:
         dialect = self.isa_dialect or TARGET.name
         if self.isa_mode is not None:
             return ExecutionPolicy(mode=self.isa_mode, dialect=dialect,
-                                   kernel_mode=self.isa_mode)
+                                   kernel_mode=self.isa_mode,
+                                   fuse=self.fuse_epilogues)
         # Native lowerings are pinned to the framework TARGET; under a
         # foreign dialect the kernel path must degrade to a legal variant
         # ("auto") instead of requesting an unlowerable native kernel.
         kernel_mode = "native" if dialect == TARGET.name else "auto"
         return ExecutionPolicy(mode="library", dialect=dialect,
-                               kernel_mode=kernel_mode)
+                               kernel_mode=kernel_mode,
+                               fuse=self.fuse_epilogues)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -78,12 +78,24 @@ def init_block(key, cfg: ModelConfig, dtype):
 
 
 def _project_qkv(params, x, cfg: ModelConfig, positions, ctx,
-                 constrain_kv: bool = True, policy=None):
+                 constrain_kv: bool = True, policy=None, norm_scale=None):
     b, s, _ = x.shape
     h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
-    q = jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(x.dtype))
-    k = jnp.einsum("bsd,dh->bsh", x, params["wk"].astype(x.dtype))
-    v = jnp.einsum("bsd,dh->bsh", x, params["wv"].astype(x.dtype))
+    if norm_scale is not None:
+        # The pre-attention norm rides into the projection as a fused
+        # GEMM prologue (x is the *raw* residual here): the normalized
+        # activation is consumed from VMEM, never staged to HBM.  One
+        # call against the concatenated [wq|wk|wv] so the residual is
+        # read and the moment computed once per sublayer, not thrice.
+        w_qkv = jnp.concatenate(
+            [params["wq"], params["wk"], params["wv"]], axis=1)
+        qkv = common.rmsnorm_matmul(x, norm_scale, w_qkv,
+                                    cfg.norm_eps, policy=policy)
+        q, k, v = jnp.split(qkv, [h * hd, (h + hkv) * hd], axis=-1)
+    else:
+        q = jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(x.dtype))
+        k = jnp.einsum("bsd,dh->bsh", x, params["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dh->bsh", x, params["wv"].astype(x.dtype))
     q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
     k = k.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
     v = v.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
@@ -133,13 +145,16 @@ def _repeat_kv(k, v, group: int, ctx):
 
 def attn_seq(params, x, cfg: ModelConfig, par: ParallelConfig,
              positions, ctx, causal: bool = True,
-             return_kv: bool = False, policy=None):
-    """Full-sequence attention (train / prefill)."""
+             return_kv: bool = False, policy=None, norm_scale=None):
+    """Full-sequence attention (train / prefill).
+
+    With ``norm_scale`` set, ``x`` is the raw residual and the
+    pre-attention rmsnorm fuses into the q/k/v projections."""
     b, s, d = x.shape
     policy = policy or par.execution_policy()
     q, k, v = _project_qkv(params, x, cfg, positions, ctx,
                            constrain_kv=par.constrain_kv_pre_repeat,
-                           policy=policy)
+                           policy=policy, norm_scale=norm_scale)
     k_rep, v_rep = _repeat_kv(k, v, cfg.num_heads // cfg.num_kv_heads, ctx)
     if par.use_pallas_attn:
         # TPU execution path: the framework's own flash kernel.  The
@@ -200,18 +215,32 @@ def attn_decode(params, x_t, cfg: ModelConfig, kv_cache, pos, ctx,
 def block_seq(params, x, cfg: ModelConfig, par: ParallelConfig, positions,
               ctx, return_kv: bool = False, policy=None):
     policy = policy or par.execution_policy()
-    h = common.apply_norm(x, params["ln1"], cfg.norm, cfg.norm_eps,
-                          policy=policy)
+    # Fused-epilogue routing (policy-gated): the ln1→projection pair fuses
+    # into the q/k/v GEMMs and the residual→ln2 pair into one kernel —
+    # the two per-sublayer activation round trips the unfused sequence
+    # stages through HBM (see kernels/fused.py).
+    fuse = policy.fuses() and cfg.norm == "rmsnorm"
+    if fuse:
+        h, norm_scale = x, params["ln1"]["scale"]
+    else:
+        h = common.apply_norm(x, params["ln1"], cfg.norm, cfg.norm_eps,
+                              policy=policy)
+        norm_scale = None
     if return_kv:
         a, kv = attn_seq(params["attn"], h, cfg, par, positions, ctx,
-                         return_kv=True, policy=policy)
+                         return_kv=True, policy=policy,
+                         norm_scale=norm_scale)
     else:
         a = attn_seq(params["attn"], h, cfg, par, positions, ctx,
-                     policy=policy)
+                     policy=policy, norm_scale=norm_scale)
         kv = None
-    x = x + a
-    h = common.apply_norm(x, params["ln2"], cfg.norm, cfg.norm_eps,
-                          policy=policy)
+    if fuse:
+        h, x = common.add_rmsnorm(x, a, params["ln2"]["scale"],
+                                  cfg.norm_eps, policy=policy)
+    else:
+        x = x + a
+        h = common.apply_norm(x, params["ln2"], cfg.norm, cfg.norm_eps,
+                              policy=policy)
     if cfg.moe is not None:
         m, aux = mlp.apply_moe(params["moe"], h, cfg.moe, cfg.act, ctx)
     else:
@@ -225,13 +254,24 @@ def block_seq(params, x, cfg: ModelConfig, par: ParallelConfig, positions,
 
 def block_decode(params, x_t, cfg: ModelConfig, kv_cache, pos, ctx,
                  int8: bool = False, policy=None):
+    fuse = (policy is not None and policy.fuses()
+            and cfg.norm == "rmsnorm")
+    # The qkv projection is NOT fused here: the fused path concatenates
+    # [wq|wk|wv] per call, and at decode (rows = B) that materializes a
+    # weight-sized tensor per token to save a token-sized round trip — a
+    # net traffic loss.  The activation-sized residual→norm fusion below
+    # has no such weight term and stays on.
     h = common.apply_norm(x_t, params["ln1"], cfg.norm, cfg.norm_eps,
                           policy=policy)
     a, kv_cache = attn_decode(params["attn"], h, cfg, kv_cache, pos, ctx,
                               int8=int8, policy=policy)
-    x_t = x_t + a
-    h = common.apply_norm(x_t, params["ln2"], cfg.norm, cfg.norm_eps,
-                          policy=policy)
+    if fuse:
+        h, x_t = common.add_rmsnorm(x_t, a, params["ln2"]["scale"],
+                                    cfg.norm_eps, policy=policy)
+    else:
+        x_t = x_t + a
+        h = common.apply_norm(x_t, params["ln2"], cfg.norm, cfg.norm_eps,
+                              policy=policy)
     if cfg.moe is not None:
         m, _ = mlp.apply_moe(params["moe"], h, cfg.moe, cfg.act, ctx)
     else:
@@ -310,12 +350,19 @@ class TransformerLM:
 
     def _head(self, params, x):
         cfg = self.cfg
-        x = common.apply_norm(x, params["final_norm"], cfg.norm,
-                              cfg.norm_eps, policy=self.policy)
         w = params.get("lm_head")
         if w is None:
             w = params["embed"].T
-        logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+        if cfg.norm == "rmsnorm":
+            # the final norm→lm_head pair: fused (policy-gated) or the
+            # historical norm-then-einsum, decided in one place
+            logits = common.rmsnorm_matmul(
+                x, params["final_norm"]["scale"], w, cfg.norm_eps,
+                policy=self.policy)
+        else:
+            x = common.apply_norm(x, params["final_norm"], cfg.norm,
+                                  cfg.norm_eps, policy=self.policy)
+            logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
         return shard(logits.astype(jnp.float32),
                      ("act_batch", "act_seq_unsharded", "act_vocab"),
                      self.ctx)

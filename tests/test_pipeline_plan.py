@@ -1,0 +1,149 @@
+"""plan_row_pipeline edge cases (ISSUE 3 satellite).
+
+Ragged row counts, pow2 blocks on sub-SUBLANES inputs, and the
+min_occupancy invariant under tiny dialect scratchpad budgets —
+property-style where the hypothesis shim allows, with example-based
+anchors that always run.
+"""
+import dataclasses
+
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep (requirements-dev.txt)
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import TPU_V5E, plan_row_pipeline
+from repro.core.pipeline import SUBLANES
+
+settings.register_profile("pipeline", max_examples=60, deadline=None)
+settings.load_profile("pipeline")
+
+
+def _tiny_dialect(scratch_bytes: int):
+    return dataclasses.replace(TPU_V5E, scratchpad_bytes=scratch_bytes,
+                               regfile_bytes_per_core=scratch_bytes)
+
+
+def _check_invariants(plan, total_rows, min_occupancy, dialect):
+    """The properties every plan must satisfy, tuned or not."""
+    assert plan.block_rows >= SUBLANES
+    assert plan.block_rows % SUBLANES == 0 or plan.block_rows < SUBLANES
+    assert plan.padded_rows >= total_rows
+    assert plan.padded_rows % plan.block_rows == 0
+    assert plan.grid == (plan.padded_rows // plan.block_rows,)
+    # Eq. 1 invariant: min_occupancy stages resident, except at the floor
+    # (one SUBLANES block) where the budget itself is too small — the
+    # planner clamps rather than failing, and the occupancy it reports
+    # must still be the dialect's honest number.
+    assert plan.occupancy == dialect.buffer_occupancy(
+        plan.block_rows * plan.row_bytes, plan.n_buffers)
+    assert plan.occupancy >= min_occupancy or plan.block_rows == SUBLANES
+
+
+# ---------------------------------------------------------------------------
+# Example-based anchors (always run)
+# ---------------------------------------------------------------------------
+
+
+def test_ragged_total_rows():
+    for total in (1, 7, 9, 63, 65, 1000, 1025):
+        plan = plan_row_pipeline(total, 512, mode="native",
+                                 max_block_rows=64)
+        _check_invariants(plan, total, 2, TPU_V5E)
+        # never pad a small input past one block of its own rounded size
+        rounded = -(-total // SUBLANES) * SUBLANES
+        assert plan.block_rows <= max(rounded, SUBLANES)
+
+
+def test_pow2_blocks_sub_sublanes_input():
+    for total in range(1, SUBLANES + 1):
+        plan = plan_row_pipeline(total, 512, mode="abstract",
+                                 pow2_blocks=True)
+        assert plan.block_rows == SUBLANES          # the floor granule
+        assert plan.block_rows & (plan.block_rows - 1) == 0
+        _check_invariants(plan, total, 2, TPU_V5E)
+
+
+def test_pow2_blocks_always_pow2():
+    for total in (12, 100, 1000, 4096):
+        plan = plan_row_pipeline(total, 512, mode="abstract",
+                                 max_block_rows=48, pow2_blocks=True)
+        assert plan.block_rows & (plan.block_rows - 1) == 0
+        _check_invariants(plan, total, 2, TPU_V5E)
+
+
+def test_min_occupancy_under_tiny_budgets():
+    row_bytes = 4096
+    # budget admits exactly min_occupancy double-buffered SUBLANES blocks
+    enough = _tiny_dialect(2 * 2 * SUBLANES * row_bytes)
+    plan = plan_row_pipeline(1024, row_bytes, mode="native",
+                             dialect=enough)
+    assert plan.occupancy >= 2
+    # budget below the floor: the plan clamps to one SUBLANES block and
+    # reports the honest (sub-minimum) occupancy instead of lying
+    starved = _tiny_dialect(2 * 2 * SUBLANES * row_bytes - 1)
+    plan = plan_row_pipeline(1024, row_bytes, mode="native",
+                             dialect=starved)
+    assert plan.block_rows == SUBLANES
+    assert plan.occupancy < 2
+    _check_invariants(plan, 1024, 2, starved)
+
+
+def test_invalid_inputs_rejected():
+    with pytest.raises(ValueError):
+        plan_row_pipeline(0, 512, mode="native")
+    with pytest.raises(ValueError):
+        plan_row_pipeline(8, 0, mode="native")
+
+
+def test_tuned_override_cannot_break_invariants():
+    for tuned in ({"block_rows": 100000},        # occupancy-illegal
+                  {"block_rows": 16, "n_buffers": 3},
+                  {"n_buffers": 4},
+                  {}):
+        plan = plan_row_pipeline(777, 2048, mode="native",
+                                 max_block_rows=64, tuned=tuned)
+        _check_invariants(plan, 777, 2, TPU_V5E)
+
+
+# ---------------------------------------------------------------------------
+# Property sweeps (hypothesis; skip cleanly via the shim when absent)
+# ---------------------------------------------------------------------------
+
+
+@given(total=st.integers(1, 1 << 16),
+       row_bytes=st.sampled_from([4, 512, 4096, 1 << 20]),
+       cap=st.sampled_from([None, 8, 64, 512]),
+       pow2=st.booleans())
+def test_plan_invariants_property(total, row_bytes, cap, pow2):
+    plan = plan_row_pipeline(total, row_bytes, mode="native",
+                             max_block_rows=cap, pow2_blocks=pow2)
+    _check_invariants(plan, total, 2, TPU_V5E)
+    if pow2:
+        assert plan.block_rows & (plan.block_rows - 1) == 0
+    if cap is not None and not pow2:
+        assert plan.block_rows <= max(cap, SUBLANES)
+
+
+@given(scratch_kb=st.integers(1, 1 << 12),
+       total=st.integers(1, 1 << 12),
+       n_buffers=st.sampled_from([2, 3, 4]))
+def test_tiny_budget_property(scratch_kb, total, n_buffers):
+    """Across arbitrary scratchpad sizes the plan either honors
+    min_occupancy or sits at the one-block floor — never in between."""
+    dialect = _tiny_dialect(scratch_kb * 1024)
+    plan = plan_row_pipeline(total, 2048, mode="native",
+                             dialect=dialect, n_buffers=n_buffers)
+    _check_invariants(plan, total, 2, dialect)
+
+
+@given(total=st.integers(1, 1 << 14),
+       tuned_block=st.integers(1, 1 << 15),
+       tuned_buffers=st.sampled_from([2, 3, 4]))
+def test_tuned_override_property(total, tuned_block, tuned_buffers):
+    plan = plan_row_pipeline(total, 1024, mode="native", max_block_rows=64,
+                             tuned={"block_rows": tuned_block,
+                                    "n_buffers": tuned_buffers})
+    _check_invariants(plan, total, 2, TPU_V5E)
+    assert plan.n_buffers == tuned_buffers

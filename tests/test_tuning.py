@@ -1,0 +1,198 @@
+"""Cost-model autotuner (ISSUE 3 tentpole, autotuning half).
+
+Covers: candidate-grid legality under the Eq. 1 occupancy algebra,
+structural ranking, bucket round-tripping, the ``tuned=`` plan override
+(including its refusal to break the occupancy invariant), table
+lookup/persistence, the CI sync check, and measured re-ranking.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (REGISTRY, TARGET, TPU_V5E, UISA_UNIVERSAL10,
+                        plan_row_pipeline, tuning)
+from repro.core.pipeline import SUBLANES
+from repro.kernels import ops, ref  # noqa: F401 (installs op spaces)
+
+KEY = jax.random.PRNGKey(5)
+
+
+class TestCandidates:
+    def test_rowwise_candidates_all_legal(self):
+        cands = tuning.rowwise_candidates(4096, 4096, TPU_V5E,
+                                          max_block_rows=64)
+        assert cands
+        for c in cands:
+            assert c.block_rows % SUBLANES == 0
+            assert TPU_V5E.buffer_occupancy(
+                c.block_rows * 4096, c.n_buffers) == c.occupancy
+            assert c.occupancy >= 2
+            assert c.block_rows <= 64 * tuning.CAP_CORRIDOR
+
+    def test_rank_prefers_fewer_steps_then_depth(self):
+        cands = tuning.rowwise_candidates(4096, 4096, TPU_V5E,
+                                          max_block_rows=64)
+        best = cands[0]
+        assert best.grid_steps == min(c.grid_steps for c in cands)
+        same_steps = [c for c in cands if c.grid_steps == best.grid_steps]
+        assert best.n_buffers == max(c.n_buffers for c in same_steps)
+
+    def test_tiny_budget_floor_candidate(self):
+        """A scratchpad too small for any legal point still yields the
+        floor plan rather than an empty grid."""
+        cands = tuning.rowwise_candidates(1024, 4096, UISA_UNIVERSAL10)
+        assert cands[-1].block_rows == SUBLANES or \
+            all(c.block_rows == SUBLANES for c in cands)
+
+    def test_gemm_candidates_fit_budget(self):
+        for params in tuning.gemm_candidates(1024, 1024, 1024, TPU_V5E):
+            bm, bn, bk = params["block"]
+            working = (bm * bk + bk * bn) * 4 + bm * bn * 4
+            assert TPU_V5E.buffer_occupancy(working, 2) >= 2
+
+    def test_attention_candidates_ranked_by_steps(self):
+        cands = tuning.attention_candidates(1024, 1024, 64, TPU_V5E)
+        assert cands
+        steps = [-(-1024 // c["block_q"]) * -(-1024 // c["block_kv"])
+                 for c in cands]
+        assert steps == sorted(steps)
+
+
+class TestBuckets:
+    def test_bucket_round_trip(self):
+        b = tuning.rowwise_bucket(1000, 3000)
+        rep = tuning.parse_bucket(b)
+        assert rep == {"rows": 1024, "rb": 4096}
+        g = tuning.parse_bucket(tuning.gemm_bucket(300, 1024, 65))
+        assert g == {"m": 512, "n": 1024, "k": 128}
+
+    def test_malformed_bucket_rejected(self):
+        with pytest.raises(ValueError):
+            tuning.parse_bucket("rows:nonsense")
+
+
+class TestTunedPlan:
+    def test_tuned_override_applies(self):
+        plan = plan_row_pipeline(4096, 4096, mode="native",
+                                 max_block_rows=64,
+                                 tuned={"block_rows": 256, "n_buffers": 4})
+        assert plan.block_rows == 256        # supersedes the static cap
+        assert plan.n_buffers == 4
+        assert plan.padded_rows % plan.block_rows == 0
+
+    def test_tuned_override_respects_occupancy_invariant(self):
+        """An entry that would drop occupancy below the floor degrades to
+        the heuristic block instead of emitting an illegal plan."""
+        heur = plan_row_pipeline(4096, 4096, mode="native",
+                                 max_block_rows=64)
+        huge = TARGET.S // 4096              # occupancy 0 at n_buffers=2
+        plan = plan_row_pipeline(4096, 4096, mode="native",
+                                 max_block_rows=64,
+                                 tuned={"block_rows": huge})
+        assert plan.block_rows == heur.block_rows
+
+    def test_tuned_plan_consults_table(self):
+        table = tuning.TuningTable({})
+        table.record("rmsnorm", "native", TARGET.name,
+                     tuning.rowwise_bucket(4096, 4096),
+                     {"block_rows": 128, "n_buffers": 3})
+        plan = tuning.tuned_plan("rmsnorm", 4096, 4096, mode="native",
+                                 max_block_rows=64, table=table)
+        assert (plan.block_rows, plan.n_buffers) == (128, 3)
+        # missing entry -> pure heuristic
+        miss = tuning.tuned_plan("rmsnorm", 4096, 8192, mode="native",
+                                 max_block_rows=64, table=table)
+        assert miss.block_rows <= 64
+
+    def test_committed_entries_change_the_plan(self):
+        """The committed table's bench-shape winners really are consulted
+        (the tuned path is live, not dead code)."""
+        entry = tuning.TUNING_TABLE.lookup(
+            "rmsnorm", "native", TARGET.name,
+            tuning.rowwise_bucket(1024, 4096))
+        assert entry is not None
+        plan = tuning.tuned_plan("rmsnorm", 1024, 4096, mode="native",
+                                 max_block_rows=64)
+        assert plan.block_rows == entry["block_rows"]
+        assert plan.n_buffers == entry["n_buffers"]
+
+    def test_tuned_kernel_numerics_unchanged(self):
+        """A tuned staging point changes the plan, never the math."""
+        x = jax.random.normal(KEY, (1024, 1024), jnp.float32)
+        w = jnp.ones((1024,), jnp.float32)
+        got = ops.rmsnorm(x, w, mode="native")
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(ref.rmsnorm(x, w)),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestTableSync:
+    def test_committed_table_in_sync(self):
+        failures = tuning.check_table(REGISTRY)
+        assert failures == [], failures
+
+    def test_stale_op_fails(self):
+        table = tuning.TuningTable({
+            "no_such_op|native|tpu-v5e|rows64:rb512":
+                {"block_rows": 8, "n_buffers": 2, "source": "structural"}})
+        assert any("not registered" in f
+                   for f in tuning.check_table(REGISTRY, table))
+
+    def test_off_grid_params_fail(self):
+        bucket = tuning.rowwise_bucket(1024, 4096)
+        table = tuning.TuningTable({
+            f"rmsnorm|native|tpu-v5e|{bucket}":
+                {"block_rows": 12345, "n_buffers": 2,
+                 "source": "structural"}})
+        assert any("outside the legal candidate grid" in f
+                   for f in tuning.check_table(REGISTRY, table))
+
+    def test_unknown_dialect_fails(self):
+        table = tuning.TuningTable({
+            "rmsnorm|native|no-such-dialect|rows64:rb512":
+                {"block_rows": 8, "n_buffers": 2, "source": "structural"}})
+        assert any("unknown dialect" in f
+                   for f in tuning.check_table(REGISTRY, table))
+
+
+class TestAutotune:
+    def test_structural_winner_recorded(self):
+        table = tuning.TuningTable({})
+        bucket = tuning.rowwise_bucket(1024, 4096)
+        winner = tuning.autotune_entry(table, "rmsnorm", "native", bucket)
+        entry = table.lookup("rmsnorm", "native", TARGET.name, bucket)
+        assert entry is not None and entry["source"] == "structural"
+        assert {k: v for k, v in entry.items() if k != "source"} == winner
+
+    def test_measured_rerank_picks_fastest(self):
+        calls = []
+
+        def build_fn(params):
+            calls.append(dict(params))
+            # fabricate: smaller blocks "measure" faster here
+            delay = params["block_rows"]
+
+            def run():
+                import time
+                time.sleep(delay * 1e-5)
+                return np.zeros(())
+            return run
+
+        table = tuning.TuningTable({})
+        bucket = tuning.rowwise_bucket(256, 4096)
+        winner = tuning.autotune_entry(table, "rmsnorm", "native", bucket,
+                                       build_fn=build_fn, iters=1,
+                                       warmup=0, top_k=3)
+        assert len(calls) == 3
+        assert winner["block_rows"] == min(c["block_rows"] for c in calls)
+        entry = table.lookup("rmsnorm", "native", TARGET.name, bucket)
+        assert entry["source"] == "measured"
+
+    def test_table_save_load_round_trip(self, tmp_path):
+        table = tuning.TuningTable({})
+        table.record("rmsnorm", "native", TARGET.name, "rows64:rb512",
+                     {"block_rows": 16, "n_buffers": 2})
+        path = table.save(str(tmp_path / "t.json"))
+        loaded = tuning.TuningTable.load(path)
+        assert loaded.entries == table.entries
