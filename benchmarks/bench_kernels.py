@@ -72,9 +72,13 @@ def _cases(quick: bool):
         warmup, iters = 2, 5
 
     n_proj = d_rms                       # norm -> square projection
+    f_ff = d_rms                         # swiglu: [wi|wg] is [d, 2d]
+    n_wo = h * hd                        # wo: square over the head concat
     # fresh streams for the fused cases (fold_in: the eight pre-existing
     # streams below keep their values and stay independent of these)
-    kp, kr = jax.random.split(jax.random.fold_in(KEY, 1))
+    kp, kr, kw, kwo = jax.random.split(jax.random.fold_in(KEY, 1), 4)
+    w_cat = jax.random.normal(kw, (d_rms, 2 * f_ff), jnp.float32)
+    w_o = jax.random.normal(kwo, (h * hd, n_wo), jnp.float32)
     x_red = jax.random.normal(ks[0], (n_red,), jnp.float32)
     x_rms = jax.random.normal(ks[1], (rows_rms, d_rms), jnp.float32)
     w_rms = jax.random.normal(ks[2], (d_rms,), jnp.float32) + 1.0
@@ -115,6 +119,16 @@ def _cases(quick: bool):
          lambda mode: ops.fused_add_rmsnorm(x_rms, r_rms, w_rms,
                                             mode=mode),
          dict(rows=rows_rms, d=d_rms)),
+        ("rmsnorm_swiglu",
+         lambda mode: ops.fused_rmsnorm_swiglu(x_rms, w_rms, w_cat,
+                                               mode=mode),
+         dict(rows=rows_rms, d=d_rms, f=f_ff)),
+        ("flash_attention_matmul",
+         lambda mode: ops.fused_flash_attention_matmul(
+             q, kk, vv, w_o, causal=True, mode=mode, block_q=blk,
+             block_kv=blk),
+         dict(b=b, h=h, sq=s, skv=s, d=hd, n=n_wo, causal=True,
+              block_q=blk, block_kv=blk)),
     ]
     return cases, warmup, iters
 

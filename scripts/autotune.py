@@ -1,20 +1,32 @@
 """Regenerate the committed pipeline tuning table (core/tuning.py).
 
 Enumerates the legal ``(block, n_buffers)`` candidate grid for every
-registered op × mode × canonical shape bucket (the Eq. 1 occupancy
-algebra in ``repro.core.tuning``), ranks candidates by structural cost,
-and writes the winners to ``src/repro/core/tuning_table.json`` — the
-table every kernel consults at trace time.
+registered op × dialect-legal mode × canonical shape bucket (the Eq. 1
+occupancy algebra in ``repro.core.tuning``), ranks candidates by
+structural cost, and writes the winners to
+``src/repro/core/tuning_table.json`` — the table every kernel consults at
+trace time.
 
   PYTHONPATH=src python scripts/autotune.py                 # structural
   PYTHONPATH=src python scripts/autotune.py --measure       # live re-rank
   PYTHONPATH=src python scripts/autotune.py --out /tmp/t.json
+  PYTHONPATH=src python scripts/autotune.py --dialect uisa-universal10
+
+``--dialect`` takes a comma-separated list and defaults to the target
+*plus* the no-shuffle ``uisa-universal10`` profile, so the committed
+table carries both slices: ``auto`` policies on the foreign dialect run
+its tuned staging plans (48 KB scratchpad ⇒ different grid shapes)
+instead of heuristics.  Modes that are not legal on a dialect (the
+shuffle tree on universal10, target-pinned native lowerings anywhere
+foreign) are skipped, not recorded.
 
 Structural mode is deterministic and backend-free, so CI can assert the
-committed table is in sync (scripts/validate_contracts.py).  ``--measure``
-re-ranks the structural top-k by median wall clock on the live backend —
-on a TPU that is the real autotune; off-TPU it measures the Pallas
-interpreter and is only useful for exercising the machinery.
+committed table is in sync (scripts/validate_contracts.py re-derives the
+winners for every dialect present in the table, and the workflow diffs a
+fresh regeneration).  ``--measure`` re-ranks the structural top-k by
+median wall clock on the live backend — on a TPU that is the real
+autotune; off-TPU it measures the Pallas interpreter and is only useful
+for exercising the machinery.
 """
 from __future__ import annotations
 
@@ -30,76 +42,57 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro.core import TARGET, tuning  # noqa: E402
 from repro.core.registry import REGISTRY  # noqa: E402
+from repro.core.tuning import CANONICAL_SHAPES, bucket_for  # noqa: E402
 from repro.kernels import ops  # noqa: E402 (installs registry + op spaces)
 
 KEY = jax.random.PRNGKey(0)
 
-#: canonical shapes per op — the benchmark matrix's full + quick sizings,
-#: so the committed winners cover exactly the rows BENCH_kernels.json
-#: reports (new shapes bucket to the nearest entry or fall back to the
-#: heuristic plan).
-CANONICAL_SHAPES = {
-    "reduction": [dict(n=1 << 21), dict(n=1 << 15)],
-    "rmsnorm": [dict(rows=1024, d=1024), dict(rows=64, d=256)],
-    "histogram": [dict(n=1 << 18, num_bins=256),
-                  dict(n=1 << 14, num_bins=256)],
-    "add_rmsnorm": [dict(rows=1024, d=1024), dict(rows=64, d=256)],
-    "gemm": [dict(m=1024, n=1024, k=1024), dict(m=256, n=256, k=256)],
-    "flash_attention": [dict(sq=1024, skv=1024, d=64),
-                        dict(sq=256, skv=256, d=64)],
-}
-
-LANES = TARGET.W
+DEFAULT_DIALECTS = f"{TARGET.name},uisa-universal10"
 
 
-def bucket_for(op: str, shape: dict) -> str:
-    """Map an op's natural shape to its tuning-space bucket."""
-    kind = tuning.OP_SPACES[op].kind
-    if kind == "rowwise":
-        if op == "reduction" or op == "histogram":
-            rows = -(-shape["n"] // LANES)
-            return tuning.rowwise_bucket(rows, LANES * 4)
-        if op == "rmsnorm":
-            return tuning.rowwise_bucket(shape["rows"], shape["d"] * 4)
-        if op == "add_rmsnorm":
-            return tuning.rowwise_bucket(shape["rows"], 2 * shape["d"] * 4)
-        raise ValueError(f"no bucket rule for rowwise op {op!r}")
-    if kind == "gemm":
-        return tuning.gemm_bucket(shape["m"], shape["n"], shape["k"])
-    if kind == "attention":
-        return tuning.attention_bucket(shape["sq"], shape["skv"],
-                                       shape["d"])
-    raise ValueError(kind)
-
-
-def build_runner(op: str, mode: str, shape: dict):
+def build_runner(op: str, mode: str, shape: dict, dialect=None):
     """A zero-arg callable running (op, mode) at ``shape`` on the live
     backend, for --measure.  Candidate params reach the kernel through
-    the live table, so the caller must clear jit caches between points."""
+    the live table, so the caller must clear jit caches between points.
+
+    The run is dispatched under a policy carrying the *tuned* dialect:
+    the trace-time table lookups read the ambient dialect, so measuring
+    a foreign dialect's candidate must trace under that dialect or every
+    candidate would silently time the target slice's plan."""
+    from repro.core.registry import ExecutionPolicy
+    pol = ExecutionPolicy(
+        mode=mode, dialect=(dialect or TARGET).name)
     ks = jax.random.split(KEY, 4)
     if op == "reduction":
         x = jax.random.normal(ks[0], (shape["n"],), jnp.float32)
-        return lambda: ops.reduce_sum(x, mode=mode)
+        return lambda: ops.reduce_sum(x, policy=pol)
     if op == "rmsnorm":
         x = jax.random.normal(ks[0], (shape["rows"], shape["d"]),
                               jnp.float32)
         w = jnp.ones((shape["d"],), jnp.float32)
-        return lambda: ops.rmsnorm(x, w, mode=mode)
+        return lambda: ops.rmsnorm(x, w, policy=pol)
     if op == "histogram":
         v = jax.random.randint(ks[0], (shape["n"],), 0,
                                shape["num_bins"], jnp.int32)
-        return lambda: ops.histogram(v, shape["num_bins"], mode=mode)
+        return lambda: ops.histogram(v, shape["num_bins"], policy=pol)
     if op == "add_rmsnorm":
         x = jax.random.normal(ks[0], (shape["rows"], shape["d"]),
                               jnp.float32)
         r = jax.random.normal(ks[1], (shape["rows"], shape["d"]),
                               jnp.float32)
         w = jnp.ones((shape["d"],), jnp.float32)
-        return lambda: ops.fused_add_rmsnorm(x, r, w, mode=mode)
+        return lambda: ops.fused_add_rmsnorm(x, r, w, policy=pol)
+    if op == "rmsnorm_swiglu":
+        x = jax.random.normal(ks[0], (shape["rows"], shape["d"]),
+                              jnp.float32)
+        w = jnp.ones((shape["d"],), jnp.float32)
+        w_cat = jax.random.normal(ks[1], (shape["d"], 2 * shape["f"]),
+                                  jnp.float32)
+        return lambda: ops.fused_rmsnorm_swiglu(x, w, w_cat, policy=pol)
     if op == "gemm":
         a = jax.random.normal(ks[0], (shape["m"], shape["k"]), jnp.float32)
         b = jax.random.normal(ks[1], (shape["k"], shape["n"]), jnp.float32)
-        return lambda: ops.matmul(a, b, mode=mode)
+        return lambda: ops.matmul(a, b, policy=pol)
     if op == "flash_attention":
         q = jax.random.normal(ks[0], (1, 2, shape["sq"], shape["d"]),
                               jnp.float32)
@@ -107,7 +100,20 @@ def build_runner(op: str, mode: str, shape: dict):
                               jnp.float32)
         v = jax.random.normal(ks[2], (1, 2, shape["skv"], shape["d"]),
                               jnp.float32)
-        return lambda: ops.flash_attention(q, k, v, causal=True, mode=mode)
+        return lambda: ops.flash_attention(q, k, v, causal=True,
+                                           policy=pol)
+    if op == "flash_attention_matmul":
+        h = 2
+        q = jax.random.normal(ks[0], (1, h, shape["sq"], shape["d"]),
+                              jnp.float32)
+        k = jax.random.normal(ks[1], (1, h, shape["skv"], shape["d"]),
+                              jnp.float32)
+        v = jax.random.normal(ks[2], (1, h, shape["skv"], shape["d"]),
+                              jnp.float32)
+        w = jax.random.normal(ks[3], (h * shape["d"], shape["n"]),
+                              jnp.float32)
+        return lambda: ops.fused_flash_attention_matmul(
+            q, k, v, w, causal=True, policy=pol)
     raise ValueError(op)
 
 
@@ -116,36 +122,44 @@ def main() -> int:
     ap.add_argument("--out", default=tuning.DEFAULT_TABLE_PATH)
     ap.add_argument("--measure", action="store_true",
                     help="re-rank the structural top-k by live wall clock")
-    ap.add_argument("--dialect", default=TARGET.name)
+    ap.add_argument("--dialect", default=DEFAULT_DIALECTS,
+                    help="comma-separated dialect names (default: "
+                    f"{DEFAULT_DIALECTS})")
     args = ap.parse_args()
 
-    dialect = tuning.get_dialect(args.dialect)
+    dialects = [tuning.get_dialect(name.strip())
+                for name in args.dialect.split(",") if name.strip()]
     table = tuning.TuningTable({}, args.out)
-    for op, shapes in sorted(CANONICAL_SHAPES.items()):
-        if op not in REGISTRY.ops() or op not in tuning.OP_SPACES:
-            print(f"[autotune] skip {op}: not registered/tunable")
-            continue
-        for mode in REGISTRY.modes(op):
-            if mode == "library":
-                continue          # XLA's own tiling: not ours to tune
-            for shape in shapes:
-                bucket = bucket_for(op, shape)
-                build_fn = None
-                if args.measure:
-                    def build_fn(params, op=op, mode=mode, shape=shape,
-                                 bucket=bucket):
-                        # install the candidate in the live table (the
-                        # kernels consult it at trace time) and drop jit
-                        # caches so the previous point cannot replay
-                        tuning.TUNING_TABLE.record(
-                            op, mode, dialect.name, bucket, params,
-                            source="candidate")
-                        jax.clear_caches()
-                        return build_runner(op, mode, shape)
-                winner = tuning.autotune_entry(table, op, mode, bucket,
-                                               dialect, build_fn=build_fn)
-                print(f"[autotune] {op:16s} {mode:17s} {bucket:28s} "
-                      f"-> {winner}")
+    for dialect in dialects:
+        for op, shapes in sorted(CANONICAL_SHAPES.items()):
+            if op not in REGISTRY.ops() or op not in tuning.OP_SPACES:
+                print(f"[autotune] skip {op}: not registered/tunable")
+                continue
+            for mode in REGISTRY.modes(op):
+                if mode == "library":
+                    continue      # XLA's own tiling: not ours to tune
+                if not REGISTRY.legal(op, mode, dialect):
+                    continue      # illegal variant: nothing to stage
+                for shape in shapes:
+                    bucket = bucket_for(op, shape)
+                    build_fn = None
+                    if args.measure:
+                        def build_fn(params, op=op, mode=mode, shape=shape,
+                                     bucket=bucket, dialect=dialect):
+                            # install the candidate in the live table (the
+                            # kernels consult it at trace time) and drop
+                            # jit caches so the previous point cannot
+                            # replay
+                            tuning.TUNING_TABLE.record(
+                                op, mode, dialect.name, bucket, params,
+                                source="candidate")
+                            jax.clear_caches()
+                            return build_runner(op, mode, shape, dialect)
+                    winner = tuning.autotune_entry(table, op, mode, bucket,
+                                                   dialect,
+                                                   build_fn=build_fn)
+                    print(f"[autotune] {dialect.name:18s} {op:22s} "
+                          f"{mode:17s} {bucket:32s} -> {winner}")
     path = table.save(args.out)
     print(f"[autotune] wrote {len(table.entries)} entries -> {path}")
     failures = tuning.check_table(REGISTRY, table)

@@ -11,12 +11,13 @@ contract-checked) and asserts, without needing a TPU:
 3. an ``ExecutionPolicy("auto")`` resolves a legal lowering for every op
    on every registered dialect, including the no-shuffle universal-10
    profile (library escape only where no portable variant is legal);
-4. every fused lowering's modeled ``hbm_bytes`` is strictly below its
-   unfused pair's sum (the round-trip saving cannot silently evaporate),
-   with the ``library`` row equal to the pair by construction;
+4. every fused lowering's (FUSED_OPS) modeled ``hbm_bytes`` is strictly
+   below its unfused pair's sum (the round-trip saving cannot silently
+   evaporate), with the ``library`` row equal to the pair by construction;
 5. the committed tuning table (core/tuning_table.json) is in sync with
-   the candidate grid: stale ops/modes/dialects or params outside the
-   legal Eq. 1 grid fail the build.
+   the candidate grid *on every dialect present in the table*: stale
+   ops/modes/dialects, params outside the legal Eq. 1 grid, a missing or
+   stale ``uisa-universal10`` entry — all fail the build.
 
   PYTHONPATH=src python scripts/validate_contracts.py
 """
@@ -34,12 +35,15 @@ from repro.core import (DIALECTS, ExecutionPolicy, IsaMode,  # noqa: E402
                         validate_contract)
 from repro.core import tuning  # noqa: E402
 from repro.core.primitives import ContractViolation  # noqa: E402
+from repro.kernels.fused import FUSED_OPS  # noqa: E402
 from repro.kernels.ops import PROBE_SHAPES  # noqa: E402 (installs registry)
 
 def check_fused_costs() -> list:
-    """Gate 4: the fused rows' round-trip saving is real and recorded."""
+    """Gate 4: the fused rows' round-trip saving is real and recorded —
+    swept over every op kernels/fused.py registers (FUSED_OPS), so a new
+    fused lowering cannot ship without the accounting keys."""
     failures = []
-    for op in ("rmsnorm_matmul", "add_rmsnorm"):
+    for op in FUSED_OPS:
         if op not in REGISTRY.ops():
             failures.append(f"fused op {op!r} not registered")
             continue

@@ -327,15 +327,18 @@ class LoweringRegistry:
             raise UnsupportedLowering(
                 f"{op} [{mode.value}] is not a legal lowering for dialect "
                 f"{dialect.name} and declares no fallback")
-        # auto: cheapest legal non-library variant by structural cost
+        # auto: cheapest legal non-library variant by structural cost,
+        # ranked under the policy itself so dialect-aware cost terms
+        # (tuned-table lookups) read the dialect being selected for
         candidates = [low for m, low in variants.items()
                       if m is not IsaMode.LIBRARY
                       and self.legal(op, m, dialect)]
         if candidates:
             shape = shape or {}
-            return min(candidates,
-                       key=lambda lo: cost_key(lo.structural_cost(**shape),
-                                               lo.mode))
+            with use_policy(policy):
+                return min(candidates,
+                           key=lambda lo: cost_key(
+                               lo.structural_cost(**shape), lo.mode))
         library = variants.get(IsaMode.LIBRARY)
         if library is not None:
             self._record(op, AUTO, IsaMode.LIBRARY.value,

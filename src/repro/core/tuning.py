@@ -84,6 +84,17 @@ def attention_bucket(sq: int, skv: int, d: int) -> str:
     return f"sq{next_pow2(sq)}:skv{next_pow2(skv)}:d{next_pow2(d)}"
 
 
+def swiglu_bucket(rows: int, d: int, f: int) -> str:
+    """rmsnorm_swiglu: row count, feature width, per-projection width."""
+    return f"rows{next_pow2(rows)}:d{next_pow2(d)}:f{next_pow2(f)}"
+
+
+def attention_matmul_bucket(sq: int, skv: int, d: int, n: int) -> str:
+    """flash_attention_matmul: the flash shape plus the wo output width."""
+    return (f"sq{next_pow2(sq)}:skv{next_pow2(skv)}:d{next_pow2(d)}"
+            f":n{next_pow2(n)}")
+
+
 def parse_bucket(bucket: str) -> Dict[str, int]:
     """Inverse of the bucket formatters: field name -> representative
     (pow2 upper-edge) value.  The representative shape is what
@@ -198,6 +209,11 @@ def gemm_candidates(m: int, n: int, k: int, dialect: Dialect = TARGET,
                 out.append((hbm, 0 if aligned else 1, -bk,
                             {"block": [bm, bn, bk]}))
     out.sort(key=lambda t: t[:3])
+    if not out:
+        # tiny scratchpad budgets (uisa-universal10's 48 KB): the minimal
+        # MXU-granule tile is the floor plan — the Eq. 1 invariant clamps
+        # there rather than leaving the op untunable on the dialect
+        return [{"block": [128, 128, 128]}]
     return [params for *_rank, params in out]
 
 
@@ -219,6 +235,57 @@ def attention_candidates(sq: int, skv: int, d: int,
             out.append((steps, -bkv, -bq,
                         {"block_q": bq, "block_kv": bkv}))
     out.sort(key=lambda t: t[:3])
+    if not out:
+        return [{"block_q": 128, "block_kv": 128}]     # Eq. 1 floor plan
+    return [params for *_rank, params in out]
+
+
+def swiglu_candidates(rows: int, d: int, f: int, dialect: Dialect = TARGET,
+                      dtype=jnp.float32) -> List[Dict]:
+    """Legal ``(bm, bn)`` tiles for the fused norm→swiglu lowering.
+
+    One step's working set: the raw x block (full feature row resident —
+    the moment needs it), the wi and wg tiles for the same output column
+    block, and the hi/hg/out f32 tiles.  Rank is the modeled HBM traffic
+    (x re-read per output-column block, both weight halves re-read per
+    row block), larger tiles breaking ties."""
+    itemsize = jnp.dtype(dtype).itemsize
+    out = []
+    for bm in (128, 256, 512, 1024):
+        for bn in (128, 256, 512, 1024):
+            working = (bm * d + 2 * d * bn) * itemsize + 3 * bm * bn * 4
+            if dialect.buffer_occupancy(working, 2) < 2:
+                continue
+            hbm = (rows * d * itemsize * -(-f // bn)
+                   + 2 * d * f * itemsize * -(-rows // bm)
+                   + rows * f * itemsize)
+            out.append((hbm, -bn, -bm, {"block": [bm, bn]}))
+    out.sort(key=lambda t: t[:3])
+    if not out:
+        return [{"block": [128, 128]}]                 # Eq. 1 floor plan
+    return [params for *_rank, params in out]
+
+
+def attention_matmul_candidates(sq: int, skv: int, d: int, n: int,
+                                dialect: Dialect = TARGET) -> List[Dict]:
+    """Legal ``(block_q, block_kv)`` pairs for the fused flash→wo lowering.
+
+    The flash working set plus the epilogue's residents: the head's wo
+    slice (d × n) and the shared output block (block_q × n) the heads
+    accumulate into.  Rank mirrors :func:`attention_candidates`."""
+    out = []
+    for bq in (128, 256, 512):
+        for bkv in (128, 256, 512):
+            working = ((bq * d + 2 * bkv * d + bq * d) * 4 + bq * bkv * 4
+                       + (d * n + bq * n) * 4)
+            if dialect.buffer_occupancy(working, 2) < 2:
+                continue
+            steps = -(-sq // bq) * -(-skv // bkv)
+            out.append((steps, -bkv, -bq,
+                        {"block_q": bq, "block_kv": bkv}))
+    out.sort(key=lambda t: t[:3])
+    if not out:
+        return [{"block_q": 128, "block_kv": 128}]     # Eq. 1 floor plan
     return [params for *_rank, params in out]
 
 
@@ -265,6 +332,11 @@ def candidates_for(op: str, bucket: str,
         return gemm_candidates(rep["m"], rep["n"], rep["k"], dialect)
     if space.kind == "attention":
         return attention_candidates(rep["sq"], rep["skv"], rep["d"], dialect)
+    if space.kind == "swiglu":
+        return swiglu_candidates(rep["rows"], rep["d"], rep["f"], dialect)
+    if space.kind == "attention_matmul":
+        return attention_matmul_candidates(rep["sq"], rep["skv"], rep["d"],
+                                           rep["n"], dialect)
     raise ValueError(f"unknown tuning space kind {space.kind!r}")
 
 
@@ -323,28 +395,51 @@ TUNING_TABLE = TuningTable.load()
 # ---------------------------------------------------------------------------
 
 
+def active_dialect(dialect: Optional[Dialect] = None) -> Dialect:
+    """The dialect whose table slice a lookup should consult.
+
+    Explicit wins; otherwise the ambient :func:`use_policy` context's
+    dialect (how ``auto`` policies on a foreign dialect run *its* tuned
+    plans instead of the target's heuristics — kernels dispatch under
+    ``use_policy``, see ``repro.kernels.ops``), else the framework TARGET.
+    Read at trace time: like the policy itself, a jitted kernel keeps the
+    plan it was traced with."""
+    if dialect is not None:
+        return dialect
+    from repro.core.registry import current_policy
+    policy = current_policy()
+    return policy.resolved_dialect() if policy is not None else TARGET
+
+
+def tuned_entry(op: str, mode: str, bucket: str,
+                dialect: Optional[Dialect] = None,
+                table: Optional[TuningTable] = None) -> Optional[Dict]:
+    """The raw winning entry for one (op, mode, dialect, bucket), if any."""
+    table = TUNING_TABLE if table is None else table
+    return table.lookup(op, mode, active_dialect(dialect).name, bucket)
+
+
 def tuned_plan(op: str, total_rows: int, row_bytes: int, *, mode: str,
-               dialect: Dialect = TARGET,
+               dialect: Optional[Dialect] = None,
                table: Optional[TuningTable] = None, **plan_kw):
     """``plan_row_pipeline`` with the table's winner for this bucket.
 
     The entry's ``block_rows`` / ``n_buffers`` ride in through the plan's
     ``tuned=`` override, which still enforces the occupancy invariant and
     the problem-size clamps — a bad entry degrades to the heuristic."""
-    table = TUNING_TABLE if table is None else table
-    entry = table.lookup(op, mode, dialect.name,
-                         rowwise_bucket(total_rows, row_bytes))
+    dialect = active_dialect(dialect)
+    entry = tuned_entry(op, mode, rowwise_bucket(total_rows, row_bytes),
+                        dialect, table)
     return plan_row_pipeline(total_rows, row_bytes, mode=mode,
                              dialect=dialect, tuned=entry, **plan_kw)
 
 
 def tuned_block(op: str, mode: str, m: int, n: int, k: int,
-                dialect: Dialect = TARGET,
+                dialect: Optional[Dialect] = None,
                 table: Optional[TuningTable] = None
                 ) -> Optional[Tuple[int, int, int]]:
     """The table's ``(bm, bn, bk)`` for a GEMM-shaped op, if recorded."""
-    table = TUNING_TABLE if table is None else table
-    entry = table.lookup(op, mode, dialect.name, gemm_bucket(m, n, k))
+    entry = tuned_entry(op, mode, gemm_bucket(m, n, k), dialect, table)
     if entry and "block" in entry:
         bm, bn, bk = entry["block"]
         return int(bm), int(bn), int(bk)
@@ -352,13 +447,12 @@ def tuned_block(op: str, mode: str, m: int, n: int, k: int,
 
 
 def tuned_attention_blocks(mode: str, sq: int, skv: int, d: int,
-                           dialect: Dialect = TARGET,
+                           dialect: Optional[Dialect] = None,
                            table: Optional[TuningTable] = None
                            ) -> Optional[Tuple[int, int]]:
     """The table's ``(block_q, block_kv)`` for the flash kernel, if any."""
-    table = TUNING_TABLE if table is None else table
-    entry = table.lookup("flash_attention", mode, dialect.name,
-                         attention_bucket(sq, skv, d))
+    entry = tuned_entry("flash_attention", mode, attention_bucket(sq, skv, d),
+                        dialect, table)
     if entry and "block_q" in entry and "block_kv" in entry:
         return int(entry["block_q"]), int(entry["block_kv"])
     return None
@@ -421,6 +515,81 @@ def autotune_entry(table: TuningTable, op: str, mode: str, bucket: str,
 
 
 # ---------------------------------------------------------------------------
+# Canonical shapes: the table rows the autotune CLI regenerates and the CI
+# sync gate re-derives — one source of truth shared by both
+# (scripts/autotune.py imports these; they match the benchmark matrix's
+# full + quick sizings so the committed winners cover exactly the rows
+# BENCH_kernels.json reports).
+# ---------------------------------------------------------------------------
+
+
+CANONICAL_SHAPES: Dict[str, List[Dict[str, int]]] = {
+    "reduction": [dict(n=1 << 21), dict(n=1 << 15)],
+    "rmsnorm": [dict(rows=1024, d=1024), dict(rows=64, d=256)],
+    "histogram": [dict(n=1 << 18, num_bins=256),
+                  dict(n=1 << 14, num_bins=256)],
+    "add_rmsnorm": [dict(rows=1024, d=1024), dict(rows=64, d=256)],
+    "gemm": [dict(m=1024, n=1024, k=1024), dict(m=256, n=256, k=256)],
+    "flash_attention": [dict(sq=1024, skv=1024, d=64),
+                        dict(sq=256, skv=256, d=64)],
+    "rmsnorm_swiglu": [dict(rows=1024, d=1024, f=1024),
+                       dict(rows=64, d=256, f=256)],
+    "flash_attention_matmul": [dict(sq=1024, skv=1024, d=64, n=256),
+                               dict(sq=256, skv=256, d=64, n=128)],
+}
+
+
+def bucket_for(op: str, shape: Dict[str, int]) -> str:
+    """Map an op's natural shape to its tuning-space bucket."""
+    kind = OP_SPACES[op].kind
+    lanes = TARGET.W
+    if kind == "rowwise":
+        if op in ("reduction", "histogram"):
+            rows = -(-shape["n"] // lanes)
+            return rowwise_bucket(rows, lanes * 4)
+        if op == "rmsnorm":
+            return rowwise_bucket(shape["rows"], shape["d"] * 4)
+        if op == "add_rmsnorm":
+            return rowwise_bucket(shape["rows"], 2 * shape["d"] * 4)
+        raise ValueError(f"no bucket rule for rowwise op {op!r}")
+    if kind == "gemm":
+        return gemm_bucket(shape["m"], shape["n"], shape["k"])
+    if kind == "attention":
+        return attention_bucket(shape["sq"], shape["skv"], shape["d"])
+    if kind == "swiglu":
+        return swiglu_bucket(shape["rows"], shape["d"], shape["f"])
+    if kind == "attention_matmul":
+        return attention_matmul_bucket(shape["sq"], shape["skv"],
+                                       shape["d"], shape["n"])
+    raise ValueError(kind)
+
+
+def expected_structural_entries(registry,
+                                dialect: Dialect) -> Dict[str, Dict]:
+    """The structural winners the autotune CLI would write for ``dialect``.
+
+    Enumerates every registered tunable op × its dialect-legal non-library
+    modes × canonical shapes — the slice :func:`check_table` holds the
+    committed table to, so a stale entry on *any* dialect present in the
+    table (not just the target) fails CI."""
+    expected: Dict[str, Dict] = {}
+    for op, shapes in sorted(CANONICAL_SHAPES.items()):
+        if op not in registry.ops() or op not in OP_SPACES:
+            continue
+        for mode in registry.modes(op):
+            if mode == "library" or not registry.legal(op, mode, dialect):
+                continue          # XLA's tiling / illegal variants: untuned
+            for shape in shapes:
+                bucket = bucket_for(op, shape)
+                cands = candidates_for(op, bucket, dialect)
+                if not cands:
+                    continue
+                key = TuningTable.key(op, mode, dialect.name, bucket)
+                expected[key] = cands[0]
+    return expected
+
+
+# ---------------------------------------------------------------------------
 # CI sync check: committed entries must live inside the candidate grid
 # ---------------------------------------------------------------------------
 
@@ -428,8 +597,11 @@ def autotune_entry(table: TuningTable, op: str, mode: str, bucket: str,
 def check_table(registry, table: Optional[TuningTable] = None) -> List[str]:
     """Validate every table entry against the live registry + candidate
     grids.  Returns failure strings (empty = in sync).  Stale ops/modes/
-    dialects and params outside the legal grid all fail — the check needs
-    no TPU, so CI runs it on every push."""
+    dialects and params outside the legal grid all fail, and every dialect
+    *present* in the table is held to the full canonical structural slice
+    (a stale or missing ``uisa-universal10`` entry fails exactly like a
+    ``tpu-v5e`` one) — the check needs no TPU, so CI runs it on every
+    push."""
     table = TUNING_TABLE if table is None else table
     failures = []
     for key, entry in table.entries.items():
@@ -460,4 +632,28 @@ def check_table(registry, table: Optional[TuningTable] = None) -> List[str]:
             failures.append(
                 f"{key}: params {params} outside the legal candidate grid "
                 f"({len(cands)} candidates)")
+    # per-dialect slice sync: each dialect present in the table carries the
+    # full canonical structural slice, and structural entries must be the
+    # *current* winners (measured entries are exempt from winner equality —
+    # they intentionally override the structural ranking).
+    present = sorted({parts[2] for parts in
+                      (key.split("|") for key in table.entries)
+                      if len(parts) == 4 and parts[2] in DIALECTS})
+    for dialect_name in present:
+        expected = expected_structural_entries(registry,
+                                               get_dialect(dialect_name))
+        for key, winner in expected.items():
+            entry = table.entries.get(key)
+            if entry is None:
+                failures.append(
+                    f"{key}: missing from the {dialect_name} slice "
+                    f"(stale table — rerun scripts/autotune.py)")
+                continue
+            if entry.get("source") != "structural":
+                continue
+            params = {k: v for k, v in entry.items() if k != "source"}
+            if params != winner:
+                failures.append(
+                    f"{key}: stale structural entry {params} != current "
+                    f"winner {winner} (rerun scripts/autotune.py)")
     return failures

@@ -110,8 +110,22 @@ class _Sum:
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
                   red_ref, *, scale: float, causal: bool, kv_offset: int,
                   block_q: int, block_kv: int, n_kv: int, mode: str,
-                  skip: bool):
-    qi, ki = pl.program_id(2), pl.program_id(3)
+                  skip: bool, kv_len: int | None = None, q_axis: int = 2,
+                  kv_axis: int = 3, epilogue=None):
+    """One online-softmax block program.
+
+    ``kv_len`` is the true (unpadded) kv length: when the sequence was
+    padded to a block multiple and the causal mask (which already covers
+    the pad for valid rows) is off, the padded zero-keys must be masked
+    explicitly or they receive softmax weight.  ``q_axis``/``kv_axis``
+    name the grid dimensions carrying the q-block and kv-block indices
+    (the fused ``flash_attention_matmul`` lowering reorders the grid so
+    heads are sequential).  ``epilogue`` is the hook the fused lowerings
+    plug into: called with the finalized ``acc / l`` block *in VMEM*
+    instead of the plain ``o_ref`` store — the attention output then
+    never exists in HBM (kernels/fused.py).
+    """
+    qi, ki = pl.program_id(q_axis), pl.program_id(kv_axis)
 
     @pl.when(ki == 0)
     def _init():
@@ -132,6 +146,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
             cols = ki * block_kv + jax.lax.broadcasted_iota(
                 jnp.int32, s.shape, 1)
             s = jnp.where(cols <= rows, s, NEG_INF)
+        elif kv_len is not None and kv_len < n_kv * block_kv:
+            # non-causal with a padded kv axis: the causal mask is not
+            # there to hide the zero-key pad, so mask it explicitly
+            cols = ki * block_kv + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 1)
+            s = jnp.where(cols < kv_len, s, NEG_INF)
 
         m_prev = m_ref[...]                               # (bq, 1)
         m_cur = jnp.maximum(m_prev, _row_reduce(s, _Max, mode, red_ref))
@@ -158,7 +178,11 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
     def _store():
         l = l_ref[...]
         l = jnp.where(l == 0.0, 1.0, l)                   # fully-masked rows
-        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        out = acc_ref[...] / l
+        if epilogue is None:
+            o_ref[0, 0] = out.astype(o_ref.dtype)
+        else:
+            epilogue(out)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -200,7 +224,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         functools.partial(
             _flash_kernel, scale=scale, causal=causal, kv_offset=kv_offset,
             block_q=block_q, block_kv=block_kv, n_kv=grid[3], mode=mode,
-            skip=skip),
+            skip=skip, kv_len=skv),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, block_q, d),
@@ -238,14 +262,22 @@ def _pad_seq(x: jax.Array, block: int) -> jax.Array:
 def structural_cost(b: int, h: int, sq: int, skv: int, d: int,
                     causal: bool, mode: str,
                     block_q: int | None = None,
-                    block_kv: int | None = None) -> dict:
+                    block_kv: int | None = None,
+                    dtype=jnp.float32) -> dict:
     """Visited-block accounting + the §VII.C scratch-traffic delta.
 
     Grid-level predication (native block-skip) controls how many blocks
     run; the online-softmax cross-lane stages control what each visited
     block pays: two rowwise reductions (max, sum) per block, each either
     log2(W) scratch round-trips (abstract), log2(W) register shuffles
-    (abstract+shuffle), or one native fused reduce."""
+    (abstract+shuffle), or one native fused reduce.
+
+    ``hbm_bytes`` is the logical stream traffic (read q/k/v once, write o
+    once) and is mode-invariant — block revisits are VMEM pipelining the
+    visited-block columns account for, and keeping the HBM term equal
+    across modes keeps the §VII.C scratch ordering the auto-selection
+    tiebreak.  The o write term is what the fused ``flash_attention →
+    matmul`` lowering eliminates (kernels/fused.py)."""
     block_q, block_kv = resolve_blocks(mode, sq, skv, d, block_q, block_kv)
     nq = -(-sq // block_q)
     nk = -(-skv // block_kv)
@@ -272,12 +304,14 @@ def structural_cost(b: int, h: int, sq: int, skv: int, d: int,
         round_trips = 0
         scratch_bytes = 0
         shuffles = 0
+    itemsize = jnp.dtype(dtype).itemsize
     return {
         "blocks_total": b * h * total,
         "blocks_visited": b * h * visited,
         "flops": b * h * visited * flops_per_block,
         "flops_dense": b * h * total * flops_per_block,
         "skip_fraction": 1.0 - visited / total,
+        "hbm_bytes": b * h * d * (2 * sq + 2 * skv) * itemsize,
         "scratch_round_trips_per_block": round_trips,
         "scratch_bytes_total": scratch_bytes,
         "lane_shuffles_per_block": shuffles,

@@ -21,6 +21,20 @@ where HBM traffic is the *treatment*, not the control:
   (``rows · d · itemsize``); the write survives because the residual
   stream owns the sum — the cost model says so honestly rather than
   claiming the full round trip.
+- :func:`flash_attention_matmul` — the post-attention ``wo`` projection
+  consumed from the online-softmax accumulator in VMEM
+  (kernels/attention.py's epilogue hook).  The flash grid is reordered so
+  heads run on a *sequential* axis and every head's ``(acc / l) @ wo_h``
+  contribution accumulates into one shared ``[bq, N]`` output block — the
+  ``[B, S, H, D]`` attention output never exists in HBM (write + read-back
+  = ``2 · B·S·H·D · itemsize``, the largest single round trip in a
+  transformer sublayer).
+- :func:`rmsnorm_swiglu` — ln2 → ``wi``/``wg`` as one fused call against
+  the concatenated ``[wi|wg]`` weight, with the silu gate applied in the
+  epilogue: the normalized activation feeds both projections from VMEM
+  (same ``2 · rows · d · itemsize`` saving as :func:`rmsnorm_matmul`; the
+  ``hi``/``hg`` products additionally never stage — claimed conservatively,
+  the pinned delta stays exactly one activation round trip).
 
 Both ops carry the full Table V mode matrix.  The fused *program
 structure* (two abstract ops realized by one kernel) is a lowering
@@ -53,6 +67,9 @@ from repro.core import (IsaMode, KernelContract, Primitive, REGISTRY,
                         scratch_tree_bytes, tree_stages, tuned_plan,
                         validate_contract)
 from repro.core.pipeline import CompilerParams
+from repro.core.tuning import (attention_matmul_bucket, swiglu_bucket,
+                               tuned_entry)
+from repro.kernels import attention as _attention
 from repro.kernels import gemm as _gemm
 from repro.kernels import ref as _ref
 from repro.kernels import rmsnorm as _rmsnorm
@@ -61,7 +78,15 @@ LANES = TARGET.W
 _MAX_BLOCK_ROWS = 64          # add_rmsnorm latency cap (mirrors rmsnorm)
 register_op_space("add_rmsnorm", "rowwise", max_block_rows=_MAX_BLOCK_ROWS)
 # rmsnorm_matmul's tile IS a GEMM tile: it shares the "gemm" tuning space
-# (one table row tunes both), so no separate op space is registered.
+# (one table row tunes both, so no separate op space); the two ops below
+# have genuinely different working sets and get their own Eq. 1 grids.
+register_op_space("rmsnorm_swiglu", "swiglu")
+register_op_space("flash_attention_matmul", "attention_matmul")
+
+#: every fused multi-op lowering this module registers — the sweep target
+#: for validate_contracts' cost-accounting gate and the property tests.
+FUSED_OPS = ("add_rmsnorm", "flash_attention_matmul", "rmsnorm_matmul",
+             "rmsnorm_swiglu")
 
 # --------------------------------------------------------------------------
 # Contracts: the fused ops spend the union of their constituents' budgets.
@@ -100,8 +125,36 @@ _AR_NATIVE = KernelContract(
     native_features=frozenset({"fused_epilogue", "dimension_semantics",
                                "multi_buffering"}))
 
+# flash_attention_matmul spends attention's budget (the epilogue is an MMA
+# on data already resident); rmsnorm_swiglu spends rmsnorm_matmul's.
+_FA_ABSTRACT = KernelContract(
+    kernel="flash_attention_matmul", mode=IsaMode.ABSTRACT,
+    primitives=_attention.ABSTRACT_CONTRACT.primitives)
+_FA_SHUFFLE = KernelContract(
+    kernel="flash_attention_matmul", mode=IsaMode.ABSTRACT_SHUFFLE,
+    primitives=_FA_ABSTRACT.primitives | {Primitive.LANE_SHUFFLE})
+_FA_NATIVE = KernelContract(
+    kernel="flash_attention_matmul", mode=IsaMode.NATIVE,
+    primitives=frozenset(Primitive),
+    native_features=frozenset({"fused_epilogue", "mxu_aligned_tiles",
+                               "dimension_semantics", "multi_buffering"}))
+
+_SW_ABSTRACT = KernelContract(
+    kernel="rmsnorm_swiglu", mode=IsaMode.ABSTRACT,
+    primitives=_RM_ABSTRACT.primitives)
+_SW_SHUFFLE = KernelContract(
+    kernel="rmsnorm_swiglu", mode=IsaMode.ABSTRACT_SHUFFLE,
+    primitives=_SW_ABSTRACT.primitives | {Primitive.LANE_SHUFFLE})
+_SW_NATIVE = KernelContract(
+    kernel="rmsnorm_swiglu", mode=IsaMode.NATIVE,
+    primitives=frozenset(Primitive),
+    native_features=frozenset({"fused_epilogue", "mxu_aligned_tiles",
+                               "dimension_semantics", "multi_buffering"}))
+
 for _c in (_RM_ABSTRACT, _RM_SHUFFLE, _RM_NATIVE,
-           _AR_ABSTRACT, _AR_SHUFFLE, _AR_NATIVE):
+           _AR_ABSTRACT, _AR_SHUFFLE, _AR_NATIVE,
+           _FA_ABSTRACT, _FA_SHUFFLE, _FA_NATIVE,
+           _SW_ABSTRACT, _SW_SHUFFLE, _SW_NATIVE):
     validate_contract(_c)
 
 
@@ -374,6 +427,352 @@ def structural_cost_add_rmsnorm(rows: int, d: int, mode: str,
 
 
 # --------------------------------------------------------------------------
+# flash_attention -> wo: the output projection consumed from the
+# online-softmax accumulator (the epilogue hook in kernels/attention.py)
+# --------------------------------------------------------------------------
+
+
+def resolve_attention_matmul_blocks(mode: str, sq: int, skv: int, d: int,
+                                    n: int, block_q=None, block_kv=None):
+    """Caller-pinned blocks win; then this op's own tuned entry (its
+    working set includes the wo slice and the shared output block, so it
+    tunes separately from bare flash); then the flash resolution.  Shared
+    by the kernel and ``structural_cost`` — modeled == executed."""
+    if block_q is None or block_kv is None:
+        entry = tuned_entry("flash_attention_matmul", mode,
+                            attention_matmul_bucket(sq, skv, d, n))
+        if entry and "block_q" in entry and "block_kv" in entry:
+            tq, tkv = int(entry["block_q"]), int(entry["block_kv"])
+        else:
+            tq, tkv = _attention.resolve_blocks(mode, sq, skv, d)
+        block_q = tq if block_q is None else block_q
+        block_kv = tkv if block_kv is None else block_kv
+    block_q = min(block_q, align_up(sq, 128))
+    block_kv = min(block_kv, align_up(skv, 128))
+    if mode != "native":
+        # abstract/shuffle row reduces fold into 128-lane vregs
+        block_kv = max(LANES, (block_kv // LANES) * LANES)
+    return block_q, block_kv
+
+
+def _flash_matmul_kernel(q_ref, k_ref, v_ref, w_ref, o_ref, m_ref, l_ref,
+                         acc_ref, red_ref, oacc_ref, *, scale: float,
+                         causal: bool, kv_offset: int, block_q: int,
+                         block_kv: int, n_kv: int, n_heads: int,
+                         kv_len: int, mode: str):
+    hh = pl.program_id(2)
+
+    def epilogue(out):
+        # the hook: (acc / l) goes straight into the head's wo slice from
+        # VMEM; heads run sequentially and accumulate into one shared f32
+        # scratch (a single output-dtype cast at the last head — the same
+        # accumulation discipline as the unfused einsum), so the
+        # attention output never exists in HBM.
+        contrib = jax.lax.dot_general(
+            out, w_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        @pl.when(hh == 0)
+        def _first_head():
+            oacc_ref[...] = contrib
+
+        @pl.when(hh != 0)
+        def _accumulate():
+            oacc_ref[...] += contrib
+
+        @pl.when(hh == n_heads - 1)
+        def _store_block():
+            o_ref[0] = oacc_ref[...].astype(o_ref.dtype)
+
+    _attention._flash_kernel(
+        q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, red_ref,
+        scale=scale, causal=causal, kv_offset=kv_offset, block_q=block_q,
+        block_kv=block_kv, n_kv=n_kv, mode=mode, skip=(mode == "native"),
+        kv_len=kv_len, q_axis=1, kv_axis=3, epilogue=epilogue)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "mode", "interpret", "block_q", "block_kv", "kv_offset"))
+def flash_attention_matmul(q: jax.Array, k: jax.Array, v: jax.Array,
+                           w_out: jax.Array, *, causal: bool = True,
+                           kv_offset: int | None = None,
+                           mode: str = "native", interpret: bool = True,
+                           block_q: int | None = None,
+                           block_kv: int | None = None) -> jax.Array:
+    """``flash_attention(q, k, v)`` -> ``wo`` projection in one kernel.
+
+    q: [B,H,Sq,D]; k/v: [B,Hkv,Skv,D]; w_out: [H·D, N] -> [B,Sq,N].
+    The grid is ``(batch, q-block, head, kv-block)`` with the head axis
+    *sequential*: each head finishes its online softmax, projects the
+    accumulator through its wo slice, and adds into a shared f32 VMEM
+    accumulator (cast to the output dtype once, at the last head) — the
+    `[B,S,H,D]` activation the unfused pair stages to HBM is never
+    materialized.
+    """
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    assert w_out.shape[0] == h * d, (w_out.shape, h, d)
+    n = w_out.shape[1]
+    if mode == "library":
+        o = _ref.attention(q, k, v, causal=causal)
+        o = o.transpose(0, 2, 1, 3).reshape(b, sq, h * d)
+        return jnp.einsum("bsh,hn->bsn", o, w_out.astype(o.dtype))
+    if kv_offset is None:
+        kv_offset = skv - sq
+    scale = 1.0 / (d ** 0.5)
+    block_q, block_kv = resolve_attention_matmul_blocks(
+        mode, sq, skv, d, n, block_q, block_kv)
+    q_p = _attention._pad_seq(q, block_q)
+    k_p = _attention._pad_seq(k, block_kv)
+    v_p = _attention._pad_seq(v, block_kv)
+    sqp, skvp = q_p.shape[2], k_p.shape[2]
+    n_p = align_up(n, 128)
+    w3 = w_out.reshape(h, d, n)
+    if n_p != n:
+        w3 = jnp.pad(w3, ((0, 0), (0, 0), (0, n_p - n)))
+    grid = (b, sqp // block_q, h, skvp // block_kv)
+
+    params = None
+    if mode == "native":
+        params = CompilerParams(dimension_semantics=(
+            "parallel", "parallel", "arbitrary", "arbitrary"))
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_matmul_kernel, scale=scale, causal=causal,
+            kv_offset=kv_offset, block_q=block_q, block_kv=block_kv,
+            n_kv=grid[3], n_heads=h, kv_len=skv, mode=mode),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bb, qi, hh, ki: (bb, hh, qi, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda bb, qi, hh, ki, g=group: (bb, hh // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda bb, qi, hh, ki, g=group: (bb, hh // g, ki, 0)),
+            pl.BlockSpec((1, d, n_p), lambda bb, qi, hh, ki: (hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, n_p),
+                               lambda bb, qi, hh, ki: (bb, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sqp, n_p), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),      # m
+            pltpu.VMEM((block_q, 1), jnp.float32),      # l
+            pltpu.VMEM((block_q, d), jnp.float32),      # acc
+            pltpu.VMEM((block_q, LANES) if mode == "abstract"
+                       else (8, LANES), jnp.float32),
+            pltpu.VMEM((block_q, n_p), jnp.float32),    # cross-head acc
+        ],
+        compiler_params=params,
+        interpret=interpret,
+        name=f"uisa_flash_attention_matmul_{mode.replace('+', '_')}",
+    )(q_p, k_p, v_p, w3)
+    return out[:, :sq, :n]
+
+
+def structural_cost_flash_attention_matmul(
+        b: int, h: int, sq: int, skv: int, d: int, n: int, causal: bool,
+        mode: str, block_q=None, block_kv=None, dtype=jnp.float32) -> dict:
+    """The unfused pair's traffic minus exactly one ``[B,S,H,D]`` trip.
+
+    Composes the registered ``flash_attention`` and ``gemm`` cost models
+    (``m = B·S``, ``k = H·D``) and removes the write plus read-back of the
+    attention output (``2·B·S·H·D·itemsize``) — the two legs of the
+    staging the epilogue hook eliminates.  The kernel-describing columns
+    (visited blocks, scratch traffic) come from attention's visited-block
+    model evaluated at *this* lowering's resolved tiling."""
+    itemsize = jnp.dtype(dtype).itemsize
+    if mode == "library":
+        bq, bkv = 256, 256
+    else:
+        bq, bkv = resolve_attention_matmul_blocks(mode, sq, skv, d, n,
+                                                  block_q, block_kv)
+    # ONE attention evaluation at this lowering's resolved tiling: its
+    # hbm term is block-independent (so the pair sum is unaffected) and
+    # its flops/visited/scratch columns then all describe the same grid.
+    att = _attention.structural_cost(
+        b=b, h=h, sq=sq, skv=skv, d=d, causal=causal, mode=mode,
+        block_q=bq, block_kv=bkv, dtype=dtype)
+    g = _gemm.structural_cost(m=b * sq, n=n, k=h * d, mode=mode,
+                              dtype=dtype)
+    unfused = att["hbm_bytes"] + g["hbm_bytes"]
+    saved = 0 if mode == "library" else 2 * b * sq * h * d * itemsize
+    return {
+        "hbm_bytes": unfused - saved,
+        "hbm_bytes_unfused_pair": unfused,
+        "hbm_bytes_saved": saved,
+        "flops": att["flops"] + g["flops"],
+        "block": (bq, bkv),
+        "blocks_visited": att["blocks_visited"],
+        "skip_fraction": att["skip_fraction"],
+        "scratch_round_trips_per_block":
+            att["scratch_round_trips_per_block"],
+        "scratch_bytes_total": att["scratch_bytes_total"],
+        "lane_shuffles_per_block": att["lane_shuffles_per_block"],
+        "fused_epilogue": mode != "library",
+    }
+
+
+# --------------------------------------------------------------------------
+# rmsnorm -> [wi|wg] swiglu: the norm as prologue, the silu gate as epilogue
+# --------------------------------------------------------------------------
+
+
+def resolve_swiglu_blocks(mode: str, rows: int, d: int, f: int,
+                          dtype=jnp.float32):
+    """The (bm, bn) tile over ``rows × f``: this op's tuned entry first
+    (its working set holds *two* weight tiles plus the hi/hg/out trio),
+    then the shared GEMM heuristic.  Shared by kernel and cost."""
+    entry = tuned_entry("rmsnorm_swiglu", mode, swiglu_bucket(rows, d, f))
+    if entry and "block" in entry:
+        bm, bn = entry["block"]
+        return int(bm), int(bn)
+    bm, bn, _ = _gemm.block_shape_for(mode, rows, f, d, dtype)
+    return bm, bn
+
+
+def _rmsnorm_swiglu_kernel(x_ref, w_ref, wi_ref, wg_ref, o_ref, scratch_ref,
+                           *, eps: float, mode: str, d_true: int):
+    x = x_ref[...].astype(jnp.float32)                    # (bm, d)
+    w = w_ref[...].astype(jnp.float32)                    # (1, d)
+    y = _rmsnorm.normalize_block(x, w, scratch_ref, eps=eps, mode=mode,
+                                 d_true=d_true)
+    # both halves of the concatenated [wi|wg] weight consume the
+    # normalized block from VMEM; the silu gate runs in the epilogue on
+    # products that never left the core.
+    hi = jax.lax.dot_general(
+        y, wi_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    hg = jax.lax.dot_general(
+        y, wg_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[...] = (jax.nn.silu(hg) * hi).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "eps", "interpret"))
+def rmsnorm_swiglu(x: jax.Array, weight: jax.Array, w_cat: jax.Array, *,
+                   eps: float = 1e-6, mode: str = "native",
+                   interpret: bool = True) -> jax.Array:
+    """``silu(y @ wg) * (y @ wi)`` with ``y = rmsnorm(x, weight)``, fused.
+
+    x: [..., D]; weight: [D]; w_cat: [D, 2F] — the concatenated
+    ``[wi|wg]`` weight (wi the first F columns, wg the last) -> [..., F].
+    One call per sublayer: the residual is read and the moment computed
+    once, the normalized activation and both projection products stay in
+    VMEM.
+    """
+    *lead, d = x.shape
+    assert w_cat.shape[0] == d and w_cat.shape[1] % 2 == 0, \
+        (x.shape, w_cat.shape)
+    f = w_cat.shape[1] // 2
+    if mode == "library":
+        y = _ref.rmsnorm(x, weight, eps)
+        hi = jnp.einsum("...d,df->...f", y, w_cat[:, :f].astype(y.dtype))
+        hg = jnp.einsum("...d,df->...f", y, w_cat[:, f:].astype(y.dtype))
+        return jax.nn.silu(hg) * hi
+    rows = 1
+    for s in lead:
+        rows *= s
+    x2d = x.reshape(rows, d)
+    w2d = weight.reshape(1, d)
+    wi2d, wg2d = w_cat[:, :f], w_cat[:, f:]
+
+    d_padded = d
+    if mode != "native":
+        pad_d = (-d) % LANES
+        if pad_d:
+            d_padded = d + pad_d
+            x2d = jnp.pad(x2d, ((0, 0), (0, pad_d)))
+            w2d = jnp.pad(w2d, ((0, 0), (0, pad_d)))
+            wi2d = jnp.pad(wi2d, ((0, pad_d), (0, 0)))
+            wg2d = jnp.pad(wg2d, ((0, pad_d), (0, 0)))
+
+    bm, bn = resolve_swiglu_blocks(mode, rows, d, f, x.dtype)
+    bm = min(bm, align_up(rows, 128))
+    bn = min(bn, align_up(f, 128))
+    pad_m = (-rows) % bm
+    pad_n = (-f) % bn
+    if pad_m:
+        x2d = jnp.pad(x2d, ((0, pad_m), (0, 0)))
+    if pad_n:
+        wi2d = jnp.pad(wi2d, ((0, 0), (0, pad_n)))
+        wg2d = jnp.pad(wg2d, ((0, 0), (0, pad_n)))
+    mp, fp = rows + pad_m, f + pad_n
+    grid = (mp // bm, fp // bn)
+
+    params = None
+    if mode == "native":
+        params = CompilerParams(
+            dimension_semantics=("parallel", "parallel"))
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_swiglu_kernel, eps=eps, mode=mode,
+                          d_true=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d_padded), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, d_padded), lambda i, j: (0, 0)),
+            pl.BlockSpec((d_padded, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((d_padded, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, fp), x.dtype),
+        scratch_shapes=[pltpu.VMEM(
+            (bm, LANES) if mode == "abstract" else (8, LANES),
+            jnp.float32)],
+        compiler_params=params,
+        interpret=interpret,
+        name=f"uisa_rmsnorm_swiglu_{mode.replace('+', '_')}",
+    )(x2d, w2d, wi2d, wg2d)
+    return out[:rows, :f].reshape(*lead, f)
+
+
+def structural_cost_rmsnorm_swiglu(rows: int, d: int, f: int, mode: str,
+                                   dtype=jnp.float32) -> dict:
+    """The unfused pair's traffic minus exactly one activation round trip.
+
+    The pair is ``rmsnorm`` + one GEMM against the concatenated
+    ``[D, 2F]`` weight; the fused lowering removes the normalized
+    activation's write + read-back (``2 · rows · d · itemsize``) —
+    claimed conservatively: the hi/hg products the epilogue gate consumes
+    also never stage, but only the norm round trip is pinned."""
+    itemsize = jnp.dtype(dtype).itemsize
+    g = _gemm.structural_cost(m=rows, n=2 * f, k=d, mode=mode, dtype=dtype)
+    r = _rmsnorm.structural_cost(rows=rows, d=d, mode=mode, dtype=dtype)
+    unfused = g["hbm_bytes"] + r["hbm_bytes"]
+    saved = 0 if mode == "library" else 2 * rows * d * itemsize
+    if mode == "library":
+        bm = bn = 512
+    else:
+        bm, bn = resolve_swiglu_blocks(mode, rows, d, f, dtype)
+        bm = min(bm, align_up(rows, 128))
+        bn = min(bn, align_up(f, 128))
+    steps = -(-rows // bm) * -(-f // bn)
+    if mode == "abstract":
+        round_trips = tree_stages(LANES) + 1   # tree + moment re-stage
+        scratch_bytes = steps * (scratch_tree_bytes(LANES, rows=bm)
+                                 + 3 * bm * 4)
+    else:
+        round_trips = 0
+        scratch_bytes = 0
+    return {
+        "hbm_bytes": unfused - saved,
+        "hbm_bytes_unfused_pair": unfused,
+        "hbm_bytes_saved": saved,
+        "flops": g["flops"],
+        "block": (bm, bn),
+        "blocks": steps,
+        "scratch_round_trips_per_block": round_trips,
+        "scratch_bytes_total": scratch_bytes,
+        "lane_shuffles_per_block": tree_stages(LANES)
+        if mode == "abstract+shuffle" else 0,
+        "fused_epilogue": mode != "library",
+    }
+
+
+# --------------------------------------------------------------------------
 # Library rows: the unfused jnp pairs (numerical reference AND the declared
 # fallback target — requesting an illegal fused mode degrades to the pair
 # with a warning + a recorded event, never silently).
@@ -390,6 +789,20 @@ def _add_rmsnorm_library(x, residual, weight, *, eps: float = 1e-6,
                          interpret: bool = True):
     del interpret
     return add_rmsnorm(x, residual, weight, eps=eps, mode="library")
+
+
+def _flash_attention_matmul_library(q, k, v, w_out, *, causal: bool = True,
+                                    kv_offset=None, interpret: bool = True,
+                                    block_q=None, block_kv=None):
+    del kv_offset, interpret, block_q, block_kv   # library: XLA decides
+    return flash_attention_matmul(q, k, v, w_out, causal=causal,
+                                  mode="library")
+
+
+def _rmsnorm_swiglu_library(x, weight, w_cat, *, eps: float = 1e-6,
+                            interpret: bool = True):
+    del interpret
+    return rmsnorm_swiglu(x, weight, w_cat, eps=eps, mode="library")
 
 
 for _mode, _contract in (("abstract", _RM_ABSTRACT),
@@ -414,14 +827,40 @@ REGISTRY.register(
     "add_rmsnorm", IsaMode.LIBRARY, _add_rmsnorm_library,
     cost=functools.partial(structural_cost_add_rmsnorm, mode="library"))
 
+for _mode, _contract in (("abstract", _FA_ABSTRACT),
+                         ("abstract+shuffle", _FA_SHUFFLE),
+                         ("native", _FA_NATIVE)):
+    REGISTRY.register(
+        "flash_attention_matmul", _mode,
+        functools.partial(flash_attention_matmul, mode=_mode),
+        contract=_contract,
+        cost=functools.partial(structural_cost_flash_attention_matmul,
+                               mode=_mode))
+REGISTRY.register(
+    "flash_attention_matmul", IsaMode.LIBRARY,
+    _flash_attention_matmul_library,
+    cost=functools.partial(structural_cost_flash_attention_matmul,
+                           mode="library"))
+
+for _mode, _contract in (("abstract", _SW_ABSTRACT),
+                         ("abstract+shuffle", _SW_SHUFFLE),
+                         ("native", _SW_NATIVE)):
+    REGISTRY.register(
+        "rmsnorm_swiglu", _mode,
+        functools.partial(rmsnorm_swiglu, mode=_mode), contract=_contract,
+        cost=functools.partial(structural_cost_rmsnorm_swiglu, mode=_mode))
+REGISTRY.register(
+    "rmsnorm_swiglu", IsaMode.LIBRARY, _rmsnorm_swiglu_library,
+    cost=functools.partial(structural_cost_rmsnorm_swiglu, mode="library"))
+
 # Declared per-mode fallbacks (warned + recorded in fallback_events):
 # the shuffle moment tree degrades to scratch round-trips on a no-shuffle
 # dialect; the target-pinned native epilogue degrades to the unfused XLA
 # pair (the library row) anywhere it is illegal.
-for _op in ("rmsnorm_matmul", "add_rmsnorm"):
+for _op in FUSED_OPS:
     REGISTRY.declare_fallback(
         _op, IsaMode.ABSTRACT_SHUFFLE, IsaMode.ABSTRACT,
-        reason="no lane shuffle on this dialect; the moment reduction "
+        reason="no lane shuffle on this dialect; the cross-lane reduction "
                "degrades to the scratch-tree lowering")
     REGISTRY.declare_fallback(
         _op, IsaMode.NATIVE, IsaMode.LIBRARY,

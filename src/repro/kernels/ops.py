@@ -29,7 +29,7 @@ import jax.numpy as jnp
 
 from repro.core import IsaMode
 from repro.core.registry import (DEFAULT_POLICY, ExecutionPolicy, REGISTRY,
-                                 resolve_policy)
+                                 resolve_policy, use_policy)
 # importing the kernel modules installs their registry variants
 from repro.kernels import attention as _attention  # noqa: F401
 from repro.kernels import fused as _fused
@@ -54,6 +54,9 @@ PROBE_SHAPES = {
     "flash_attention": dict(b=1, h=4, sq=1024, skv=1024, d=64, causal=True),
     "rmsnorm_matmul": dict(rows=1024, d=1024, n=1024),
     "add_rmsnorm": dict(rows=1024, d=1024),
+    "flash_attention_matmul": dict(b=1, h=4, sq=1024, skv=1024, d=64,
+                                   n=256, causal=True),
+    "rmsnorm_swiglu": dict(rows=1024, d=1024, f=1024),
 }
 
 
@@ -79,13 +82,31 @@ def _resolve(mode, policy, interpret):
     return pol, interpret
 
 
+def _dispatch(low, pol, *args, **kwargs):
+    """Run a selected lowering with the resolved policy ambient.
+
+    The kernels' trace-time tuned-table lookups (``repro.core.tuning``)
+    read the ambient dialect, so an ``auto`` policy on a foreign dialect
+    executes *that* dialect's tuned staging plans rather than the
+    target's.  Same caveat as ``use_policy``, one level stronger: the
+    dialect is NOT part of the jit cache key, so in a process that mixes
+    dialects at identical shapes the first dialect's traced plan is
+    reused (numerics are plan-invariant; the staging shapes are not) —
+    single-dialect processes, the production case, always run their own
+    slice.  Making the plan dialect a static kernel argument is a
+    ROADMAP item."""
+    with use_policy(pol):
+        return low.impl(*args, **kwargs)
+
+
 def matmul(a: jax.Array, b: jax.Array, *, mode=None,
            policy: Optional[ExecutionPolicy] = None,
            out_dtype=jnp.float32, interpret: Optional[bool] = None):
     pol, interpret = _resolve(mode, policy, interpret)
     low = REGISTRY.select("gemm", pol, shape=dict(
         m=a.shape[0], n=b.shape[1], k=a.shape[1], dtype=a.dtype))
-    return low.impl(a, b, out_dtype=out_dtype, interpret=interpret)
+    return _dispatch(low, pol, a, b, out_dtype=out_dtype,
+                     interpret=interpret)
 
 
 def reduce_sum(x: jax.Array, *, mode=None,
@@ -93,7 +114,7 @@ def reduce_sum(x: jax.Array, *, mode=None,
                interpret: Optional[bool] = None):
     pol, interpret = _resolve(mode, policy, interpret)
     low = REGISTRY.select("reduction", pol, shape=dict(n=x.size))
-    return low.impl(x, interpret=interpret)
+    return _dispatch(low, pol, x, interpret=interpret)
 
 
 def histogram(values: jax.Array, num_bins: int = 256, *, mode=None,
@@ -102,7 +123,7 @@ def histogram(values: jax.Array, num_bins: int = 256, *, mode=None,
     pol, interpret = _resolve(mode, policy, interpret)
     low = REGISTRY.select("histogram", pol,
                           shape=dict(n=values.size, num_bins=num_bins))
-    return low.impl(values, num_bins, interpret=interpret)
+    return _dispatch(low, pol, values, num_bins, interpret=interpret)
 
 
 def flash_attention(q, k, v, *, causal: bool = True,
@@ -117,8 +138,9 @@ def flash_attention(q, k, v, *, causal: bool = True,
     low = REGISTRY.select("flash_attention", pol, shape=dict(
         b=q.shape[0], h=q.shape[1], sq=q.shape[2], skv=k.shape[2],
         d=q.shape[3], causal=causal, block_q=block_q, block_kv=block_kv))
-    return low.impl(q, k, v, causal=causal, kv_offset=kv_offset,
-                    interpret=interpret, block_q=block_q, block_kv=block_kv)
+    return _dispatch(low, pol, q, k, v, causal=causal, kv_offset=kv_offset,
+                     interpret=interpret, block_q=block_q,
+                     block_kv=block_kv)
 
 
 def rmsnorm(x, weight, *, eps: float = 1e-6, mode=None,
@@ -130,7 +152,7 @@ def rmsnorm(x, weight, *, eps: float = 1e-6, mode=None,
         rows *= s
     low = REGISTRY.select("rmsnorm", pol,
                           shape=dict(rows=rows, d=x.shape[-1]))
-    return low.impl(x, weight, eps=eps, interpret=interpret)
+    return _dispatch(low, pol, x, weight, eps=eps, interpret=interpret)
 
 
 def fused_rmsnorm_matmul(x: jax.Array, weight: jax.Array,
@@ -149,7 +171,8 @@ def fused_rmsnorm_matmul(x: jax.Array, weight: jax.Array,
         rows *= s
     low = REGISTRY.select("rmsnorm_matmul", pol, shape=dict(
         rows=rows, d=x.shape[-1], n=w_proj.shape[1]))
-    return low.impl(x, weight, w_proj, eps=eps, interpret=interpret)
+    return _dispatch(low, pol, x, weight, w_proj, eps=eps,
+                     interpret=interpret)
 
 
 def fused_add_rmsnorm(x: jax.Array, residual: jax.Array,
@@ -165,7 +188,47 @@ def fused_add_rmsnorm(x: jax.Array, residual: jax.Array,
         rows *= s
     low = REGISTRY.select("add_rmsnorm", pol,
                           shape=dict(rows=rows, d=x.shape[-1]))
-    return low.impl(x, residual, weight, eps=eps, interpret=interpret)
+    return _dispatch(low, pol, x, residual, weight, eps=eps,
+                     interpret=interpret)
+
+
+def fused_flash_attention_matmul(q: jax.Array, k: jax.Array, v: jax.Array,
+                                 w_out: jax.Array, *, causal: bool = True,
+                                 kv_offset: Optional[int] = None, mode=None,
+                                 policy: Optional[ExecutionPolicy] = None,
+                                 interpret: Optional[bool] = None,
+                                 block_q: Optional[int] = None,
+                                 block_kv: Optional[int] = None):
+    """``flash_attention(q, k, v)`` -> ``wo`` without the HBM round trip.
+
+    The `[B,S,H,D]` online-softmax output is consumed from VMEM by the
+    per-head wo slices (kernels/fused.py); declared fallbacks: shuffle ->
+    scratch tree, native -> the unfused XLA pair."""
+    pol, interpret = _resolve(mode, policy, interpret)
+    low = REGISTRY.select("flash_attention_matmul", pol, shape=dict(
+        b=q.shape[0], h=q.shape[1], sq=q.shape[2], skv=k.shape[2],
+        d=q.shape[3], n=w_out.shape[1], causal=causal,
+        block_q=block_q, block_kv=block_kv))
+    return _dispatch(low, pol, q, k, v, w_out, causal=causal,
+                     kv_offset=kv_offset, interpret=interpret,
+                     block_q=block_q, block_kv=block_kv)
+
+
+def fused_rmsnorm_swiglu(x: jax.Array, weight: jax.Array,
+                         w_cat: jax.Array, *, eps: float = 1e-6, mode=None,
+                         policy: Optional[ExecutionPolicy] = None,
+                         interpret: Optional[bool] = None):
+    """``silu(y @ wg) * (y @ wi)`` for ``y = rmsnorm(x, weight)`` in one
+    kernel; ``w_cat`` is the concatenated ``[wi|wg]`` weight ``[D, 2F]``
+    (same fallback discipline as :func:`fused_rmsnorm_matmul`)."""
+    pol, interpret = _resolve(mode, policy, interpret)
+    rows = 1
+    for s in x.shape[:-1]:
+        rows *= s
+    low = REGISTRY.select("rmsnorm_swiglu", pol, shape=dict(
+        rows=rows, d=x.shape[-1], f=w_cat.shape[1] // 2))
+    return _dispatch(low, pol, x, weight, w_cat, eps=eps,
+                     interpret=interpret)
 
 
 STRUCTURAL_COSTS = {
@@ -176,6 +239,8 @@ STRUCTURAL_COSTS = {
     "rmsnorm": _rmsnorm.structural_cost,
     "rmsnorm_matmul": _fused.structural_cost_rmsnorm_matmul,
     "add_rmsnorm": _fused.structural_cost_add_rmsnorm,
+    "flash_attention_matmul": _fused.structural_cost_flash_attention_matmul,
+    "rmsnorm_swiglu": _fused.structural_cost_rmsnorm_swiglu,
 }
 
 #: Pallas-variant contracts per op, in portability order (registry view;

@@ -76,6 +76,27 @@ def rmsnorm_matmul(x, weight, w_proj, eps: float = 1e-6,
     return jnp.einsum("...d,dn->...n", y, w_proj.astype(y.dtype))
 
 
+def rmsnorm_swiglu(x, weight, w_cat, eps: float = 1e-6,
+                   policy: Optional[ExecutionPolicy] = None):
+    """The norm→swiglu hot pair: ``silu(y @ wg) * (y @ wi)`` for
+    ``y = rmsnorm(x, weight)``, ``w_cat`` the concatenated ``[wi|wg]``.
+
+    Same gate as :func:`rmsnorm_matmul`: fused policies consume the
+    normalized activation (and both projection products) from VMEM;
+    unfused policies keep the historical norm-then-two-einsums sequence,
+    bit-identical to the pre-fusion call sites."""
+    from repro.kernels import ops as kernel_ops
+    pol = resolve_policy(policy=policy, default=LIBRARY_POLICY)
+    if pol.fuses():
+        return kernel_ops.fused_rmsnorm_swiglu(x, weight, w_cat, eps=eps,
+                                               policy=pol.kernel())
+    y = rmsnorm(x, weight, eps, policy=pol)
+    f = w_cat.shape[1] // 2
+    hi = jnp.einsum("...d,df->...f", y, w_cat[:, :f].astype(y.dtype))
+    hg = jnp.einsum("...d,df->...f", y, w_cat[:, f:].astype(y.dtype))
+    return jax.nn.silu(hg) * hi
+
+
 def add_rmsnorm(x, delta, weight, eps: float = 1e-6,
                 policy: Optional[ExecutionPolicy] = None):
     """The residual→norm hot pair: ``(rmsnorm(x + delta), x + delta)``.

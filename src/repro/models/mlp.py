@@ -34,13 +34,32 @@ def init_mlp(key, d: int, d_ff: int, act: str, dtype):
     return params, specs
 
 
-def apply_mlp(params, x, act: str, ctx: Optional[ShardCtx]):
-    h = jnp.einsum("bsd,df->bsf", x, params["wi"].astype(x.dtype))
-    if act == "silu":
-        gate = jnp.einsum("bsd,df->bsf", x, params["wg"].astype(x.dtype))
-        h = jax.nn.silu(gate) * h
+def apply_mlp(params, x, act: str, ctx: Optional[ShardCtx],
+              policy=None, norm_scale=None, eps: float = 1e-6):
+    """Position-wise MLP.  With ``norm_scale`` set, ``x`` is the *raw*
+    residual stream and the pre-MLP rmsnorm rides into the projections —
+    for swiglu as one fused call against the concatenated ``[wi|wg]``
+    weight with the silu gate applied in the epilogue (kernels/fused.py),
+    mirroring PR 3's q/k/v ``norm_scale`` threading."""
+    if norm_scale is not None:
+        if act == "silu":
+            w_cat = jnp.concatenate([params["wi"], params["wg"]], axis=1)
+            h = common.rmsnorm_swiglu(x, norm_scale, w_cat, eps,
+                                      policy=policy)
+        else:
+            # no gate pair to fuse into: the norm rides into the single
+            # wi projection as a GEMM prologue instead
+            h = common.rmsnorm_matmul(x, norm_scale, params["wi"], eps,
+                                      policy=policy)
+            h = common.activation(h, act)
     else:
-        h = common.activation(h, act)
+        h = jnp.einsum("bsd,df->bsf", x, params["wi"].astype(x.dtype))
+        if act == "silu":
+            gate = jnp.einsum("bsd,df->bsf", x,
+                              params["wg"].astype(x.dtype))
+            h = jax.nn.silu(gate) * h
+        else:
+            h = common.activation(h, act)
     h = shard(h, ("act_batch", "act_seq_unsharded", "act_mlp"), ctx)
     return jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(x.dtype))
 
@@ -120,8 +139,19 @@ def _load_balance_loss(gates, onehot):
 
 
 def apply_moe(params, x, moe: MoEConfig, act: str,
-              ctx: Optional[ShardCtx]) -> Tuple[jax.Array, jax.Array]:
-    """x: [B,S,D] -> (y, aux_loss)."""
+              ctx: Optional[ShardCtx], policy=None, norm_scale=None,
+              eps: float = 1e-6) -> Tuple[jax.Array, jax.Array]:
+    """x: [B,S,D] -> (y, aux_loss).
+
+    With ``norm_scale`` set, ``x`` is the raw residual: the router and
+    expert dispatch need the normalized stream explicitly (it feeds the
+    routing einsum), so it is computed here through the registry norm,
+    while the shared-expert path threads ``norm_scale`` down to
+    :func:`apply_mlp` and fuses its own ln2→[wi|wg] pair against the raw
+    stream."""
+    x_raw = x
+    if norm_scale is not None:
+        x = common.rmsnorm(x, norm_scale, eps, policy=policy)
     b, s, d = x.shape
     tokens = b * s
     gsz = min(moe.group_size, tokens)
@@ -152,5 +182,10 @@ def apply_moe(params, x, moe: MoEConfig, act: str,
     y = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), out)
     y = y.reshape(-1, d)[:tokens].reshape(b, s, d)
     if moe.shared_experts:
-        y = y + apply_mlp(params["shared"], x, act, ctx)
+        if norm_scale is not None:
+            y = y + apply_mlp(params["shared"], x_raw, act, ctx,
+                              policy=policy, norm_scale=norm_scale,
+                              eps=eps)
+        else:
+            y = y + apply_mlp(params["shared"], x, act, ctx)
     return y, aux

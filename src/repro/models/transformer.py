@@ -161,17 +161,31 @@ def attn_seq(params, x, cfg: ModelConfig, par: ParallelConfig,
         # variant comes from the threaded policy's kernel view — the
         # registry, not this call site, decides the lowering.
         from repro.kernels import ops as kernel_ops
-        o = kernel_ops.flash_attention(
-            q, k_rep, v_rep, causal=causal,
-            block_q=min(par.attn_chunk_q, 256),
-            block_kv=min(par.attn_chunk_kv, 256), policy=policy.kernel())
+        if policy.fuses():
+            # Fused epilogue: the wo projection consumes the online-
+            # softmax accumulator in VMEM (kernels/fused.py) — the
+            # [B,S,H,D] attention output never round-trips through HBM.
+            out = kernel_ops.fused_flash_attention_matmul(
+                q, k_rep, v_rep, params["wo"], causal=causal,
+                block_q=min(par.attn_chunk_q, 256),
+                block_kv=min(par.attn_chunk_kv, 256),
+                policy=policy.kernel())
+        else:
+            o = kernel_ops.flash_attention(
+                q, k_rep, v_rep, causal=causal,
+                block_q=min(par.attn_chunk_q, 256),
+                block_kv=min(par.attn_chunk_kv, 256),
+                policy=policy.kernel())
+            o = o.transpose(0, 2, 1, 3).reshape(b, s, -1)
+            out = jnp.einsum("bsh,hd->bsd", o,
+                             params["wo"].astype(x.dtype))
     else:
         o = chunked_attention(
             q, k_rep, v_rep, causal=causal, kv_offset=0,
             chunk_q=par.attn_chunk_q, chunk_kv=par.attn_chunk_kv,
             exact_causal=par.causal_folding, ctx=ctx)
-    o = o.transpose(0, 2, 1, 3).reshape(b, s, -1)
-    out = jnp.einsum("bsh,hd->bsd", o, params["wo"].astype(x.dtype))
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, -1)
+        out = jnp.einsum("bsh,hd->bsd", o, params["wo"].astype(x.dtype))
     if par.rs_outputs:
         # Constrain the row-parallel partial sum to the seq-sharded
         # residual layout so the TP combine compiles to reduce-scatter.
@@ -234,17 +248,36 @@ def block_seq(params, x, cfg: ModelConfig, par: ParallelConfig, positions,
         a = attn_seq(params["attn"], h, cfg, par, positions, ctx,
                      policy=policy, norm_scale=norm_scale)
         kv = None
-    if fuse:
+    # ln2 routing: when a fusable wi/wg pair sits downstream (dense silu
+    # MLP, or a MoE with shared experts), the fused path keeps the
+    # residual RAW — ln2 rides into the wi/wg projections as a fused
+    # prologue (rmsnorm_swiglu saves the full norm round trip, strictly
+    # more than add_rmsnorm's read-back leg).  Otherwise (gelu MLPs, MoE
+    # without shared experts — the router path needs the norm explicitly
+    # and there is no dense pair to absorb it) the PR 3 residual→norm
+    # fusion stays.
+    swiglu_fuse = (fuse and cfg.act == "silu"
+                   and (cfg.moe is None or bool(cfg.moe.shared_experts)))
+    if swiglu_fuse:
+        x = x + a
+        h, mlp_scale = x, params["ln2"]["scale"]
+    elif fuse:
         h, x = common.add_rmsnorm(x, a, params["ln2"]["scale"],
                                   cfg.norm_eps, policy=policy)
+        mlp_scale = None
     else:
         x = x + a
         h = common.apply_norm(x, params["ln2"], cfg.norm, cfg.norm_eps,
                               policy=policy)
+        mlp_scale = None
     if cfg.moe is not None:
-        m, aux = mlp.apply_moe(params["moe"], h, cfg.moe, cfg.act, ctx)
+        m, aux = mlp.apply_moe(params["moe"], h, cfg.moe, cfg.act, ctx,
+                               policy=policy, norm_scale=mlp_scale,
+                               eps=cfg.norm_eps)
     else:
-        m, aux = mlp.apply_mlp(params["mlp"], h, cfg.act, ctx), 0.0
+        m, aux = mlp.apply_mlp(params["mlp"], h, cfg.act, ctx,
+                               policy=policy, norm_scale=mlp_scale,
+                               eps=cfg.norm_eps), 0.0
     if par.rs_outputs:
         m = shard(m, ("act_batch", "act_seq", "act_embed"), ctx)
     x = x + m
@@ -256,11 +289,12 @@ def block_decode(params, x_t, cfg: ModelConfig, kv_cache, pos, ctx,
                  int8: bool = False, policy=None):
     fuse = (policy is not None and policy.fuses()
             and cfg.norm == "rmsnorm")
-    # The qkv projection is NOT fused here: the fused path concatenates
-    # [wq|wk|wv] per call, and at decode (rows = B) that materializes a
-    # weight-sized tensor per token to save a token-sized round trip — a
-    # net traffic loss.  The activation-sized residual→norm fusion below
-    # has no such weight term and stays on.
+    # The qkv and ln2→[wi|wg] projections are NOT fused here: the fused
+    # paths concatenate [wq|wk|wv] / [wi|wg] per call, and at decode
+    # (rows = B) that materializes a weight-sized tensor per token to
+    # save a token-sized round trip — a net traffic loss.  The
+    # activation-sized residual→norm fusion below has no such weight
+    # term and stays on.
     h = common.apply_norm(x_t, params["ln1"], cfg.norm, cfg.norm_eps,
                           policy=policy)
     a, kv_cache = attn_decode(params["attn"], h, cfg, kv_cache, pos, ctx,

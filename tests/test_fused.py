@@ -18,6 +18,7 @@ import pytest
 from repro.core import (ExecutionPolicy, IsaMode, LoweringFallbackWarning,
                         REGISTRY, TARGET, UISA_UNIVERSAL10)
 from repro.kernels import ops, ref
+from repro.kernels.fused import FUSED_OPS
 
 KEY = jax.random.PRNGKey(11)
 ALL_MODES = ("abstract", "abstract+shuffle", "native", "library")
@@ -66,6 +67,77 @@ class TestNumerics:
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-4, atol=1e-4)
 
+    @pytest.mark.parametrize("causal", (True, False))
+    @pytest.mark.parametrize("mode", ALL_MODES)
+    def test_flash_attention_matmul_matches_unfused_pair(self, mode,
+                                                         causal):
+        """True GQA (un-repeated [B,Hkv,S,D] cache, folded by the kernel's
+        index maps) + ragged seq (padded kv must stay masked when the
+        causal mask is off) + ragged wo width: the fused flash→wo output
+        equals flash attention followed by the wo einsum."""
+        ks = jax.random.split(KEY, 4)
+        b, h, hkv, s, d, n = 2, 4, 2, 96, 32, 80
+        q = jax.random.normal(ks[0], (b, h, s, d), jnp.float32)
+        k = jax.random.normal(ks[1], (b, hkv, s, d), jnp.float32)
+        v = jax.random.normal(ks[2], (b, hkv, s, d), jnp.float32)
+        wo = jax.random.normal(ks[3], (h * d, n), jnp.float32)
+        o = ref.attention(q, jnp.repeat(k, h // hkv, axis=1),
+                          jnp.repeat(v, h // hkv, axis=1), causal=causal)
+        want = jnp.einsum("bsh,hn->bsn",
+                          o.transpose(0, 2, 1, 3).reshape(b, s, h * d), wo)
+        got = ops.fused_flash_attention_matmul(q, k, v, wo, causal=causal,
+                                               mode=mode)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("mode",
+                             ("abstract", "abstract+shuffle", "native"))
+    def test_flash_attention_noncausal_padded_kv_masked(self, mode):
+        """Regression (found by review): with causal=False and skv not a
+        block multiple, the zero-padded keys must not receive softmax
+        weight — the causal mask that normally hides the pad is off."""
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, 2, 96, 32), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 2, 96, 32), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 2, 96, 32), jnp.float32)
+        got = ops.flash_attention(q, k, v, causal=False, mode=mode)
+        want = ref.attention(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_flash_attention_matmul_bf16_cross_head_accumulation(self):
+        """The cross-head sum runs in an f32 VMEM scratch with ONE final
+        output-dtype cast — bf16 outputs must match the unfused bf16
+        pair without per-head rounding drift even with many heads."""
+        ks = jax.random.split(KEY, 4)
+        b, h, s, d, n = 1, 8, 64, 32, 64
+        q = jax.random.normal(ks[0], (b, h, s, d)).astype(jnp.bfloat16)
+        k = jax.random.normal(ks[1], (b, h, s, d)).astype(jnp.bfloat16)
+        v = jax.random.normal(ks[2], (b, h, s, d)).astype(jnp.bfloat16)
+        wo = jax.random.normal(ks[3], (h * d, n)).astype(jnp.bfloat16)
+        want = ops.fused_flash_attention_matmul(q, k, v, wo, causal=True,
+                                                mode="library")
+        got = ops.fused_flash_attention_matmul(q, k, v, wo, causal=True,
+                                               mode="native")
+        assert got.dtype == jnp.bfloat16
+        # bf16 carries ~8 mantissa bits: both routes round their inputs
+        # and outputs to bf16, so the bound is bf16-relative
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=3e-2, atol=3e-1)
+
+    @pytest.mark.parametrize("mode", ALL_MODES)
+    def test_rmsnorm_swiglu_matches_unfused_pair(self, mode):
+        x, w, _, _ = _inputs()
+        f = 96
+        w_cat = jax.random.normal(jax.random.fold_in(KEY, 2),
+                                  (x.shape[-1], 2 * f), jnp.float32)
+        y = ref.rmsnorm(x, w)
+        want = jax.nn.silu(y @ w_cat[:, f:]) * (y @ w_cat[:, :f])
+        got = ops.fused_rmsnorm_swiglu(x, w, w_cat, mode=mode)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
 
 # ---------------------------------------------------------------------------
 # The acceptance criterion: exactly one activation round trip saved
@@ -107,6 +179,51 @@ class TestStructuralCost:
         assert cost["hbm_bytes"] == \
             cost["hbm_bytes_unfused_pair"] - rows * d * 4
 
+    @pytest.mark.parametrize("mode",
+                             ("abstract", "abstract+shuffle", "native"))
+    def test_flash_attention_matmul_saves_one_activation_round_trip(
+            self, mode):
+        """The acceptance pin: hbm delta == exactly one [B,S,H,D] trip."""
+        shape = dict(b=2, h=8, sq=1024, skv=1024, d=64, n=512, causal=True)
+        cost = REGISTRY.structural_cost("flash_attention_matmul", mode,
+                                        **shape)
+        round_trip = 2 * 2 * 1024 * 8 * 64 * 4     # write + read-back
+        assert cost["hbm_bytes_saved"] == round_trip
+        assert cost["hbm_bytes"] == \
+            cost["hbm_bytes_unfused_pair"] - round_trip
+        att = REGISTRY.structural_cost(
+            "flash_attention", mode, b=2, h=8, sq=1024, skv=1024, d=64,
+            causal=True)
+        proj = REGISTRY.structural_cost(
+            "gemm", mode if mode != "abstract+shuffle" else "abstract",
+            m=2 * 1024, n=512, k=8 * 64)
+        assert cost["hbm_bytes_unfused_pair"] == \
+            att["hbm_bytes"] + proj["hbm_bytes"]
+
+    @pytest.mark.parametrize("mode",
+                             ("abstract", "abstract+shuffle", "native"))
+    def test_rmsnorm_swiglu_saves_exactly_one_round_trip(self, mode):
+        rows, d, f = 1024, 1024, 512
+        cost = REGISTRY.structural_cost("rmsnorm_swiglu", mode,
+                                        rows=rows, d=d, f=f)
+        norm = REGISTRY.structural_cost("rmsnorm", mode, rows=rows, d=d)
+        proj = REGISTRY.structural_cost(
+            "gemm", mode if mode != "abstract+shuffle" else "abstract",
+            m=rows, n=2 * f, k=d)
+        round_trip = 2 * rows * d * 4              # write + read-back
+        assert cost["hbm_bytes_saved"] == round_trip
+        assert cost["hbm_bytes"] == \
+            norm["hbm_bytes"] + proj["hbm_bytes"] - round_trip
+
+    def test_new_fused_library_rows_are_the_unfused_pairs(self):
+        for op, shape in (
+                ("flash_attention_matmul",
+                 dict(b=1, h=2, sq=256, skv=256, d=64, n=128, causal=True)),
+                ("rmsnorm_swiglu", dict(rows=256, d=256, f=256))):
+            cost = REGISTRY.structural_cost(op, "library", **shape)
+            assert cost["hbm_bytes_saved"] == 0
+            assert cost["hbm_bytes"] == cost["hbm_bytes_unfused_pair"]
+
     def test_shuffle_variant_structurally_cheapest(self):
         """The §VII.C ordering holds for the fused ops too: zero scratch
         for the shuffle moment tree, round-trips for the abstract one."""
@@ -127,15 +244,22 @@ class TestStructuralCost:
 class TestDispatch:
     def test_auto_picks_shuffle_on_target(self):
         pol = ExecutionPolicy(mode="auto", dialect=TARGET.name)
-        for op in ("rmsnorm_matmul", "add_rmsnorm"):
+        for op in FUSED_OPS:
             low = REGISTRY.select(op, pol, shape=ops.PROBE_SHAPES[op])
             assert low.mode is IsaMode.ABSTRACT_SHUFFLE, (op, low.mode)
 
     def test_auto_degrades_to_scratch_tree_without_shuffle(self):
         pol = ExecutionPolicy(mode="auto", dialect=UISA_UNIVERSAL10.name)
-        for op in ("rmsnorm_matmul", "add_rmsnorm"):
+        for op in FUSED_OPS:
             low = REGISTRY.select(op, pol, shape=ops.PROBE_SHAPES[op])
             assert low.mode is IsaMode.ABSTRACT, (op, low.mode)
+
+    def test_new_ops_declare_both_fallbacks(self):
+        for op in ("flash_attention_matmul", "rmsnorm_swiglu"):
+            fb = REGISTRY.fallback_for(op, IsaMode.ABSTRACT_SHUFFLE)
+            assert fb is not None and fb.to is IsaMode.ABSTRACT
+            fb = REGISTRY.fallback_for(op, IsaMode.NATIVE)
+            assert fb is not None and fb.to is IsaMode.LIBRARY
 
     def test_shuffle_request_falls_back_declared(self):
         """abstract+shuffle on a no-shuffle dialect: warned + recorded,
@@ -208,6 +332,8 @@ class TestModelRouting:
         params = ref_model.init_params(jax.random.PRNGKey(0))
         want, _ = ref_model.loss_fn(params, batch)
         for kw in (dict(isa_mode="auto"), dict(fuse_epilogues=True),
+                   # the flash→wo fused epilogue path (attn_seq)
+                   dict(fuse_epilogues=True, use_pallas_attn=True),
                    dict(isa_mode="abstract", fuse_epilogues=True)):
             model = _tiny_model(**kw)
             with warnings.catch_warnings():

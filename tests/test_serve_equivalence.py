@@ -130,6 +130,48 @@ class TestBatchedSequentialEquivalence:
         assert {reqs[2].slot, reqs[3].slot} == {reqs[0].slot, reqs[1].slot}
 
 
+class TestFusionEquivalence:
+    """ISSUE 4 satellite: PR 3's decode path was only ever tested with
+    fusion off.  The fused decode tick (add_rmsnorm residual→ln2 in
+    block_decode, rmsnorm_matmul final-norm→lm_head in _head) must emit
+    token-for-token what the unfused engine emits."""
+
+    def test_fused_decode_matches_unfused(self, model_and_params):
+        model, params, cfg = model_and_params
+        fused_model = build_model(cfg, ParallelConfig(
+            remat="none", fuse_epilogues=True))
+        assert fused_model.policy.fuses() and not model.policy.fuses()
+        prompts = _prompts(cfg, 4)
+        max_news = [4, 7, 5, 6]
+
+        def run(m):
+            eng = BatchedEngine(m, params, ServeConfig(
+                batch_slots=2, max_seq_len=CACHE_LEN, eos_id=-1))
+            return eng.run([Request(rid=i, prompt=p, max_new_tokens=mx)
+                            for i, (p, mx) in enumerate(zip(prompts,
+                                                            max_news))])
+
+        want = {r.rid: r.generated for r in run(model)}
+        got = run(fused_model)
+        assert len(got) == 4
+        for r in got:
+            assert r.generated == want[r.rid], r.rid
+
+    def test_fused_tick_stays_one_compiled_program(self, model_and_params):
+        """Fusion must not break the host-sync-free tick: still exactly
+        one trace across admissions and slot reuse."""
+        model, params, cfg = model_and_params
+        fused_model = build_model(cfg, ParallelConfig(
+            remat="none", fuse_epilogues=True))
+        eng = BatchedEngine(fused_model, params, ServeConfig(
+            batch_slots=2, max_seq_len=CACHE_LEN, eos_id=-1))
+        prompts = _prompts(cfg, 5)
+        eng.run([Request(rid=i, prompt=p, max_new_tokens=4 + i % 3)
+                 for i, p in enumerate(prompts)])
+        assert eng.tick_count > 4
+        assert eng.trace_count == 1
+
+
 class TestHostSyncFreeTick:
     def test_tick_compiles_exactly_once(self, model_and_params):
         """The fused tick must stay ONE compiled program across admissions,
