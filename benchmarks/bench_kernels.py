@@ -50,25 +50,34 @@ KEY = jax.random.PRNGKey(0)
 
 
 def _cases(quick: bool):
-    """(kernel, run, shape) table for both sizings.
+    """(kernel, case, run, shape) table for both sizings.
 
     The mode axis of the matrix is NOT listed here: it is enumerated from
     the lowering registry (each kernel's registered variants), so a newly
     registered variant shows up in the matrix without touching this file —
     and gemm's lack of a shuffle row falls out of its registration rather
-    than a hardcoded mode list."""
+    than a hardcoded mode list.  ``case`` labels the shape regime: "seq"
+    (train/prefill-shaped, the historical rows) or "decode" (rows = the
+    decode batch, sq = 1 against a cache — the shapes the ISSUE 5
+    layout planner made fusion-legal on the serve tick)."""
     ks = jax.random.split(KEY, 8)
     if quick:
         n_red, rows_rms, d_rms = 1 << 15, 64, 256
         n_hist, bins = 1 << 14, 256
         b, h, s, hd, blk = 1, 2, 256, 64, 128
         m = k = n = 256
+        b_dec, b_att, s_att = 8, 4, 256
         warmup, iters = 1, 3
     else:
         n_red, rows_rms, d_rms = 1 << 21, 1024, 1024
         n_hist, bins = 1 << 18, 256
         b, h, s, hd, blk = 1, 4, 1024, 64, 256
         m = k = n = 1024
+        # decode rows: full decode batch for the rowwise fused ops; the
+        # decode attention row runs a trimmed (batch, cache) — interpret
+        # mode pays per grid cell, and the structural columns (what the
+        # gate pins) are computed from the recorded shape either way
+        b_dec, b_att, s_att = 128, 16, 512
         warmup, iters = 2, 5
 
     n_proj = d_rms                       # norm -> square projection
@@ -91,44 +100,76 @@ def _cases(quick: bool):
     a_g = jax.random.normal(ks[7], (m, k), jnp.float32)
     b_g = jax.random.normal(ks[0], (k, n), jnp.float32)
 
+    # decode-shaped streams: rows = decode batch, one query against a
+    # skv-long cache with per-slot frontiers (the serve-tick shapes the
+    # persisted [wq|wk|wv]/[wi|wg] layouts made fusion-legal)
+    kd = jax.random.split(jax.random.fold_in(KEY, 2), 6)
+    x_dec = jax.random.normal(kd[0], (b_dec, d_rms), jnp.float32)
+    r_dec = jax.random.normal(kd[1], (b_dec, d_rms), jnp.float32)
+    q_dec = jax.random.normal(kd[2], (b_att, h, 1, hd), jnp.float32)
+    k_dec = jax.random.normal(kd[3], (b_att, h, s_att, hd), jnp.float32)
+    v_dec = jax.random.normal(kd[4], (b_att, h, s_att, hd), jnp.float32)
+    pos_dec = jax.random.randint(kd[5], (b_att,), 0, s_att, jnp.int32)
+
     cases = [
-        ("reduction",
+        ("reduction", "seq",
          lambda mode: ops.reduce_sum(x_red, mode=mode),
          dict(n=n_red)),
-        ("rmsnorm",
+        ("rmsnorm", "seq",
          lambda mode: ops.rmsnorm(x_rms, w_rms, mode=mode),
          dict(rows=rows_rms, d=d_rms)),
-        ("histogram",
+        ("histogram", "seq",
          lambda mode: ops.histogram(v_hist, bins, mode=mode),
          dict(n=n_hist, num_bins=bins)),
-        ("flash_attention",
+        ("flash_attention", "seq",
          lambda mode: ops.flash_attention(q, kk, vv, causal=True,
                                           mode=mode, block_q=blk,
                                           block_kv=blk),
          dict(b=b, h=h, sq=s, skv=s, d=hd, causal=True,
               block_q=blk, block_kv=blk)),
-        ("gemm",
+        ("gemm", "seq",
          lambda mode: ops.matmul(a_g, b_g, mode=mode),
          dict(m=m, n=n, k=k)),
         # the fused multi-op lowerings: HBM traffic is the treatment here
-        ("rmsnorm_matmul",
+        ("rmsnorm_matmul", "seq",
          lambda mode: ops.fused_rmsnorm_matmul(x_rms, w_rms, p_rms,
                                                mode=mode),
          dict(rows=rows_rms, d=d_rms, n=n_proj)),
-        ("add_rmsnorm",
+        ("add_rmsnorm", "seq",
          lambda mode: ops.fused_add_rmsnorm(x_rms, r_rms, w_rms,
                                             mode=mode),
          dict(rows=rows_rms, d=d_rms)),
-        ("rmsnorm_swiglu",
+        ("rmsnorm_swiglu", "seq",
          lambda mode: ops.fused_rmsnorm_swiglu(x_rms, w_rms, w_cat,
                                                mode=mode),
          dict(rows=rows_rms, d=d_rms, f=f_ff)),
-        ("flash_attention_matmul",
+        ("flash_attention_matmul", "seq",
          lambda mode: ops.fused_flash_attention_matmul(
              q, kk, vv, w_o, causal=True, mode=mode, block_q=blk,
              block_kv=blk),
          dict(b=b, h=h, sq=s, skv=s, d=hd, n=n_wo, causal=True,
               block_q=blk, block_kv=blk)),
+        # decode-shaped fused rows (ISSUE 5): the same registered ops at
+        # the serve tick's shapes — structural columns pin the per-token
+        # activation-round-trip saving at zero weight-traffic overhead
+        ("rmsnorm_matmul", "decode",
+         lambda mode: ops.fused_rmsnorm_matmul(x_dec, w_rms, p_rms,
+                                               mode=mode),
+         dict(rows=b_dec, d=d_rms, n=n_proj)),
+        ("add_rmsnorm", "decode",
+         lambda mode: ops.fused_add_rmsnorm(x_dec, r_dec, w_rms,
+                                            mode=mode),
+         dict(rows=b_dec, d=d_rms)),
+        ("rmsnorm_swiglu", "decode",
+         lambda mode: ops.fused_rmsnorm_swiglu(x_dec, w_rms, w_cat,
+                                               mode=mode),
+         dict(rows=b_dec, d=d_rms, f=f_ff)),
+        ("flash_attention_matmul", "decode",
+         lambda mode: ops.fused_flash_attention_matmul(
+             q_dec, k_dec, v_dec, w_o, mode=mode, block_kv=blk,
+             pos=pos_dec),
+         dict(b=b_att, h=h, sq=1, skv=s_att, d=hd, n=n_wo, causal=False,
+              block_kv=blk)),
     ]
     return cases, warmup, iters
 
@@ -136,13 +177,14 @@ def _cases(quick: bool):
 def run(quick: bool = False, out: str = "BENCH_kernels.json") -> dict:
     cases, warmup, iters = _cases(quick)
     rows = []
-    for kernel, fn, shape in cases:
+    for kernel, case, fn, shape in cases:
         for mode in REGISTRY.modes(kernel):
             timing = time_fn(lambda mode=mode, fn=fn: fn(mode),
                              warmup=warmup, iters=iters)
             cost = dict(REGISTRY.structural_cost(kernel, mode, **shape))
             rows.append({
                 "kernel": kernel,
+                "case": case,
                 "mode": mode,
                 "shape": shape,
                 "median_s": timing["median_s"],
@@ -157,7 +199,7 @@ def run(quick: bool = False, out: str = "BENCH_kernels.json") -> dict:
                 "hbm_bytes": cost.get("hbm_bytes", 0),
                 "structural": cost,
             })
-            print(f"[bench_kernels] {kernel:16s} {mode:17s} "
+            print(f"[bench_kernels] {kernel:16s} {case:6s} {mode:17s} "
                   f"{timing['median_s'] * 1e3:9.2f} ms   "
                   f"scratch={cost.get('scratch_bytes_total', 0)}")
 
@@ -179,9 +221,9 @@ def run(quick: bool = False, out: str = "BENCH_kernels.json") -> dict:
 
     print()
     print(fmt_table(
-        ["kernel", "mode", "median_ms", "scratch_bytes", "round_trips",
-         "shuffles"],
-        [[r["kernel"], r["mode"], f"{r['median_s'] * 1e3:.2f}",
+        ["kernel", "case", "mode", "median_ms", "scratch_bytes",
+         "round_trips", "shuffles"],
+        [[r["kernel"], r["case"], r["mode"], f"{r['median_s'] * 1e3:.2f}",
           r["scratch_bytes"], r["scratch_round_trips"],
           r["lane_shuffles"]] for r in rows]))
     print(f"\n[bench_kernels] wrote {out} "
@@ -209,13 +251,23 @@ def compare(old: dict, new: dict, threshold: float = 1.5) -> list:
     meta_match = all(
         old.get("meta", {}).get(k) == new["meta"].get(k)
         for k in ("backend", "quick", "interpret"))
-    new_rows = {(r["kernel"], r["mode"]): r for r in new["rows"]}
+    # rows are keyed by (kernel, mode, case) so the decode-shaped fused
+    # rows gate independently of the seq-shaped ones (pre-ISSUE-5
+    # baselines carry no case field and default to "seq")
+    new_rows = {(r["kernel"], r["mode"], r.get("case", "seq")): r
+                for r in new["rows"]}
+    new_cases = {(r["kernel"], r.get("case", "seq")) for r in new["rows"]}
     deltas = []
     for r in old["rows"]:
         kernel, mode = r["kernel"], r["mode"]
+        case = r.get("case", "seq")
         if mode not in new_matrix.get(kernel, []):
             failures.append(f"{kernel}[{mode}]: variant disappeared from "
                             f"the registry matrix")
+            continue
+        if (kernel, case) not in new_cases:
+            failures.append(f"{kernel} case {case!r}: shape regime "
+                            f"disappeared from the benchmark matrix")
             continue
         shape = r.get("shape")
         if shape:
@@ -226,23 +278,24 @@ def compare(old: dict, new: dict, threshold: float = 1.5) -> list:
                     failures.append(
                         f"{kernel}[{mode}] @ {shape}: modeled {col} "
                         f"regressed {r.get(col, 0)} -> {cost.get(key, 0)}")
-        nr = new_rows.get((kernel, mode))
+        nr = new_rows.get((kernel, mode, case))
         if nr is None:
             continue
         if meta_match and shape and nr.get("shape") == shape:
             ratio = nr["median_s"] / max(r["median_s"], 1e-12)
-            deltas.append([kernel, mode, f"{r['median_s'] * 1e3:.2f}",
+            deltas.append([kernel, case, mode,
+                           f"{r['median_s'] * 1e3:.2f}",
                            f"{nr['median_s'] * 1e3:.2f}", f"{ratio:.2f}x"])
             if ratio > threshold:
                 failures.append(
-                    f"{kernel}[{mode}]: median regressed "
+                    f"{kernel}[{mode}] ({case}): median regressed "
                     f"{r['median_s'] * 1e3:.2f} -> "
                     f"{nr['median_s'] * 1e3:.2f} ms "
                     f"({ratio:.2f}x > {threshold}x)")
     if deltas:
         print("\n[bench_kernels] timing deltas vs baseline:")
-        print(fmt_table(["kernel", "mode", "old_ms", "new_ms", "ratio"],
-                        deltas))
+        print(fmt_table(["kernel", "case", "mode", "old_ms", "new_ms",
+                         "ratio"], deltas))
     elif not meta_match:
         print("\n[bench_kernels] timing compare skipped (baseline meta "
               "differs: backend/sizing); structural gate still applied")

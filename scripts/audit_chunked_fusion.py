@@ -1,0 +1,118 @@
+"""Fusion audit of the non-Pallas ``chunked_attention`` branch (ROADMAP).
+
+``attn_seq`` keeps a pure-jnp chunked-attention path for dry-runs and
+SPMD compilation (models/attention.py); unlike the Pallas flash path its
+epilogue projection is a separate einsum, and the open ROADMAP question
+was how much of that XLA already fuses on its own.  This script lowers
+the branch, compiles it, and uses the trip-count-aware HLO parser
+(roofline/hlo_parser.py) to count where every ``dot`` landed:
+
+- **dots inside fusion computations** — contraction already fused with
+  its neighbors (prologue/epilogue elementwise work rides along);
+- **surface dots** — contractions XLA left standalone: each one's
+  operands/results are fusion-boundary HBM traffic, the quantity the
+  Pallas fused epilogue eliminates by construction.
+
+  PYTHONPATH=src python scripts/audit_chunked_fusion.py
+  PYTHONPATH=src python scripts/audit_chunked_fusion.py --seq 512 --json
+
+The result is recorded in EXPERIMENTS.md §Chunked-attention fusion audit.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.models import transformer  # noqa: E402
+from repro.models.config import ModelConfig, ParallelConfig  # noqa: E402
+from repro.roofline.hlo_parser import HloModule  # noqa: E402
+
+
+def audit_hlo_fusions(text: str) -> dict:
+    """Count dot placement across a compiled module's computations.
+
+    A ``dot`` inside a computation reached via ``calls=`` from a
+    ``fusion`` op is GSPMD/XLA-fused; a ``dot`` appearing directly in any
+    non-fusion computation is a surface contraction whose boundary
+    tensors hit HBM."""
+    mod = HloModule(text, total_devices=1)
+    fusion_comps = set()
+    n_fusion_ops = 0
+    for comp in mod.comps.values():
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                n_fusion_ops += 1
+                for callee, _mult in mod._callees(op):
+                    fusion_comps.add(callee)
+    fusion_comps &= mod.comps.keys()
+    dot_counts = {name: sum(1 for op in comp.ops if op.opcode == "dot")
+                  for name, comp in mod.comps.items()}
+    dots_fused = sum(dot_counts[name] for name in fusion_comps)
+    dots_surface = sum(n for name, n in dot_counts.items()
+                      if name not in fusion_comps)
+    fusions_with_dot = sum(1 for name in fusion_comps if dot_counts[name])
+    return {
+        "fusion_ops": n_fusion_ops,
+        "fusions_with_dot": fusions_with_dot,
+        "dots_fused": dots_fused,
+        "dots_surface": dots_surface,
+        "dots_total": dots_fused + dots_surface,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--heads", type=int, default=4)
+    ap.add_argument("--kv-heads", type=int, default=2)
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(name="audit", family="dense", num_layers=1,
+                      d_model=args.d_model, num_heads=args.heads,
+                      num_kv_heads=args.kv_heads, d_ff=2 * args.d_model,
+                      vocab_size=128, dtype="float32")
+    # the audited branch: use_pallas_attn=False -> chunked_attention +
+    # the separate wo einsum epilogue
+    par = ParallelConfig(remat="none", use_pallas_attn=False)
+    params, _ = transformer.init_attn(jax.random.PRNGKey(0), cfg,
+                                      jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (1, args.seq, args.d_model), jnp.float32)
+    positions = jnp.broadcast_to(jnp.arange(args.seq), (1, args.seq))
+
+    def branch(params, x):
+        return transformer.attn_seq(params, x, cfg, par, positions,
+                                    ctx=None)
+
+    compiled = jax.jit(branch).lower(params, x).compile()
+    text = compiled.as_text()
+    report = audit_hlo_fusions(text)
+    report["backend"] = jax.default_backend()
+    report["seq"] = args.seq
+    report["unfused_fraction"] = (
+        report["dots_surface"] / report["dots_total"]
+        if report["dots_total"] else 0.0)
+    if args.json:
+        print(json.dumps(report, indent=1))
+    else:
+        print(f"[audit] backend={report['backend']} seq={args.seq}: "
+              f"{report['dots_total']} dots, "
+              f"{report['dots_fused']} inside "
+              f"{report['fusions_with_dot']}/{report['fusion_ops']} "
+              f"fusions, {report['dots_surface']} surface "
+              f"({report['unfused_fraction']:.0%} unfused)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

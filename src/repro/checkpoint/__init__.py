@@ -1,4 +1,7 @@
-"""Checkpointing: atomic, async, retention-managed, reshard-on-restore."""
-from repro.checkpoint.manager import CheckpointManager
+"""Checkpointing: atomic, async, retention-managed, reshard-on-restore,
+parameter-layout migrating (legacy per-matrix <-> fusion-legal concat)."""
+from repro.checkpoint.manager import (CheckpointManager, LAYOUT_GROUPS,
+                                      layout_of, migrate_layout)
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "LAYOUT_GROUPS", "layout_of",
+           "migrate_layout"]

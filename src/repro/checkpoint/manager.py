@@ -15,7 +15,17 @@ Production constraints honored (scaled to this container):
   mesh than the one that saved — restart on 256 chips from a 512-chip
   checkpoint (or vice versa) is a first-class path, not a special case.
 - **Self-describing**: a JSON manifest stores the tree structure, leaf
-  dtypes/shapes, and the save-time mesh for audit.
+  dtypes/shapes, the save-time mesh, and the parameter layout for audit.
+- **Layout migration** (ISSUE 5): the fusion-legal parameter layout
+  stores ``[wq|wk|wv]`` / ``[wi|wg]`` as single concatenated leaves
+  (models/config.py::ParamLayout) while legacy checkpoints carry the
+  per-matrix leaves.  :func:`migrate_layout` reconciles a flat leaf dict
+  to a template's layout in *both* directions — join by last-axis
+  concatenation, split at the template parts' widths — so a legacy
+  checkpoint restores into a concat-layout model and a concat-layout
+  serving process saves back out in legacy form (``save(...,
+  migrate_to=)``); the round trip is bitwise on weights (numpy
+  concatenate/slice moves bytes, never values).
 
 Storage is one ``.npy`` per leaf under the step directory (the analogue
 of a tensorstore shard per parameter); leaf names are slash-joined tree
@@ -28,10 +38,75 @@ import os
 import shutil
 import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Mapping, Optional
 
 import jax
 import numpy as np
+
+#: concatenated-layout leaf basename -> its legacy per-matrix parts, in
+#: concatenation order (matches models/transformer.init_attn and
+#: models/mlp.init_mlp)
+LAYOUT_GROUPS = {"wqkv": ("wq", "wk", "wv"), "wig": ("wi", "wg")}
+_PART_TO_CAT = {part: (cat, parts)
+                for cat, parts in LAYOUT_GROUPS.items() for part in parts}
+
+
+def layout_of(flat_keys) -> str:
+    """'concat' when any leaf is a persisted fused-layout tensor."""
+    for key in flat_keys:
+        if key.rpartition("/")[2] in LAYOUT_GROUPS:
+            return "concat"
+    return "legacy"
+
+
+def migrate_layout(flat: Dict[str, np.ndarray],
+                   template_shapes: Mapping[str, tuple]
+                   ) -> Dict[str, np.ndarray]:
+    """Reconcile checkpoint leaves to the template's parameter layout.
+
+    ``template_shapes`` maps the target tree's flat keys to leaf shapes.
+    A template key missing from ``flat`` is synthesized from the other
+    layout: joined (``wq``/``wk``/``wv`` -> ``wqkv``, ``wi``/``wg`` ->
+    ``wig``) by last-axis concatenation, or split from the concatenated
+    leaf at the widths the template's part shapes dictate.  Leaves the
+    template does not name are dropped once consumed; everything else
+    passes through untouched.  Both directions are bitwise on weights.
+    """
+    out = dict(flat)
+    for key, shape in template_shapes.items():
+        if key in out:
+            continue
+        prefix, _, base = key.rpartition("/")
+        pfx = prefix + "/" if prefix else ""
+        if base in LAYOUT_GROUPS:
+            part_keys = [pfx + p for p in LAYOUT_GROUPS[base]]
+            if all(p in flat for p in part_keys):
+                joined = np.concatenate([flat[p] for p in part_keys],
+                                        axis=-1)
+                if joined.shape != tuple(shape):
+                    raise ValueError(
+                        f"{key}: joined parts have shape {joined.shape} "
+                        f"!= template {tuple(shape)} (checkpoint and "
+                        f"template disagree on the group's widths)")
+                out[key] = joined
+                for p in part_keys:
+                    out.pop(p, None)
+        elif base in _PART_TO_CAT:
+            cat, parts = _PART_TO_CAT[base]
+            cat_key = pfx + cat
+            if cat_key in flat:
+                widths = [template_shapes[pfx + p][-1] for p in parts]
+                if sum(widths) != flat[cat_key].shape[-1]:
+                    raise ValueError(
+                        f"{cat_key}: concatenated width "
+                        f"{flat[cat_key].shape[-1]} != template parts "
+                        f"{widths}")
+                off = 0
+                for p, w in zip(parts, widths):
+                    out[pfx + p] = flat[cat_key][..., off:off + w]
+                    off += w
+                out.pop(cat_key, None)
+    return out
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -95,15 +170,26 @@ class CheckpointManager:
     # ---- save ----
 
     def save(self, step: int, tree, *, extra: Optional[dict] = None,
-             blocking: bool = True):
-        """Snapshot ``tree`` (sync) and write it (async unless blocking)."""
+             blocking: bool = True, migrate_to=None):
+        """Snapshot ``tree`` (sync) and write it (async unless blocking).
+
+        ``migrate_to``: optional template pytree (real arrays or
+        ShapeDtypeStructs, e.g. from ``jax.eval_shape``) whose parameter
+        *layout* the checkpoint should be written in — how a
+        concat-layout process emits legacy per-matrix checkpoints (and
+        vice versa) without touching its live params."""
         self.wait()  # one in-flight save at a time
         host_flat = {k: np.asarray(jax.device_get(v))
                      for k, v in _flatten(tree).items()}
+        if migrate_to is not None:
+            shapes = {k: tuple(v.shape)
+                      for k, v in _flatten(migrate_to).items()}
+            host_flat = migrate_layout(host_flat, shapes)
         manifest = {
             "step": step,
             "time": time.time(),
             "extra": extra or {},
+            "param_layout": layout_of(host_flat),
             "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                        for k, v in host_flat.items()},
         }
@@ -172,12 +258,31 @@ class CheckpointManager:
         ``shardings``: optional pytree of (Named)Shardings matching
         ``template`` — each leaf is device_put against it, which reshards
         onto whatever mesh the caller is running now (elastic restart).
+        The checkpoint's parameter layout need not match the template's:
+        leaves are migrated (:func:`migrate_layout`) toward the template,
+        so legacy per-matrix checkpoints load into concat-layout models
+        and back — bidirectional, bitwise on weights.
         """
         d = self._step_dir(step)
+        tmpl_flat = _flatten(template)
+        stored = set(self.manifest(step)["leaves"])
+        # load the template's leaves plus only the other-layout
+        # counterparts migration needs — a partial-template restore
+        # (params-only from a train checkpoint) never reads opt state
+        needed = set(tmpl_flat) & stored
+        for key in set(tmpl_flat) - stored:
+            prefix, _, base = key.rpartition("/")
+            pfx = prefix + "/" if prefix else ""
+            if base in LAYOUT_GROUPS:
+                needed |= {pfx + p for p in LAYOUT_GROUPS[base]} & stored
+            elif base in _PART_TO_CAT:
+                needed |= {pfx + _PART_TO_CAT[base][0]} & stored
         flat_np = {}
-        for key in _flatten(template):
+        for key in needed:
             fname = key.replace("/", "__") + ".npy"
             flat_np[key] = np.load(os.path.join(d, fname))
+        flat_np = migrate_layout(
+            flat_np, {k: tuple(v.shape) for k, v in tmpl_flat.items()})
         tree = _unflatten(template, flat_np)
 
         def put(leaf, tmpl, sh):

@@ -35,6 +35,7 @@ import collections
 import contextlib
 import contextvars
 import dataclasses
+import inspect
 import warnings
 from typing import Callable, Dict, Mapping, Optional, Tuple
 
@@ -165,8 +166,15 @@ class Lowering:
     #: target's feature set); portable lowerings carry None
     target: Optional[str] = None
 
-    def structural_cost(self, **shape) -> Mapping:
-        return self.cost(**shape) if self.cost is not None else {}
+    def structural_cost(self, plan_dialect: Optional[str] = None,
+                        **shape) -> Mapping:
+        """Modeled cost at ``shape``; ``plan_dialect`` names the tuning-
+        table slice the model consults (None = ambient, then TARGET)."""
+        if self.cost is None:
+            return {}
+        if plan_dialect is None:
+            return self.cost(**shape)
+        return self.cost(plan_dialect=plan_dialect, **shape)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -238,6 +246,20 @@ class LoweringRegistry:
             target = TARGET.name
         validate_contract(contract,
                           TARGET if target is None else get_dialect(target))
+        # the dispatch layer injects plan_dialect= into every impl call
+        # (kernels/ops.py::_dispatch) — enforce that signature contract
+        # here, where the variant is declared, not at first dispatch
+        try:
+            params = inspect.signature(impl).parameters
+        except (TypeError, ValueError):   # C callables etc.: trust them
+            params = None
+        if params is not None and "plan_dialect" not in params and not any(
+                p.kind is inspect.Parameter.VAR_KEYWORD
+                for p in params.values()):
+            raise ContractViolation(
+                f"{op} [{mode.value}]: impl must accept a plan_dialect "
+                f"keyword (the dispatch layer passes the policy's "
+                f"dialect as a static staging-plan argument)")
         variants = self._variants.setdefault(op, {})
         if mode in variants and not override:
             raise ValueError(f"{op} [{mode.value}] already registered")
@@ -328,17 +350,19 @@ class LoweringRegistry:
                 f"{op} [{mode.value}] is not a legal lowering for dialect "
                 f"{dialect.name} and declares no fallback")
         # auto: cheapest legal non-library variant by structural cost,
-        # ranked under the policy itself so dialect-aware cost terms
-        # (tuned-table lookups) read the dialect being selected for
+        # ranked with the policy's dialect bound *explicitly* so the
+        # dialect-aware cost terms (tuned-table lookups) read the dialect
+        # being selected for — the same binding the dispatch layer then
+        # threads into the kernel as its static plan_dialect argument
         candidates = [low for m, low in variants.items()
                       if m is not IsaMode.LIBRARY
                       and self.legal(op, m, dialect)]
         if candidates:
             shape = shape or {}
-            with use_policy(policy):
-                return min(candidates,
-                           key=lambda lo: cost_key(
-                               lo.structural_cost(**shape), lo.mode))
+            return min(candidates,
+                       key=lambda lo: cost_key(
+                           lo.structural_cost(plan_dialect=dialect.name,
+                                              **shape), lo.mode))
         library = variants.get(IsaMode.LIBRARY)
         if library is not None:
             self._record(op, AUTO, IsaMode.LIBRARY.value,

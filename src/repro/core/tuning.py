@@ -395,24 +395,28 @@ TUNING_TABLE = TuningTable.load()
 # ---------------------------------------------------------------------------
 
 
-def active_dialect(dialect: Optional[Dialect] = None) -> Dialect:
+def active_dialect(dialect=None) -> Dialect:
     """The dialect whose table slice a lookup should consult.
 
-    Explicit wins; otherwise the ambient :func:`use_policy` context's
-    dialect (how ``auto`` policies on a foreign dialect run *its* tuned
-    plans instead of the target's heuristics — kernels dispatch under
-    ``use_policy``, see ``repro.kernels.ops``), else the framework TARGET.
-    Read at trace time: like the policy itself, a jitted kernel keeps the
-    plan it was traced with."""
+    Explicit (a :class:`Dialect` or its name — the kernels thread their
+    static ``plan_dialect`` string here) wins; otherwise the ambient
+    :func:`use_policy` context's dialect (how ``auto`` policies on a
+    foreign dialect run *its* tuned plans instead of the target's
+    heuristics), else the framework TARGET.  The explicit form is the
+    load-bearing one since ISSUE 5: the kernel wrappers carry the dialect
+    as a *static jit argument*, so a process mixing dialects at identical
+    shapes retraces per dialect instead of reusing the first-traced
+    staging plan — the ambient read survives only as the compatibility
+    fallback for direct kernel-module calls."""
     if dialect is not None:
-        return dialect
+        return get_dialect(dialect) if isinstance(dialect, str) else dialect
     from repro.core.registry import current_policy
     policy = current_policy()
     return policy.resolved_dialect() if policy is not None else TARGET
 
 
 def tuned_entry(op: str, mode: str, bucket: str,
-                dialect: Optional[Dialect] = None,
+                dialect=None,
                 table: Optional[TuningTable] = None) -> Optional[Dict]:
     """The raw winning entry for one (op, mode, dialect, bucket), if any."""
     table = TUNING_TABLE if table is None else table
@@ -420,7 +424,7 @@ def tuned_entry(op: str, mode: str, bucket: str,
 
 
 def tuned_plan(op: str, total_rows: int, row_bytes: int, *, mode: str,
-               dialect: Optional[Dialect] = None,
+               dialect=None,
                table: Optional[TuningTable] = None, **plan_kw):
     """``plan_row_pipeline`` with the table's winner for this bucket.
 
@@ -435,7 +439,7 @@ def tuned_plan(op: str, total_rows: int, row_bytes: int, *, mode: str,
 
 
 def tuned_block(op: str, mode: str, m: int, n: int, k: int,
-                dialect: Optional[Dialect] = None,
+                dialect=None,
                 table: Optional[TuningTable] = None
                 ) -> Optional[Tuple[int, int, int]]:
     """The table's ``(bm, bn, bk)`` for a GEMM-shaped op, if recorded."""
@@ -447,7 +451,7 @@ def tuned_block(op: str, mode: str, m: int, n: int, k: int,
 
 
 def tuned_attention_blocks(mode: str, sq: int, skv: int, d: int,
-                           dialect: Optional[Dialect] = None,
+                           dialect=None,
                            table: Optional[TuningTable] = None
                            ) -> Optional[Tuple[int, int]]:
     """The table's ``(block_q, block_kv)`` for the flash kernel, if any."""
@@ -528,14 +532,21 @@ CANONICAL_SHAPES: Dict[str, List[Dict[str, int]]] = {
     "rmsnorm": [dict(rows=1024, d=1024), dict(rows=64, d=256)],
     "histogram": [dict(n=1 << 18, num_bins=256),
                   dict(n=1 << 14, num_bins=256)],
-    "add_rmsnorm": [dict(rows=1024, d=1024), dict(rows=64, d=256)],
-    "gemm": [dict(m=1024, n=1024, k=1024), dict(m=256, n=256, k=256)],
+    # the third row of the fused/gemm spaces is decode-shaped (ISSUE 5):
+    # rows = the decode batch (decode_32k's 128 slots), sq = 1 against a
+    # long cache — the shapes the now decode-legal fusions run per tick
+    "add_rmsnorm": [dict(rows=1024, d=1024), dict(rows=64, d=256),
+                    dict(rows=128, d=1024)],
+    "gemm": [dict(m=1024, n=1024, k=1024), dict(m=256, n=256, k=256),
+             dict(m=128, n=1024, k=1024)],
     "flash_attention": [dict(sq=1024, skv=1024, d=64),
                         dict(sq=256, skv=256, d=64)],
     "rmsnorm_swiglu": [dict(rows=1024, d=1024, f=1024),
-                       dict(rows=64, d=256, f=256)],
+                       dict(rows=64, d=256, f=256),
+                       dict(rows=128, d=1024, f=1024)],
     "flash_attention_matmul": [dict(sq=1024, skv=1024, d=64, n=256),
-                               dict(sq=256, skv=256, d=64, n=128)],
+                               dict(sq=256, skv=256, d=64, n=128),
+                               dict(sq=1, skv=1024, d=64, n=256)],
 }
 
 

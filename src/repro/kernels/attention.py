@@ -49,12 +49,15 @@ register_op_space("flash_attention", "attention")
 
 
 def resolve_blocks(mode: str, sq: int, skv: int, d: int,
-                   block_q=None, block_kv=None):
-    """Caller-pinned blocks win; otherwise the autotuner table, then the
+                   block_q=None, block_kv=None,
+                   plan_dialect: str | None = None):
+    """Caller-pinned blocks win; otherwise the autotuner table (the
+    ``plan_dialect`` slice; None = ambient policy's dialect), then the
     static defaults.  Shared by the kernel and ``structural_cost`` so the
     modeled block accounting matches the executed tiling."""
     if block_q is None or block_kv is None:
-        tuned = tuned_attention_blocks(mode, sq, skv, d)
+        tuned = tuned_attention_blocks(mode, sq, skv, d,
+                                       dialect=plan_dialect)
         tq, tkv = tuned if tuned else (DEFAULT_BLOCK_Q, DEFAULT_BLOCK_KV)
         block_q = tq if block_q is None else block_q
         block_kv = tkv if block_kv is None else block_kv
@@ -111,7 +114,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
                   red_ref, *, scale: float, causal: bool, kv_offset: int,
                   block_q: int, block_kv: int, n_kv: int, mode: str,
                   skip: bool, kv_len: int | None = None, q_axis: int = 2,
-                  kv_axis: int = 3, epilogue=None):
+                  kv_axis: int = 3, epilogue=None, pos_ref=None):
     """One online-softmax block program.
 
     ``kv_len`` is the true (unpadded) kv length: when the sequence was
@@ -123,7 +126,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
     heads are sequential).  ``epilogue`` is the hook the fused lowerings
     plug into: called with the finalized ``acc / l`` block *in VMEM*
     instead of the plain ``o_ref`` store — the attention output then
-    never exists in HBM (kernels/fused.py).
+    never exists in HBM (kernels/fused.py).  ``pos_ref`` is the
+    decode-shaped mask source: a per-sequence (1, 1) int32 block holding
+    the number of valid cache entries minus one — keys at columns
+    ``> pos`` are masked, replacing the static causal triangle with the
+    traced per-slot cache frontier (the serve tick's batch mixes
+    positions, so the mask cannot be a static kv_offset).
     """
     qi, ki = pl.program_id(q_axis), pl.program_id(kv_axis)
 
@@ -140,7 +148,11 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale  # (bq, bkv)
-        if causal:
+        if pos_ref is not None:
+            cols = ki * block_kv + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 1)
+            s = jnp.where(cols <= pos_ref[0, 0], s, NEG_INF)
+        elif causal:
             rows = qi * block_q + jax.lax.broadcasted_iota(
                 jnp.int32, s.shape, 0) + kv_offset
             cols = ki * block_kv + jax.lax.broadcasted_iota(
@@ -186,13 +198,18 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "causal", "mode", "interpret", "block_q", "block_kv", "kv_offset"))
+    "causal", "mode", "interpret", "block_q", "block_kv", "kv_offset",
+    "plan_dialect"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, kv_offset: int | None = None,
                     mode: str = "native", interpret: bool = True,
                     block_q: int | None = None,
-                    block_kv: int | None = None) -> jax.Array:
-    """q: [B,H,Sq,D]; k/v: [B,Hkv,Skv,D] (GQA via index-map head folding)."""
+                    block_kv: int | None = None,
+                    plan_dialect: str | None = None) -> jax.Array:
+    """q: [B,H,Sq,D]; k/v: [B,Hkv,Skv,D] (GQA via index-map head folding).
+
+    ``plan_dialect`` (static) pins which dialect's tuned block table the
+    trace binds; None degrades to the ambient policy's dialect."""
     b, h, sq, d = q.shape
     _, hkv, skv, _ = k.shape
     assert h % hkv == 0, (h, hkv)
@@ -201,7 +218,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         kv_offset = skv - sq
     scale = 1.0 / (d ** 0.5)
 
-    block_q, block_kv = resolve_blocks(mode, sq, skv, d, block_q, block_kv)
+    block_q, block_kv = resolve_blocks(mode, sq, skv, d, block_q, block_kv,
+                                       plan_dialect)
     block_q = min(block_q, align_up(sq, 128))
     block_kv = min(block_kv, align_up(skv, 128))
     if mode != "native":
@@ -263,7 +281,8 @@ def structural_cost(b: int, h: int, sq: int, skv: int, d: int,
                     causal: bool, mode: str,
                     block_q: int | None = None,
                     block_kv: int | None = None,
-                    dtype=jnp.float32) -> dict:
+                    dtype=jnp.float32,
+                    plan_dialect: str | None = None) -> dict:
     """Visited-block accounting + the §VII.C scratch-traffic delta.
 
     Grid-level predication (native block-skip) controls how many blocks
@@ -278,7 +297,8 @@ def structural_cost(b: int, h: int, sq: int, skv: int, d: int,
     across modes keeps the §VII.C scratch ordering the auto-selection
     tiebreak.  The o write term is what the fused ``flash_attention →
     matmul`` lowering eliminates (kernels/fused.py)."""
-    block_q, block_kv = resolve_blocks(mode, sq, skv, d, block_q, block_kv)
+    block_q, block_kv = resolve_blocks(mode, sq, skv, d, block_q, block_kv,
+                                       plan_dialect)
     nq = -(-sq // block_q)
     nk = -(-skv // block_kv)
     total = nq * nk
@@ -320,9 +340,11 @@ def structural_cost(b: int, h: int, sq: int, skv: int, d: int,
 
 def _library_attention(q, k, v, *, causal: bool = True,
                        kv_offset=None, interpret=None,
-                       block_q: int = 256, block_kv: int = 256):
+                       block_q: int = 256, block_kv: int = 256,
+                       plan_dialect: str | None = None):
     """XLA-native reference (the cuBLAS-analogue row of Table V)."""
-    del kv_offset, interpret, block_q, block_kv   # library: XLA decides
+    # library: XLA decides every staging parameter
+    del kv_offset, interpret, block_q, block_kv, plan_dialect
     return _ref.attention(q, k, v, causal=causal)
 
 

@@ -177,10 +177,12 @@ def _rmsnorm_matmul_kernel(x_ref, w_ref, p_ref, o_ref, scratch_ref, *,
         preferred_element_type=jnp.float32).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "eps", "interpret"))
+@functools.partial(jax.jit, static_argnames=("mode", "eps", "interpret",
+                                             "plan_dialect"))
 def rmsnorm_matmul(x: jax.Array, weight: jax.Array, w_proj: jax.Array, *,
                    eps: float = 1e-6, mode: str = "native",
-                   interpret: bool = True) -> jax.Array:
+                   interpret: bool = True,
+                   plan_dialect: str | None = None) -> jax.Array:
     """``rmsnorm(x, weight) @ w_proj`` in one kernel.
 
     x: [..., D]; weight: [D]; w_proj: [D, N] -> [..., N] (x.dtype, f32
@@ -210,7 +212,8 @@ def rmsnorm_matmul(x: jax.Array, weight: jax.Array, w_proj: jax.Array, *,
             w2d = jnp.pad(w2d, ((0, 0), (0, pad_d)))
             p2d = jnp.pad(p2d, ((0, pad_d), (0, 0)))
 
-    bm, bn, _ = _gemm.block_shape_for(mode, rows, n, d, x.dtype)
+    bm, bn, _ = _gemm.block_shape_for(mode, rows, n, d, x.dtype,
+                                      plan_dialect)
     bm = min(bm, align_up(rows, 128))
     bn = min(bn, align_up(n, 128))
     pad_m = (-rows) % bm
@@ -250,7 +253,8 @@ def rmsnorm_matmul(x: jax.Array, weight: jax.Array, w_proj: jax.Array, *,
 
 
 def structural_cost_rmsnorm_matmul(rows: int, d: int, n: int, mode: str,
-                                   dtype=jnp.float32) -> dict:
+                                   dtype=jnp.float32,
+                                   plan_dialect: str | None = None) -> dict:
     """The unfused pair's traffic minus exactly one activation round trip.
 
     Composes the registered ``gemm`` and ``rmsnorm`` cost models (same
@@ -260,8 +264,10 @@ def structural_cost_rmsnorm_matmul(rows: int, d: int, n: int, mode: str,
     unfused pair itself: full sum, nothing saved.
     """
     itemsize = jnp.dtype(dtype).itemsize
-    g = _gemm.structural_cost(m=rows, n=n, k=d, mode=mode, dtype=dtype)
-    r = _rmsnorm.structural_cost(rows=rows, d=d, mode=mode, dtype=dtype)
+    g = _gemm.structural_cost(m=rows, n=n, k=d, mode=mode, dtype=dtype,
+                              plan_dialect=plan_dialect)
+    r = _rmsnorm.structural_cost(rows=rows, d=d, mode=mode, dtype=dtype,
+                                 plan_dialect=plan_dialect)
     unfused = g["hbm_bytes"] + r["hbm_bytes"]
     saved = 0 if mode == "library" else 2 * rows * d * itemsize
     if mode == "library":
@@ -270,7 +276,8 @@ def structural_cost_rmsnorm_matmul(rows: int, d: int, n: int, mode: str,
         # the kernel's own problem-size clamps, so block/steps/scratch
         # report the executed tiling (re-read counts are unaffected: a
         # clamp only fires when the tile already covers the dimension)
-        bm, bn, _ = _gemm.block_shape_for(mode, rows, n, d, dtype)
+        bm, bn, _ = _gemm.block_shape_for(mode, rows, n, d, dtype,
+                                          plan_dialect)
         bm = min(bm, align_up(rows, 128))
         bn = min(bn, align_up(n, 128))
     steps = -(-rows // bm) * -(-n // bn)
@@ -313,10 +320,11 @@ def _add_rmsnorm_kernel(x_ref, r_ref, w_ref, o_ref, s_ref, scratch_ref, *,
         d_true=d_true).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "eps", "interpret"))
+@functools.partial(jax.jit, static_argnames=("mode", "eps", "interpret",
+                                             "plan_dialect"))
 def add_rmsnorm(x: jax.Array, residual: jax.Array, weight: jax.Array, *,
                 eps: float = 1e-6, mode: str = "native",
-                interpret: bool = True):
+                interpret: bool = True, plan_dialect: str | None = None):
     """``(rmsnorm(x + residual, weight), x + residual)`` in one kernel.
 
     Returns the norm *and* the summed residual stream (both [..., D],
@@ -344,7 +352,8 @@ def add_rmsnorm(x: jax.Array, residual: jax.Array, weight: jax.Array, *,
 
     itemsize = jnp.dtype(x.dtype).itemsize
     plan = tuned_plan("add_rmsnorm", rows, 2 * d_padded * itemsize,
-                      mode=mode, max_block_rows=_MAX_BLOCK_ROWS,
+                      mode=mode, dialect=plan_dialect,
+                      max_block_rows=_MAX_BLOCK_ROWS,
                       semantics=("parallel",))
     block = plan.block_rows
     pad = plan.padded_rows - rows
@@ -382,7 +391,8 @@ def add_rmsnorm(x: jax.Array, residual: jax.Array, weight: jax.Array, *,
 
 
 def structural_cost_add_rmsnorm(rows: int, d: int, mode: str,
-                                dtype=jnp.float32) -> dict:
+                                dtype=jnp.float32,
+                                plan_dialect: str | None = None) -> dict:
     """The read-back leg of the staging round trip, eliminated.
 
     Unfused pair = elementwise add (read x, read residual, write sum) +
@@ -394,12 +404,14 @@ def structural_cost_add_rmsnorm(rows: int, d: int, mode: str,
     vanishes from HBM entirely).
     """
     itemsize = jnp.dtype(dtype).itemsize
-    r = _rmsnorm.structural_cost(rows=rows, d=d, mode=mode, dtype=dtype)
+    r = _rmsnorm.structural_cost(rows=rows, d=d, mode=mode, dtype=dtype,
+                                 plan_dialect=plan_dialect)
     unfused = 3 * rows * d * itemsize + r["hbm_bytes"]
     saved = 0 if mode == "library" else rows * d * itemsize
     d_padded = d if mode == "native" else d + ((-d) % LANES)
     plan = tuned_plan("add_rmsnorm", rows, 2 * d_padded * itemsize,
                       mode=mode if mode != "library" else "native",
+                      dialect=plan_dialect,
                       max_block_rows=_MAX_BLOCK_ROWS,
                       semantics=("parallel",))
     blocks = plan.grid[0]
@@ -433,18 +445,22 @@ def structural_cost_add_rmsnorm(rows: int, d: int, mode: str,
 
 
 def resolve_attention_matmul_blocks(mode: str, sq: int, skv: int, d: int,
-                                    n: int, block_q=None, block_kv=None):
+                                    n: int, block_q=None, block_kv=None,
+                                    plan_dialect: str | None = None):
     """Caller-pinned blocks win; then this op's own tuned entry (its
     working set includes the wo slice and the shared output block, so it
     tunes separately from bare flash); then the flash resolution.  Shared
-    by the kernel and ``structural_cost`` — modeled == executed."""
+    by the kernel and ``structural_cost`` — modeled == executed.
+    ``plan_dialect`` names the table slice consulted."""
     if block_q is None or block_kv is None:
         entry = tuned_entry("flash_attention_matmul", mode,
-                            attention_matmul_bucket(sq, skv, d, n))
+                            attention_matmul_bucket(sq, skv, d, n),
+                            dialect=plan_dialect)
         if entry and "block_q" in entry and "block_kv" in entry:
             tq, tkv = int(entry["block_q"]), int(entry["block_kv"])
         else:
-            tq, tkv = _attention.resolve_blocks(mode, sq, skv, d)
+            tq, tkv = _attention.resolve_blocks(
+                mode, sq, skv, d, plan_dialect=plan_dialect)
         block_q = tq if block_q is None else block_q
         block_kv = tkv if block_kv is None else block_kv
     block_q = min(block_q, align_up(sq, 128))
@@ -455,11 +471,17 @@ def resolve_attention_matmul_blocks(mode: str, sq: int, skv: int, d: int,
     return block_q, block_kv
 
 
-def _flash_matmul_kernel(q_ref, k_ref, v_ref, w_ref, o_ref, m_ref, l_ref,
-                         acc_ref, red_ref, oacc_ref, *, scale: float,
+def _flash_matmul_kernel(q_ref, k_ref, v_ref, w_ref, *rest, scale: float,
                          causal: bool, kv_offset: int, block_q: int,
                          block_kv: int, n_kv: int, n_heads: int,
-                         kv_len: int, mode: str):
+                         kv_len: int, mode: str, has_pos: bool = False):
+    if has_pos:
+        # decode shape: the per-sequence cache frontier rides in as a
+        # (1, 1) int32 block and replaces the static causal triangle
+        pos_ref, o_ref, m_ref, l_ref, acc_ref, red_ref, oacc_ref = rest
+    else:
+        pos_ref = None
+        o_ref, m_ref, l_ref, acc_ref, red_ref, oacc_ref = rest
     hh = pl.program_id(2)
 
     def epilogue(out):
@@ -487,18 +509,22 @@ def _flash_matmul_kernel(q_ref, k_ref, v_ref, w_ref, o_ref, m_ref, l_ref,
     _attention._flash_kernel(
         q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, red_ref,
         scale=scale, causal=causal, kv_offset=kv_offset, block_q=block_q,
-        block_kv=block_kv, n_kv=n_kv, mode=mode, skip=(mode == "native"),
-        kv_len=kv_len, q_axis=1, kv_axis=3, epilogue=epilogue)
+        block_kv=block_kv, n_kv=n_kv, mode=mode,
+        skip=(mode == "native" and causal), kv_len=kv_len, q_axis=1,
+        kv_axis=3, epilogue=epilogue, pos_ref=pos_ref)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "causal", "mode", "interpret", "block_q", "block_kv", "kv_offset"))
+    "causal", "mode", "interpret", "block_q", "block_kv", "kv_offset",
+    "plan_dialect"))
 def flash_attention_matmul(q: jax.Array, k: jax.Array, v: jax.Array,
                            w_out: jax.Array, *, causal: bool = True,
                            kv_offset: int | None = None,
                            mode: str = "native", interpret: bool = True,
                            block_q: int | None = None,
-                           block_kv: int | None = None) -> jax.Array:
+                           block_kv: int | None = None,
+                           pos: jax.Array | None = None,
+                           plan_dialect: str | None = None) -> jax.Array:
     """``flash_attention(q, k, v)`` -> ``wo`` projection in one kernel.
 
     q: [B,H,Sq,D]; k/v: [B,Hkv,Skv,D]; w_out: [H·D, N] -> [B,Sq,N].
@@ -508,6 +534,12 @@ def flash_attention_matmul(q: jax.Array, k: jax.Array, v: jax.Array,
     accumulator (cast to the output dtype once, at the last head) — the
     `[B,S,H,D]` activation the unfused pair stages to HBM is never
     materialized.
+
+    ``pos`` is the decode shape of the same op: per-sequence [B] int32
+    cache frontiers (keys at columns > pos[b] masked), replacing the
+    static causal triangle — how the serve tick, whose batch mixes slot
+    positions, runs this fusion against the KV cache.  ``plan_dialect``
+    (static) pins the tuned-table slice the trace binds.
     """
     b, h, sq, d = q.shape
     _, hkv, skv, _ = k.shape
@@ -516,14 +548,27 @@ def flash_attention_matmul(q: jax.Array, k: jax.Array, v: jax.Array,
     assert w_out.shape[0] == h * d, (w_out.shape, h, d)
     n = w_out.shape[1]
     if mode == "library":
-        o = _ref.attention(q, k, v, causal=causal)
+        if pos is None:
+            o = _ref.attention(q, k, v, causal=causal)
+        else:
+            # the unfused decode pair: masked softmax over the cache
+            # frontier (models/attention.py::decode_attention), then wo
+            k_r = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+            v_r = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+            s = jnp.einsum("bhqd,bhsd->bhqs", q.astype(jnp.float32),
+                           k_r) * (d ** -0.5)
+            valid = jnp.arange(skv)[None] <= pos[:, None]    # [B,Skv]
+            s = jnp.where(valid[:, None, None], s, -1e30)
+            o = jnp.einsum("bhqs,bhsd->bhqd", jax.nn.softmax(s, axis=-1),
+                           v_r).astype(q.dtype)
         o = o.transpose(0, 2, 1, 3).reshape(b, sq, h * d)
         return jnp.einsum("bsh,hn->bsn", o, w_out.astype(o.dtype))
     if kv_offset is None:
         kv_offset = skv - sq
     scale = 1.0 / (d ** 0.5)
+    causal = causal and pos is None
     block_q, block_kv = resolve_attention_matmul_blocks(
-        mode, sq, skv, d, n, block_q, block_kv)
+        mode, sq, skv, d, n, block_q, block_kv, plan_dialect)
     q_p = _attention._pad_seq(q, block_q)
     k_p = _attention._pad_seq(k, block_kv)
     v_p = _attention._pad_seq(v, block_kv)
@@ -539,21 +584,29 @@ def flash_attention_matmul(q: jax.Array, k: jax.Array, v: jax.Array,
         params = CompilerParams(dimension_semantics=(
             "parallel", "parallel", "arbitrary", "arbitrary"))
 
+    in_specs = [
+        pl.BlockSpec((1, 1, block_q, d),
+                     lambda bb, qi, hh, ki: (bb, hh, qi, 0)),
+        pl.BlockSpec((1, 1, block_kv, d),
+                     lambda bb, qi, hh, ki, g=group: (bb, hh // g, ki, 0)),
+        pl.BlockSpec((1, 1, block_kv, d),
+                     lambda bb, qi, hh, ki, g=group: (bb, hh // g, ki, 0)),
+        pl.BlockSpec((1, d, n_p), lambda bb, qi, hh, ki: (hh, 0, 0)),
+    ]
+    operands = [q_p, k_p, v_p, w3]
+    if pos is not None:
+        in_specs.append(pl.BlockSpec((1, 1),
+                                     lambda bb, qi, hh, ki: (bb, 0)))
+        operands.append(pos.reshape(b, 1).astype(jnp.int32))
+
     out = pl.pallas_call(
         functools.partial(
             _flash_matmul_kernel, scale=scale, causal=causal,
             kv_offset=kv_offset, block_q=block_q, block_kv=block_kv,
-            n_kv=grid[3], n_heads=h, kv_len=skv, mode=mode),
+            n_kv=grid[3], n_heads=h, kv_len=skv, mode=mode,
+            has_pos=pos is not None),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, block_q, d),
-                         lambda bb, qi, hh, ki: (bb, hh, qi, 0)),
-            pl.BlockSpec((1, 1, block_kv, d),
-                         lambda bb, qi, hh, ki, g=group: (bb, hh // g, ki, 0)),
-            pl.BlockSpec((1, 1, block_kv, d),
-                         lambda bb, qi, hh, ki, g=group: (bb, hh // g, ki, 0)),
-            pl.BlockSpec((1, d, n_p), lambda bb, qi, hh, ki: (hh, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block_q, n_p),
                                lambda bb, qi, hh, ki: (bb, qi, 0)),
         out_shape=jax.ShapeDtypeStruct((b, sqp, n_p), q.dtype),
@@ -568,13 +621,14 @@ def flash_attention_matmul(q: jax.Array, k: jax.Array, v: jax.Array,
         compiler_params=params,
         interpret=interpret,
         name=f"uisa_flash_attention_matmul_{mode.replace('+', '_')}",
-    )(q_p, k_p, v_p, w3)
+    )(*operands)
     return out[:, :sq, :n]
 
 
 def structural_cost_flash_attention_matmul(
         b: int, h: int, sq: int, skv: int, d: int, n: int, causal: bool,
-        mode: str, block_q=None, block_kv=None, dtype=jnp.float32) -> dict:
+        mode: str, block_q=None, block_kv=None, dtype=jnp.float32,
+        plan_dialect: str | None = None) -> dict:
     """The unfused pair's traffic minus exactly one ``[B,S,H,D]`` trip.
 
     Composes the registered ``flash_attention`` and ``gemm`` cost models
@@ -588,15 +642,16 @@ def structural_cost_flash_attention_matmul(
         bq, bkv = 256, 256
     else:
         bq, bkv = resolve_attention_matmul_blocks(mode, sq, skv, d, n,
-                                                  block_q, block_kv)
+                                                  block_q, block_kv,
+                                                  plan_dialect)
     # ONE attention evaluation at this lowering's resolved tiling: its
     # hbm term is block-independent (so the pair sum is unaffected) and
     # its flops/visited/scratch columns then all describe the same grid.
     att = _attention.structural_cost(
         b=b, h=h, sq=sq, skv=skv, d=d, causal=causal, mode=mode,
-        block_q=bq, block_kv=bkv, dtype=dtype)
+        block_q=bq, block_kv=bkv, dtype=dtype, plan_dialect=plan_dialect)
     g = _gemm.structural_cost(m=b * sq, n=n, k=h * d, mode=mode,
-                              dtype=dtype)
+                              dtype=dtype, plan_dialect=plan_dialect)
     unfused = att["hbm_bytes"] + g["hbm_bytes"]
     saved = 0 if mode == "library" else 2 * b * sq * h * d * itemsize
     return {
@@ -621,15 +676,18 @@ def structural_cost_flash_attention_matmul(
 
 
 def resolve_swiglu_blocks(mode: str, rows: int, d: int, f: int,
-                          dtype=jnp.float32):
+                          dtype=jnp.float32,
+                          plan_dialect: str | None = None):
     """The (bm, bn) tile over ``rows × f``: this op's tuned entry first
     (its working set holds *two* weight tiles plus the hi/hg/out trio),
-    then the shared GEMM heuristic.  Shared by kernel and cost."""
-    entry = tuned_entry("rmsnorm_swiglu", mode, swiglu_bucket(rows, d, f))
+    then the shared GEMM heuristic.  Shared by kernel and cost;
+    ``plan_dialect`` names the table slice consulted."""
+    entry = tuned_entry("rmsnorm_swiglu", mode, swiglu_bucket(rows, d, f),
+                        dialect=plan_dialect)
     if entry and "block" in entry:
         bm, bn = entry["block"]
         return int(bm), int(bn)
-    bm, bn, _ = _gemm.block_shape_for(mode, rows, f, d, dtype)
+    bm, bn, _ = _gemm.block_shape_for(mode, rows, f, d, dtype, plan_dialect)
     return bm, bn
 
 
@@ -651,10 +709,12 @@ def _rmsnorm_swiglu_kernel(x_ref, w_ref, wi_ref, wg_ref, o_ref, scratch_ref,
     o_ref[...] = (jax.nn.silu(hg) * hi).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "eps", "interpret"))
+@functools.partial(jax.jit, static_argnames=("mode", "eps", "interpret",
+                                             "plan_dialect"))
 def rmsnorm_swiglu(x: jax.Array, weight: jax.Array, w_cat: jax.Array, *,
                    eps: float = 1e-6, mode: str = "native",
-                   interpret: bool = True) -> jax.Array:
+                   interpret: bool = True,
+                   plan_dialect: str | None = None) -> jax.Array:
     """``silu(y @ wg) * (y @ wi)`` with ``y = rmsnorm(x, weight)``, fused.
 
     x: [..., D]; weight: [D]; w_cat: [D, 2F] — the concatenated
@@ -689,7 +749,7 @@ def rmsnorm_swiglu(x: jax.Array, weight: jax.Array, w_cat: jax.Array, *,
             wi2d = jnp.pad(wi2d, ((0, pad_d), (0, 0)))
             wg2d = jnp.pad(wg2d, ((0, pad_d), (0, 0)))
 
-    bm, bn = resolve_swiglu_blocks(mode, rows, d, f, x.dtype)
+    bm, bn = resolve_swiglu_blocks(mode, rows, d, f, x.dtype, plan_dialect)
     bm = min(bm, align_up(rows, 128))
     bn = min(bn, align_up(f, 128))
     pad_m = (-rows) % bm
@@ -730,7 +790,8 @@ def rmsnorm_swiglu(x: jax.Array, weight: jax.Array, w_cat: jax.Array, *,
 
 
 def structural_cost_rmsnorm_swiglu(rows: int, d: int, f: int, mode: str,
-                                   dtype=jnp.float32) -> dict:
+                                   dtype=jnp.float32,
+                                   plan_dialect: str | None = None) -> dict:
     """The unfused pair's traffic minus exactly one activation round trip.
 
     The pair is ``rmsnorm`` + one GEMM against the concatenated
@@ -739,14 +800,17 @@ def structural_cost_rmsnorm_swiglu(rows: int, d: int, f: int, mode: str,
     claimed conservatively: the hi/hg products the epilogue gate consumes
     also never stage, but only the norm round trip is pinned."""
     itemsize = jnp.dtype(dtype).itemsize
-    g = _gemm.structural_cost(m=rows, n=2 * f, k=d, mode=mode, dtype=dtype)
-    r = _rmsnorm.structural_cost(rows=rows, d=d, mode=mode, dtype=dtype)
+    g = _gemm.structural_cost(m=rows, n=2 * f, k=d, mode=mode, dtype=dtype,
+                              plan_dialect=plan_dialect)
+    r = _rmsnorm.structural_cost(rows=rows, d=d, mode=mode, dtype=dtype,
+                                 plan_dialect=plan_dialect)
     unfused = g["hbm_bytes"] + r["hbm_bytes"]
     saved = 0 if mode == "library" else 2 * rows * d * itemsize
     if mode == "library":
         bm = bn = 512
     else:
-        bm, bn = resolve_swiglu_blocks(mode, rows, d, f, dtype)
+        bm, bn = resolve_swiglu_blocks(mode, rows, d, f, dtype,
+                                       plan_dialect)
         bm = min(bm, align_up(rows, 128))
         bn = min(bn, align_up(f, 128))
     steps = -(-rows // bm) * -(-f // bn)
@@ -780,28 +844,33 @@ def structural_cost_rmsnorm_swiglu(rows: int, d: int, f: int, mode: str,
 
 
 def _rmsnorm_matmul_library(x, weight, w_proj, *, eps: float = 1e-6,
-                            interpret: bool = True):
-    del interpret
+                            interpret: bool = True,
+                            plan_dialect: str | None = None):
+    del interpret, plan_dialect
     return rmsnorm_matmul(x, weight, w_proj, eps=eps, mode="library")
 
 
 def _add_rmsnorm_library(x, residual, weight, *, eps: float = 1e-6,
-                         interpret: bool = True):
-    del interpret
+                         interpret: bool = True,
+                         plan_dialect: str | None = None):
+    del interpret, plan_dialect
     return add_rmsnorm(x, residual, weight, eps=eps, mode="library")
 
 
 def _flash_attention_matmul_library(q, k, v, w_out, *, causal: bool = True,
                                     kv_offset=None, interpret: bool = True,
-                                    block_q=None, block_kv=None):
-    del kv_offset, interpret, block_q, block_kv   # library: XLA decides
+                                    block_q=None, block_kv=None, pos=None,
+                                    plan_dialect: str | None = None):
+    # library: XLA decides every staging parameter
+    del kv_offset, interpret, block_q, block_kv, plan_dialect
     return flash_attention_matmul(q, k, v, w_out, causal=causal,
-                                  mode="library")
+                                  mode="library", pos=pos)
 
 
 def _rmsnorm_swiglu_library(x, weight, w_cat, *, eps: float = 1e-6,
-                            interpret: bool = True):
-    del interpret
+                            interpret: bool = True,
+                            plan_dialect: str | None = None):
+    del interpret, plan_dialect
     return rmsnorm_swiglu(x, weight, w_cat, eps=eps, mode="library")
 
 

@@ -83,15 +83,18 @@ def native_block_shape(dtype=jnp.float32) -> Tuple[int, int, int]:
 
 
 def block_shape_for(mode: str, m: int, n: int, k: int,
-                    dtype=jnp.float32) -> Tuple[int, int, int]:
+                    dtype=jnp.float32,
+                    plan_dialect: str | None = None) -> Tuple[int, int, int]:
     """The (bm, bn, bk) tile for one call: autotuner winner first.
 
     Consulted by both the kernel and ``structural_cost`` (and by the
     fused ``rmsnorm_matmul`` lowering), so the modeled traffic and the
-    executed tiling cannot drift apart.  The ``library`` row is XLA's own
-    tiling and is not tunable — callers keep their indicative constant.
+    executed tiling cannot drift apart.  ``plan_dialect`` names the table
+    slice consulted (None = ambient policy's dialect).  The ``library``
+    row is XLA's own tiling and is not tunable — callers keep their
+    indicative constant.
     """
-    tuned = tuned_block("gemm", mode, m, n, k)
+    tuned = tuned_block("gemm", mode, m, n, k, dialect=plan_dialect)
     if tuned is not None:
         return tuned
     if mode == "native":
@@ -122,9 +125,11 @@ def _pad_to(x: jax.Array, m0: int, m1: int) -> jax.Array:
     return x
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "out_dtype", "interpret"))
+@functools.partial(jax.jit, static_argnames=("mode", "out_dtype", "interpret",
+                                             "plan_dialect"))
 def gemm(a: jax.Array, b: jax.Array, *, mode: str = "native",
-         out_dtype=jnp.float32, interpret: bool = True) -> jax.Array:
+         out_dtype=jnp.float32, interpret: bool = True,
+         plan_dialect: str | None = None) -> jax.Array:
     """C[M,N] = A[M,K] @ B[K,N], f32 accumulation, UISA-mode selectable."""
     assert a.shape[1] == b.shape[0], (a.shape, b.shape)
     m, k = a.shape
@@ -133,10 +138,10 @@ def gemm(a: jax.Array, b: jax.Array, *, mode: str = "native",
         return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
 
     if mode in ("abstract", "abstract+shuffle"):
-        bm, bn, bk = block_shape_for(mode, m, n, k, a.dtype)
+        bm, bn, bk = block_shape_for(mode, m, n, k, a.dtype, plan_dialect)
         params = None
     elif mode == "native":
-        bm, bn, bk = block_shape_for(mode, m, n, k, a.dtype)
+        bm, bn, bk = block_shape_for(mode, m, n, k, a.dtype, plan_dialect)
         params = CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"))
     else:
@@ -169,7 +174,8 @@ def gemm(a: jax.Array, b: jax.Array, *, mode: str = "native",
 
 
 def structural_cost(m: int, n: int, k: int, mode: str,
-                    dtype=jnp.float32) -> dict:
+                    dtype=jnp.float32,
+                    plan_dialect: str | None = None) -> dict:
     """Modeled HBM traffic + FLOPs for the roofline discussion.
 
     A is re-read N/bn times, B re-read M/bm times, C written once — the
@@ -181,7 +187,7 @@ def structural_cost(m: int, n: int, k: int, mode: str,
     if mode == "library":
         bm = bn = bk = 512  # XLA's default-ish tiling; indicative only
     else:
-        bm, bn, bk = block_shape_for(mode, m, n, k, dtype)
+        bm, bn, bk = block_shape_for(mode, m, n, k, dtype, plan_dialect)
     n_reads_a = max(1, -(-n // bn))
     n_reads_b = max(1, -(-m // bm))
     hbm_bytes = (m * k * itemsize * n_reads_a

@@ -67,10 +67,11 @@ for _c in (ABSTRACT_CONTRACT, SHUFFLE_CONTRACT, NATIVE_CONTRACT):
     validate_contract(_c)
 
 
-def _plan(rows: int, mode: str):
+def _plan(rows: int, mode: str, plan_dialect: str | None = None):
     # pow2 blocks: the abstract variant tree-reduces across the block's
     # flattened element axis, which must be a power of two.
     return tuned_plan("histogram", rows, LANES * 4, mode=mode,
+                      dialect=plan_dialect,
                       max_block_rows=_MAX_BLOCK_ROWS,
                       pow2_blocks=True, semantics=("arbitrary",))
 
@@ -114,9 +115,11 @@ def _histogram_kernel(x_ref, o_ref, scratch_ref, *, mode: str,
     o_ref[...] += counts.astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("num_bins", "mode", "interpret"))
+@functools.partial(jax.jit, static_argnames=("num_bins", "mode", "interpret",
+                                             "plan_dialect"))
 def histogram(values: jax.Array, num_bins: int = 256, *,
-              mode: str = "native", interpret: bool = True) -> jax.Array:
+              mode: str = "native", interpret: bool = True,
+              plan_dialect: str | None = None) -> jax.Array:
     """Counts of int values in [0, num_bins); out-of-range values clipped."""
     if mode == "library":
         clipped = jnp.clip(values.astype(jnp.int32), 0, num_bins - 1)
@@ -129,7 +132,7 @@ def histogram(values: jax.Array, num_bins: int = 256, *,
         # Padding sentinel = -1: matches no bin in the compare.
         flat = jnp.pad(flat, (0, pad), constant_values=-1)
     rows = flat.shape[0] // LANES
-    plan = _plan(rows, mode)
+    plan = _plan(rows, mode, plan_dialect)
     block = plan.block_rows
     pad_r = plan.padded_rows - rows
     x2d = flat.reshape(rows, LANES)
@@ -156,10 +159,12 @@ def histogram(values: jax.Array, num_bins: int = 256, *,
     return out[0, :num_bins]
 
 
-def structural_cost(n: int, num_bins: int, mode: str) -> dict:
+def structural_cost(n: int, num_bins: int, mode: str,
+                    plan_dialect: str | None = None) -> dict:
     """Contention / privatization structure + the scratch-traffic delta."""
     rows = -(-n // LANES)
-    plan = _plan(rows, mode if mode != "library" else "native")
+    plan = _plan(rows, mode if mode != "library" else "native",
+                 plan_dialect)
     blocks = plan.grid[0]
     block_elems = plan.block_rows * LANES
     private_copies = plan.block_rows if mode in ("native",

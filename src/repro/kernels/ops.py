@@ -83,20 +83,18 @@ def _resolve(mode, policy, interpret):
 
 
 def _dispatch(low, pol, *args, **kwargs):
-    """Run a selected lowering with the resolved policy ambient.
+    """Run a selected lowering with the policy's dialect bound statically.
 
-    The kernels' trace-time tuned-table lookups (``repro.core.tuning``)
-    read the ambient dialect, so an ``auto`` policy on a foreign dialect
-    executes *that* dialect's tuned staging plans rather than the
-    target's.  Same caveat as ``use_policy``, one level stronger: the
-    dialect is NOT part of the jit cache key, so in a process that mixes
-    dialects at identical shapes the first dialect's traced plan is
-    reused (numerics are plan-invariant; the staging shapes are not) —
-    single-dialect processes, the production case, always run their own
-    slice.  Making the plan dialect a static kernel argument is a
-    ROADMAP item."""
+    ``plan_dialect`` is threaded into every kernel entry point as a
+    *static jit argument* (resolved once here from the policy every model
+    layer threads), so the tuned-table slice a kernel consults is part of
+    its jit cache key: a process mixing dialects at identical shapes
+    retraces per dialect and runs each dialect's own staging plans,
+    instead of reusing the first-traced plan (the PR 4 jit-cache-key gap,
+    closed by ISSUE 5).  The policy stays ambient for the dynamic extent
+    as before — nested registry dispatches still resolve against it."""
     with use_policy(pol):
-        return low.impl(*args, **kwargs)
+        return low.impl(*args, plan_dialect=pol.dialect, **kwargs)
 
 
 def matmul(a: jax.Array, b: jax.Array, *, mode=None,
@@ -198,20 +196,24 @@ def fused_flash_attention_matmul(q: jax.Array, k: jax.Array, v: jax.Array,
                                  policy: Optional[ExecutionPolicy] = None,
                                  interpret: Optional[bool] = None,
                                  block_q: Optional[int] = None,
-                                 block_kv: Optional[int] = None):
+                                 block_kv: Optional[int] = None,
+                                 pos: Optional[jax.Array] = None):
     """``flash_attention(q, k, v)`` -> ``wo`` without the HBM round trip.
 
     The `[B,S,H,D]` online-softmax output is consumed from VMEM by the
     per-head wo slices (kernels/fused.py); declared fallbacks: shuffle ->
-    scratch tree, native -> the unfused XLA pair."""
+    scratch tree, native -> the unfused XLA pair.  ``pos`` ([B] int32
+    cache frontiers) selects the decode shape: keys past each sequence's
+    frontier are masked instead of the static causal triangle."""
     pol, interpret = _resolve(mode, policy, interpret)
     low = REGISTRY.select("flash_attention_matmul", pol, shape=dict(
         b=q.shape[0], h=q.shape[1], sq=q.shape[2], skv=k.shape[2],
-        d=q.shape[3], n=w_out.shape[1], causal=causal,
+        d=q.shape[3], n=w_out.shape[1], causal=causal and pos is None,
         block_q=block_q, block_kv=block_kv))
-    return _dispatch(low, pol, q, k, v, w_out, causal=causal,
+    return _dispatch(low, pol, q, k, v, w_out,
+                     causal=causal and pos is None,
                      kv_offset=kv_offset, interpret=interpret,
-                     block_q=block_q, block_kv=block_kv)
+                     block_q=block_q, block_kv=block_kv, pos=pos)
 
 
 def fused_rmsnorm_swiglu(x: jax.Array, weight: jax.Array,

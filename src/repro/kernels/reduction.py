@@ -60,8 +60,9 @@ for _c in (ABSTRACT_CONTRACT, SHUFFLE_CONTRACT, NATIVE_CONTRACT):
     validate_contract(_c)
 
 
-def _plan(rows: int, mode: str):
+def _plan(rows: int, mode: str, plan_dialect: str | None = None):
     return tuned_plan("reduction", rows, LANES * 4, mode=mode,
+                      dialect=plan_dialect,
                       max_block_rows=_MAX_BLOCK_ROWS,
                       semantics=("arbitrary",))
 
@@ -89,10 +90,16 @@ def _reduction_kernel(x_ref, o_ref, scratch_ref, *, mode: str):
     o_ref[0, 0] += part
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("mode", "interpret", "plan_dialect"))
 def reduce_sum(x: jax.Array, *, mode: str = "native",
-               interpret: bool = True) -> jax.Array:
-    """Sum all elements of ``x`` (any shape) with f32 accumulation."""
+               interpret: bool = True,
+               plan_dialect: str | None = None) -> jax.Array:
+    """Sum all elements of ``x`` (any shape) with f32 accumulation.
+
+    ``plan_dialect`` names the dialect whose tuned staging plan the call
+    binds (a *static* jit argument, so mixed-dialect processes retrace per
+    dialect); None falls back to the ambient policy's dialect."""
     if mode == "library":
         return jnp.sum(x.astype(jnp.float32))
     flat = x.reshape(-1)
@@ -100,7 +107,7 @@ def reduce_sum(x: jax.Array, *, mode: str = "native",
     if pad:
         flat = jnp.pad(flat, (0, pad))
     rows = flat.shape[0] // LANES
-    plan = _plan(rows, mode)
+    plan = _plan(rows, mode, plan_dialect)
     x2d = pad_rows(flat.reshape(rows, LANES), plan)
 
     out = pl.pallas_call(
@@ -117,7 +124,8 @@ def reduce_sum(x: jax.Array, *, mode: str = "native",
     return out[0, 0]
 
 
-def structural_cost(n: int, mode: str, dtype=jnp.float32) -> dict:
+def structural_cost(n: int, mode: str, dtype=jnp.float32,
+                    plan_dialect: str | None = None) -> dict:
     """Bytes moved + scratch round-trips — the §VII.C mechanism, in numbers.
 
     The HBM traffic is identical across variants (bandwidth-bound kernel);
@@ -127,7 +135,8 @@ def structural_cost(n: int, mode: str, dtype=jnp.float32) -> dict:
     """
     itemsize = jnp.dtype(dtype).itemsize
     rows = -(-n // LANES)
-    plan = _plan(rows, mode if mode != "library" else "native")
+    plan = _plan(rows, mode if mode != "library" else "native",
+                 plan_dialect)
     blocks = plan.grid[0]
     if mode == "abstract":
         round_trips = tree_stages(LANES)     # 7 halving stages

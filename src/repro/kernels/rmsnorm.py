@@ -55,8 +55,10 @@ for _c in (ABSTRACT_CONTRACT, SHUFFLE_CONTRACT, NATIVE_CONTRACT):
     validate_contract(_c)
 
 
-def _plan(rows: int, d_padded: int, itemsize: int, mode: str):
+def _plan(rows: int, d_padded: int, itemsize: int, mode: str,
+          plan_dialect: str | None = None):
     return tuned_plan("rmsnorm", rows, d_padded * itemsize, mode=mode,
+                      dialect=plan_dialect,
                       max_block_rows=_MAX_BLOCK_ROWS,
                       semantics=("parallel",))
 
@@ -98,10 +100,15 @@ def _rmsnorm_kernel(x_ref, w_ref, o_ref, scratch_ref, *, eps: float,
                                  d_true=d_true).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "eps", "interpret"))
+@functools.partial(jax.jit, static_argnames=("mode", "eps", "interpret",
+                                             "plan_dialect"))
 def rmsnorm(x: jax.Array, weight: jax.Array, *, eps: float = 1e-6,
-            mode: str = "native", interpret: bool = True) -> jax.Array:
-    """RMSNorm over the last axis; x: [..., D], weight: [D]."""
+            mode: str = "native", interpret: bool = True,
+            plan_dialect: str | None = None) -> jax.Array:
+    """RMSNorm over the last axis; x: [..., D], weight: [D].
+
+    ``plan_dialect`` (static) pins which dialect's tuned staging plan the
+    trace binds; None degrades to the ambient policy's dialect."""
     if mode == "library":
         xf = x.astype(jnp.float32)
         var = jnp.mean(xf * xf, axis=-1, keepdims=True)
@@ -122,7 +129,8 @@ def rmsnorm(x: jax.Array, weight: jax.Array, *, eps: float = 1e-6,
             x2d = jnp.pad(x2d, ((0, 0), (0, pad_d)))
             w2d = jnp.pad(w2d, ((0, 0), (0, pad_d)))
 
-    plan = _plan(rows, d_padded, jnp.dtype(x.dtype).itemsize, mode)
+    plan = _plan(rows, d_padded, jnp.dtype(x.dtype).itemsize, mode,
+                 plan_dialect)
     block = plan.block_rows
     pad = plan.padded_rows - rows
     if pad:
@@ -148,7 +156,8 @@ def rmsnorm(x: jax.Array, weight: jax.Array, *, eps: float = 1e-6,
     return out[:rows, :d].reshape(x.shape)
 
 
-def structural_cost(rows: int, d: int, mode: str, dtype=jnp.float32) -> dict:
+def structural_cost(rows: int, d: int, mode: str, dtype=jnp.float32,
+                    plan_dialect: str | None = None) -> dict:
     """Scratch-traffic delta of the moment reduction — §VII.C generalized.
 
     HBM traffic is mode-invariant (read x + w, write out); the cross-lane
@@ -159,7 +168,7 @@ def structural_cost(rows: int, d: int, mode: str, dtype=jnp.float32) -> dict:
     itemsize = jnp.dtype(dtype).itemsize
     d_padded = d if mode == "native" else d + ((-d) % LANES)
     plan = _plan(rows, d_padded, itemsize,
-                 mode if mode != "library" else "native")
+                 mode if mode != "library" else "native", plan_dialect)
     blocks = plan.grid[0]
     if mode == "abstract":
         round_trips = tree_stages(LANES) + 1   # tree + moment re-stage

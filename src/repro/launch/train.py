@@ -13,6 +13,7 @@ command — it resumes), preemption (SIGTERM → drain + save), straggler
 logging, elastic restart (change --mesh between runs; restore reshards).
 """
 import argparse
+import dataclasses
 import json
 import os
 
@@ -120,10 +121,13 @@ def main():
     loop_cfg = LoopConfig(total_steps=args.steps,
                           checkpoint_every=args.ckpt_every,
                           log_every=args.log_every)
+    layout = getattr(model, "param_layout", None)
     params, opt_state, report = train_loop(
         step_fn, params, opt_state, dataset, loop_cfg, ckpt,
         start_step=start, metrics_sink=sink, preemption=guard,
-        batch_put=batch_put)
+        batch_put=batch_put,
+        save_extra={"param_layout": dataclasses.asdict(layout)}
+        if layout is not None else None)
     dataset.stop()
     print(f"[train] done at step {report['final_step']} "
           f"(preempted={report['preempted']}, "

@@ -36,6 +36,54 @@ def embed_init(key, shape, dtype=jnp.float32):
 
 
 # --------------------------------------------------------------------------
+# Parameter-layout accessors (ISSUE 5).  A parameter group that fuses may
+# be stored either per-matrix (the legacy layout: "wq"/"wk"/"wv",
+# "wi"/"wg") or concatenated (the fusion-legal layout planned by
+# models.config.ParamLayout: one "wqkv"/"wig" tensor).  Every consumer
+# reads through these two accessors, so model code is layout-agnostic:
+# fused kernels take the whole tensor (free when persisted, a per-call
+# concat tax on legacy params — exactly the tax the planner removes at
+# decode), unfused math takes views/slices (zero-copy on either layout).
+# --------------------------------------------------------------------------
+
+
+def concat_param(params, cat_key: str, part_keys: Sequence[str]):
+    """The whole concatenated tensor for a fused lowering.
+
+    The persisted tensor when the layout planner placed one; otherwise a
+    per-call last-axis concat of the legacy matrices (the pre-ISSUE-5
+    behavior, kept so fusing policies still run on legacy checkpoints)."""
+    if cat_key in params:
+        return params[cat_key]
+    return jnp.concatenate([params[k] for k in part_keys], axis=-1)
+
+
+def split_param(params, cat_key: str, part_keys: Sequence[str],
+                widths: Sequence[int]):
+    """Per-matrix views for unfused math, on either stored layout.
+
+    ``widths`` are the last-axis widths of the parts (needed only to
+    slice the concatenated tensor; ignored on the legacy layout)."""
+    if cat_key in params:
+        w = params[cat_key]
+        parts, off = [], 0
+        for width in widths:
+            parts.append(w[..., off:off + width])
+            off += width
+        return tuple(parts)
+    return tuple(params[k] for k in part_keys)
+
+
+def stored_concat(params, cat_key: str) -> bool:
+    """Whether this parameter group is persisted in the concatenated
+    layout — the decode-tick fusion gate: with the tensor at rest the
+    fused call has zero weight-traffic overhead; on the legacy layout the
+    per-call concat is a net loss at decode rows and the gate stays
+    shut (the PR 4 behavior)."""
+    return cat_key in params
+
+
+# --------------------------------------------------------------------------
 # Norms / activations.  RMSNorm routes through the lowering registry
 # (core/registry.py): the pure-jnp path is the registered `library`
 # variant, so model norms no longer bypass the kernel layer — an

@@ -144,6 +144,48 @@ class ModelConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ParamLayout:
+    """Init-time parameter layout — fusion legality decided at rest.
+
+    The fused multi-op lowerings (kernels/fused.py) consume *concatenated*
+    weight tensors: ``[wq|wk|wv]`` for the norm→q/k/v prologue and
+    ``[wi|wg]`` for the norm→swiglu pair.  Concatenating per call is free
+    at train/prefill scale but a net traffic loss at decode (rows = B: a
+    weight-sized materialization to save a token-sized round trip), which
+    is why PR 4 kept all seq-path fusions off the decode tick.  This plan
+    moves the decision to where it is free: parameters are *persisted* in
+    the fused layout at init, the hot loop only takes views.
+
+    ``attn_qkv`` stores one ``wqkv = [wq|wk|wv]`` tensor per attention
+    sublayer; ``mlp_swiglu`` stores one ``wig = [wi|wg]`` tensor per dense
+    (and MoE shared-expert) swiglu MLP.  Either layout is *readable* by
+    every consumer through the accessors in ``models/common.py`` —
+    views/slices for unfused math, the whole tensor for fused kernels —
+    so checkpoints in one layout load into models planned for the other
+    (checkpoint/manager.py migrates at the flat-leaf level).
+    """
+
+    attn_qkv: bool = False
+    mlp_swiglu: bool = False
+
+    @classmethod
+    def plan(cls, cfg: "ModelConfig", policy) -> "ParamLayout":
+        """The ONE place the layout is decided, driven by the policy the
+        model resolved: a fusing policy (``ExecutionPolicy.fuses()``)
+        gets the concatenated layout wherever a fused lowering can
+        consume it (rmsnorm prologues only — layernorm models keep the
+        per-matrix layout)."""
+        if not policy.fuses() or cfg.norm != "rmsnorm":
+            return cls()
+        return cls(attn_qkv=cfg.num_heads > 0,
+                   mlp_swiglu=cfg.act == "silu")
+
+
+#: the per-matrix layout every pre-ISSUE-5 checkpoint carries
+LEGACY_LAYOUT = ParamLayout()
+
+
+@dataclasses.dataclass(frozen=True)
 class ParallelConfig:
     """How the model maps onto the mesh (DP/FSDP/TP/EP/SP)."""
 

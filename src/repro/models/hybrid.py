@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.core.registry import ExecutionPolicy
 from repro.models import common, ssd, transformer
-from repro.models.config import ModelConfig, ParallelConfig
+from repro.models.config import ModelConfig, ParallelConfig, ParamLayout
 from repro.parallel.sharding import ShardCtx, shard
 
 
@@ -26,6 +26,9 @@ class HybridLM:
         assert cfg.ssm is not None and cfg.hybrid is not None
         self.cfg, self.par, self.ctx = cfg, par, ctx
         self.policy = policy or par.execution_policy()
+        # the shared attention block rides the same init-time layout plan
+        # as TransformerLM (the SSM blocks have no fusable weight pairs)
+        self.param_layout = ParamLayout.plan(cfg, self.policy)
         self.n_apps = cfg.num_layers // cfg.hybrid.attn_every
 
     def with_policy(self, policy: ExecutionPolicy) -> "HybridLM":
@@ -47,8 +50,8 @@ class HybridLM:
             "norms": jax.vmap(lambda k: common.init_norm(
                 k, cfg.d_model, cfg.norm, self._dtype()))(
                 jax.random.split(ks[2], cfg.num_layers)),
-            "shared_attn": transformer.init_block(ks[3], cfg,
-                                                  self._dtype())[0],
+            "shared_attn": transformer.init_block(
+                ks[3], cfg, self._dtype(), self.param_layout)[0],
             "final_norm": common.init_norm(ks[4], cfg.d_model, cfg.norm,
                                            self._dtype()),
             "lm_head": common.dense_init(
@@ -66,7 +69,8 @@ class HybridLM:
                               common.norm_specs(cfg.norm),
                               is_leaf=lambda x: isinstance(x, tuple))
         _, attn_specs = transformer.init_block(jax.random.PRNGKey(0), cfg,
-                                               jnp.float32)
+                                               jnp.float32,
+                                               self.param_layout)
         return {"embed": ("vocab", "embed"), "blocks": bspecs,
                 "norms": nspecs, "shared_attn": attn_specs,
                 "final_norm": common.norm_specs(cfg.norm),

@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import common
-from repro.models.config import ModelConfig, MoEConfig
+from repro.models.config import (LEGACY_LAYOUT, ModelConfig, MoEConfig,
+                                 ParamLayout)
 from repro.parallel.sharding import ShardCtx, shard
 
 
@@ -23,15 +24,35 @@ from repro.parallel.sharding import ShardCtx, shard
 # --------------------------------------------------------------------------
 
 
-def init_mlp(key, d: int, d_ff: int, act: str, dtype):
+def init_mlp(key, d: int, d_ff: int, act: str, dtype,
+             layout: ParamLayout = LEGACY_LAYOUT):
     ks = jax.random.split(key, 3)
-    params = {"wi": common.dense_init(ks[0], (d, d_ff), 0, dtype),
-              "wo": common.dense_init(ks[1], (d_ff, d), 0, dtype)}
-    specs = {"wi": ("embed", "mlp"), "wo": ("mlp", "embed")}
+    params = {"wo": common.dense_init(ks[1], (d_ff, d), 0, dtype)}
+    specs = {"wo": ("mlp", "embed")}
+    wi = common.dense_init(ks[0], (d, d_ff), 0, dtype)
     if act == "silu":                       # swiglu gate
-        params["wg"] = common.dense_init(ks[2], (d, d_ff), 0, dtype)
-        specs["wg"] = ("embed", "mlp")
+        wg = common.dense_init(ks[2], (d, d_ff), 0, dtype)
+        if layout.mlp_swiglu:
+            # the fusion-legal layout: [wi|wg] persisted as one tensor,
+            # consumed whole by the fused norm→swiglu lowering and as
+            # views by the unfused einsums (models/common.py accessors)
+            params["wig"] = jnp.concatenate([wi, wg], axis=1)
+            specs["wig"] = ("embed", "mlp")
+        else:
+            params.update(wi=wi, wg=wg)
+            specs.update(wi=("embed", "mlp"), wg=("embed", "mlp"))
+    else:
+        params["wi"] = wi
+        specs["wi"] = ("embed", "mlp")
     return params, specs
+
+
+def _wi_wg(params):
+    """The (wi, wg) views on either stored layout."""
+    if "wig" in params:
+        f = params["wig"].shape[-1] // 2
+        return common.split_param(params, "wig", ("wi", "wg"), (f, f))
+    return params["wi"], params["wg"]
 
 
 def apply_mlp(params, x, act: str, ctx: Optional[ShardCtx],
@@ -40,10 +61,13 @@ def apply_mlp(params, x, act: str, ctx: Optional[ShardCtx],
     residual stream and the pre-MLP rmsnorm rides into the projections —
     for swiglu as one fused call against the concatenated ``[wi|wg]``
     weight with the silu gate applied in the epilogue (kernels/fused.py),
-    mirroring PR 3's q/k/v ``norm_scale`` threading."""
+    mirroring PR 3's q/k/v ``norm_scale`` threading.  Either parameter
+    layout works on either path: the fused call takes the persisted
+    ``wig`` when the layout planner placed one (a per-call concat
+    otherwise), the unfused einsums take views."""
     if norm_scale is not None:
         if act == "silu":
-            w_cat = jnp.concatenate([params["wi"], params["wg"]], axis=1)
+            w_cat = common.concat_param(params, "wig", ("wi", "wg"))
             h = common.rmsnorm_swiglu(x, norm_scale, w_cat, eps,
                                       policy=policy)
         else:
@@ -53,12 +77,14 @@ def apply_mlp(params, x, act: str, ctx: Optional[ShardCtx],
                                       policy=policy)
             h = common.activation(h, act)
     else:
-        h = jnp.einsum("bsd,df->bsf", x, params["wi"].astype(x.dtype))
         if act == "silu":
-            gate = jnp.einsum("bsd,df->bsf", x,
-                              params["wg"].astype(x.dtype))
+            wi, wg = _wi_wg(params)
+            h = jnp.einsum("bsd,df->bsf", x, wi.astype(x.dtype))
+            gate = jnp.einsum("bsd,df->bsf", x, wg.astype(x.dtype))
             h = jax.nn.silu(gate) * h
         else:
+            h = jnp.einsum("bsd,df->bsf", x,
+                           params["wi"].astype(x.dtype))
             h = common.activation(h, act)
     h = shard(h, ("act_batch", "act_seq_unsharded", "act_mlp"), ctx)
     return jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(x.dtype))
@@ -69,7 +95,8 @@ def apply_mlp(params, x, act: str, ctx: Optional[ShardCtx],
 # --------------------------------------------------------------------------
 
 
-def init_moe(key, d: int, d_ff: int, moe: MoEConfig, act: str, dtype):
+def init_moe(key, d: int, d_ff: int, moe: MoEConfig, act: str, dtype,
+             layout: ParamLayout = LEGACY_LAYOUT):
     ks = jax.random.split(key, 5)
     e = moe.num_experts
     params = {
@@ -85,8 +112,11 @@ def init_moe(key, d: int, d_ff: int, moe: MoEConfig, act: str, dtype):
         "wo": ("experts", "expert_mlp", "embed"),
     }
     if moe.shared_experts:
+        # the shared expert is a dense MLP and rides the layout plan; the
+        # routed expert stacks stay per-matrix — the grouped dispatch
+        # einsums consume wi/wg separately and never fuse
         shared, sspecs = init_mlp(ks[4], d, d_ff * moe.shared_experts,
-                                  act, dtype)
+                                  act, dtype, layout)
         params["shared"] = shared
         specs["shared"] = sspecs
     return params, specs

@@ -21,7 +21,8 @@ from repro.models import common, mlp
 from repro.models.attention import (chunked_attention, decode_attention,
                                     dequantize_kv, quantize_kv,
                                     update_cache, update_cache_int8)
-from repro.models.config import ModelConfig, ParallelConfig
+from repro.models.config import (LEGACY_LAYOUT, ModelConfig, ParallelConfig,
+                                 ParamLayout)
 from repro.parallel.sharding import ShardCtx, shard
 
 
@@ -34,18 +35,31 @@ def _dtype(cfg: ModelConfig):
 # --------------------------------------------------------------------------
 
 
-def init_attn(key, cfg: ModelConfig, dtype):
+def _qkv_widths(cfg: ModelConfig):
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    return (h * hd, hkv * hd, hkv * hd)
+
+
+def init_attn(key, cfg: ModelConfig, dtype,
+              layout: ParamLayout = LEGACY_LAYOUT):
     d, h, hkv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
     hd = cfg.resolved_head_dim
     ks = jax.random.split(key, 4)
-    params = {
-        "wq": common.dense_init(ks[0], (d, h * hd), 0, dtype),
-        "wk": common.dense_init(ks[1], (d, hkv * hd), 0, dtype),
-        "wv": common.dense_init(ks[2], (d, hkv * hd), 0, dtype),
-        "wo": common.dense_init(ks[3], (h * hd, d), 0, dtype),
-    }
-    specs = {"wq": ("embed", "q_heads"), "wk": ("embed", "kv_heads"),
-             "wv": ("embed", "kv_heads"), "wo": ("q_heads", "embed")}
+    # the three projections draw from the same keys on either layout, so
+    # the two layouts of one seed are the same weights (migration and the
+    # fusion-equivalence tests rely on it)
+    wq = common.dense_init(ks[0], (d, h * hd), 0, dtype)
+    wk = common.dense_init(ks[1], (d, hkv * hd), 0, dtype)
+    wv = common.dense_init(ks[2], (d, hkv * hd), 0, dtype)
+    params = {"wo": common.dense_init(ks[3], (h * hd, d), 0, dtype)}
+    specs = {"wo": ("q_heads", "embed")}
+    if layout.attn_qkv:
+        params["wqkv"] = jnp.concatenate([wq, wk, wv], axis=1)
+        specs["wqkv"] = ("embed", "q_heads")
+    else:
+        params.update(wq=wq, wk=wk, wv=wv)
+        specs.update(wq=("embed", "q_heads"), wk=("embed", "kv_heads"),
+                     wv=("embed", "kv_heads"))
     if cfg.qk_norm:
         params["q_norm"] = jnp.ones((hd,), dtype)
         params["k_norm"] = jnp.ones((hd,), dtype)
@@ -54,9 +68,10 @@ def init_attn(key, cfg: ModelConfig, dtype):
     return params, specs
 
 
-def init_block(key, cfg: ModelConfig, dtype):
+def init_block(key, cfg: ModelConfig, dtype,
+               layout: ParamLayout = LEGACY_LAYOUT):
     ks = jax.random.split(key, 4)
-    attn, attn_specs = init_attn(ks[0], cfg, dtype)
+    attn, attn_specs = init_attn(ks[0], cfg, dtype, layout)
     params = {"attn": attn,
               "ln1": common.init_norm(ks[2], cfg.d_model, cfg.norm, dtype),
               "ln2": common.init_norm(ks[3], cfg.d_model, cfg.norm, dtype)}
@@ -65,10 +80,10 @@ def init_block(key, cfg: ModelConfig, dtype):
              "ln2": common.norm_specs(cfg.norm)}
     if cfg.moe is not None:
         params["moe"], specs["moe"] = mlp.init_moe(
-            ks[1], cfg.d_model, cfg.d_ff, cfg.moe, cfg.act, dtype)
+            ks[1], cfg.d_model, cfg.d_ff, cfg.moe, cfg.act, dtype, layout)
     else:
         params["mlp"], specs["mlp"] = mlp.init_mlp(
-            ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype)
+            ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype, layout)
     return params, specs
 
 
@@ -85,17 +100,20 @@ def _project_qkv(params, x, cfg: ModelConfig, positions, ctx,
         # The pre-attention norm rides into the projection as a fused
         # GEMM prologue (x is the *raw* residual here): the normalized
         # activation is consumed from VMEM, never staged to HBM.  One
-        # call against the concatenated [wq|wk|wv] so the residual is
-        # read and the moment computed once per sublayer, not thrice.
-        w_qkv = jnp.concatenate(
-            [params["wq"], params["wk"], params["wv"]], axis=1)
+        # call against the concatenated [wq|wk|wv] — the persisted tensor
+        # when the layout planner placed one, a per-call concat on legacy
+        # params — so the residual is read and the moment computed once
+        # per sublayer, not thrice.
+        w_qkv = common.concat_param(params, "wqkv", ("wq", "wk", "wv"))
         qkv = common.rmsnorm_matmul(x, norm_scale, w_qkv,
                                     cfg.norm_eps, policy=policy)
         q, k, v = jnp.split(qkv, [h * hd, (h + hkv) * hd], axis=-1)
     else:
-        q = jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(x.dtype))
-        k = jnp.einsum("bsd,dh->bsh", x, params["wk"].astype(x.dtype))
-        v = jnp.einsum("bsd,dh->bsh", x, params["wv"].astype(x.dtype))
+        wq, wk, wv = common.split_param(params, "wqkv", ("wq", "wk", "wv"),
+                                        _qkv_widths(cfg))
+        q = jnp.einsum("bsd,dh->bsh", x, wq.astype(x.dtype))
+        k = jnp.einsum("bsd,dh->bsh", x, wk.astype(x.dtype))
+        v = jnp.einsum("bsd,dh->bsh", x, wv.astype(x.dtype))
     q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
     k = k.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
     v = v.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
@@ -196,13 +214,23 @@ def attn_seq(params, x, cfg: ModelConfig, par: ParallelConfig,
 
 
 def attn_decode(params, x_t, cfg: ModelConfig, kv_cache, pos, ctx,
-                int8: bool = False, policy=None):
+                int8: bool = False, policy=None, norm_scale=None,
+                fuse_wo: bool = False):
     """One-token attention. x_t: [B,1,D]; kv_cache: (K,V) [B,Hkv,S,hd]
-    (bf16) or (Kq,Ks,Vq,Vs) (int8 + scales)."""
+    (bf16) or (Kq,Ks,Vq,Vs) (int8 + scales).
+
+    With ``norm_scale`` set, ``x_t`` is the raw residual and the
+    pre-attention rmsnorm fuses into the q/k/v projections — decode-legal
+    only because the caller verified the concatenated ``wqkv`` is
+    *persisted* (zero weight-traffic overhead; see block_decode's gate).
+    ``fuse_wo`` routes the cache attention + wo projection through the
+    decode shape of ``flash_attention_matmul`` (per-slot ``pos``
+    frontiers mask the cache), eliminating the `[B,1,H,D]` attention
+    output round trip per layer per tick."""
     b = x_t.shape[0]
     positions = pos[:, None]                       # [B,1]
     q, k_new, v_new = _project_qkv(params, x_t, cfg, positions, ctx,
-                                   policy=policy)
+                                   policy=policy, norm_scale=norm_scale)
     if int8:
         k_q, k_s, v_q, v_s = kv_cache
         k_q, k_s = update_cache_int8(k_q, k_s, k_new, pos)
@@ -215,6 +243,12 @@ def attn_decode(params, x_t, cfg: ModelConfig, kv_cache, pos, ctx,
         k_cache = update_cache(k_cache, k_new, pos)
         v_cache = update_cache(v_cache, v_new, pos)
         new_cache = (k_cache, v_cache)
+    if fuse_wo:
+        from repro.kernels import ops as kernel_ops
+        out = kernel_ops.fused_flash_attention_matmul(
+            q, k_cache, v_cache, params["wo"], pos=pos,
+            policy=policy.kernel() if policy is not None else None)
+        return out, new_cache
     o = decode_attention(q, k_cache, v_cache, pos, ctx=ctx)
     o = o.transpose(0, 2, 1, 3).reshape(b, 1, -1)
     out = jnp.einsum("bsh,hd->bsd", o, params["wo"].astype(x_t.dtype))
@@ -286,30 +320,55 @@ def block_seq(params, x, cfg: ModelConfig, par: ParallelConfig, positions,
 
 
 def block_decode(params, x_t, cfg: ModelConfig, kv_cache, pos, ctx,
-                 int8: bool = False, policy=None):
+                 int8: bool = False, policy=None, fuse_wo: bool = False):
     fuse = (policy is not None and policy.fuses()
             and cfg.norm == "rmsnorm")
-    # The qkv and ln2→[wi|wg] projections are NOT fused here: the fused
-    # paths concatenate [wq|wk|wv] / [wi|wg] per call, and at decode
-    # (rows = B) that materializes a weight-sized tensor per token to
-    # save a token-sized round trip — a net traffic loss.  The
-    # activation-sized residual→norm fusion below has no such weight
-    # term and stays on.
-    h = common.apply_norm(x_t, params["ln1"], cfg.norm, cfg.norm_eps,
-                          policy=policy)
+    # Decode fusion gates (ISSUE 5): the qkv / ln2→[wi|wg] prologues fuse
+    # exactly when the concatenated tensor is *persisted* (the ParamLayout
+    # planner's init-time choice) — then the fused call reads the same
+    # weight bytes the unfused sequence would and the activation round
+    # trip is a pure saving.  On legacy per-matrix params the per-call
+    # concat materializes a weight-sized tensor to save a token-sized
+    # round trip (rows = B) — a net traffic loss — so the gates stay shut,
+    # which is exactly the PR 4 behavior.  The activation-sized
+    # residual→norm fusion has no weight term and is layout-independent.
+    qkv_fuse = fuse and common.stored_concat(params["attn"], "wqkv")
+    if qkv_fuse:
+        h, ln1_scale = x_t, params["ln1"]["scale"]
+    else:
+        h = common.apply_norm(x_t, params["ln1"], cfg.norm, cfg.norm_eps,
+                              policy=policy)
+        ln1_scale = None
     a, kv_cache = attn_decode(params["attn"], h, cfg, kv_cache, pos, ctx,
-                              int8=int8, policy=policy)
-    if fuse:
+                              int8=int8, policy=policy,
+                              norm_scale=ln1_scale, fuse_wo=fuse_wo)
+    if cfg.moe is None:
+        mlp_params = params["mlp"]
+    elif cfg.moe.shared_experts:
+        mlp_params = params["moe"]["shared"]
+    else:
+        mlp_params = {}                  # router-only MoE: no fusable pair
+    swiglu_fuse = (fuse and cfg.act == "silu"
+                   and common.stored_concat(mlp_params, "wig"))
+    if swiglu_fuse:
+        x_t = x_t + a
+        h, mlp_scale = x_t, params["ln2"]["scale"]
+    elif fuse:
         h, x_t = common.add_rmsnorm(x_t, a, params["ln2"]["scale"],
                                     cfg.norm_eps, policy=policy)
+        mlp_scale = None
     else:
         x_t = x_t + a
         h = common.apply_norm(x_t, params["ln2"], cfg.norm, cfg.norm_eps,
                               policy=policy)
+        mlp_scale = None
     if cfg.moe is not None:
-        m, _ = mlp.apply_moe(params["moe"], h, cfg.moe, cfg.act, ctx)
+        m, _ = mlp.apply_moe(params["moe"], h, cfg.moe, cfg.act, ctx,
+                             policy=policy, norm_scale=mlp_scale,
+                             eps=cfg.norm_eps)
     else:
-        m = mlp.apply_mlp(params["mlp"], h, cfg.act, ctx)
+        m = mlp.apply_mlp(params["mlp"], h, cfg.act, ctx, policy=policy,
+                          norm_scale=mlp_scale, eps=cfg.norm_eps)
     return x_t + m, kv_cache
 
 
@@ -329,6 +388,13 @@ class TransformerLM:
         self.ctx = ctx
         # the lowering policy every hot spot below threads (resolved ONCE)
         self.policy = policy or par.execution_policy()
+        # the parameter layout the policy earns (resolved ONCE, at init —
+        # the fusion-legality decision made where it is free, at rest).
+        # Consumers stay layout-agnostic via the common.py accessors, so
+        # params initialized under either plan still run under either
+        # policy; only *this* model's init_params/param_specs emit the
+        # planned layout.
+        self.param_layout = ParamLayout.plan(cfg, self.policy)
         self.aux_weight = 0.01 if cfg.moe is not None else 0.0
 
     def with_policy(self, policy: ExecutionPolicy) -> "TransformerLM":
@@ -341,8 +407,9 @@ class TransformerLM:
         dtype = _dtype(cfg)
         k_embed, k_blocks, k_out, k_norm = jax.random.split(rng, 4)
         block_keys = jax.random.split(k_blocks, cfg.num_layers)
+        layout = self.param_layout
         blocks = jax.vmap(
-            lambda k: init_block(k, cfg, dtype)[0])(block_keys)
+            lambda k: init_block(k, cfg, dtype, layout)[0])(block_keys)
         params = {
             "embed": common.embed_init(k_embed,
                                        (cfg.vocab_size, cfg.d_model)),
@@ -357,7 +424,8 @@ class TransformerLM:
 
     def param_specs(self):
         cfg = self.cfg
-        _, block_specs = init_block(jax.random.PRNGKey(0), cfg, jnp.float32)
+        _, block_specs = init_block(jax.random.PRNGKey(0), cfg, jnp.float32,
+                                    self.param_layout)
         # scanned leading 'layers' axis is unsharded
         block_specs = jax.tree.map(lambda ax: (None,) + ax, block_specs,
                                    is_leaf=lambda x: isinstance(x, tuple))
@@ -499,11 +567,18 @@ class TransformerLM:
         x = jnp.take(params["embed"], tokens[:, None], axis=0
                      ).astype(_dtype(cfg))
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        # the decode shape of the flash→wo fusion (the cache attention +
+        # output projection in one kernel, per-slot pos frontiers): on
+        # the Pallas execution path whenever the policy fuses — wo is a
+        # single matrix, so unlike qkv/wig it needs no layout plan
+        fuse_wo = (self.par.use_pallas_attn and self.policy.fuses()
+                   and cfg.num_heads > 0)
 
         def body(h, layer):
             layer_params, kv = layer
             h, new_kv = block_decode(layer_params, h, cfg, kv, pos, ctx,
-                                     int8=int8, policy=self.policy)
+                                     int8=int8, policy=self.policy,
+                                     fuse_wo=fuse_wo)
             return h, new_kv
 
         if int8:

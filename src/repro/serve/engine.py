@@ -71,6 +71,13 @@ class BatchedEngine:
             model = model.with_policy(policy)
         self.model = model
         self.policy = getattr(model, "policy", None)
+        # The layout the model's policy planned (models/config.ParamLayout).
+        # The decode tick's q/k/v and ln2→[wi|wg] fusions activate only
+        # when ``params`` actually carries the concatenated tensors —
+        # block_decode inspects the pytree, so serving legacy params under
+        # a fusing policy degrades gracefully to the PR 4 tick instead of
+        # paying a per-token weight-concat tax.
+        self.param_layout = getattr(model, "param_layout", None)
         self.params = params
         self.cfg = cfg
         b = cfg.batch_slots

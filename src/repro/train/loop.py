@@ -92,8 +92,13 @@ def train_loop(step_fn: Callable, params, opt_state,
                start_step: int = 0,
                metrics_sink: Optional[Callable[[int, Dict], None]] = None,
                preemption: Optional[PreemptionGuard] = None,
-               batch_put: Optional[Callable] = None):
-    """Run until total_steps or preemption.  Returns final state + report."""
+               batch_put: Optional[Callable] = None,
+               save_extra: Optional[Dict[str, Any]] = None):
+    """Run until total_steps or preemption.  Returns final state + report.
+
+    ``save_extra`` is merged into every checkpoint's ``extra`` manifest
+    record — how launch code threads run metadata (notably the model's
+    ``param_layout`` plan) into the train→serve handoff."""
     monitor = StragglerMonitor(loop_cfg.straggler_factor,
                                loop_cfg.ewma_alpha)
     guard = preemption or PreemptionGuard(install=False)
@@ -121,7 +126,7 @@ def train_loop(step_fn: Callable, params, opt_state,
         step += 1
         if ckpt and step % loop_cfg.checkpoint_every == 0:
             ckpt.save(step, {"params": params, "opt_state": opt_state},
-                      extra={"data": dataset.state()},
+                      extra={"data": dataset.state(), **(save_extra or {})},
                       blocking=not loop_cfg.async_checkpoint)
 
     if ckpt:
@@ -129,7 +134,8 @@ def train_loop(step_fn: Callable, params, opt_state,
         if guard.requested or step % loop_cfg.checkpoint_every:
             ckpt.save(step, {"params": params, "opt_state": opt_state},
                       extra={"data": dataset.state(),
-                             "preempted": guard.requested},
+                             "preempted": guard.requested,
+                             **(save_extra or {})},
                       blocking=True)
     report = {
         "final_step": step,

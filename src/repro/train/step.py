@@ -102,6 +102,11 @@ def _train_shardings(model, opt_cfg: OptConfig, ctx: Optional[ShardCtx]):
         "opt_state": opt_sh,
         "batch_leaf": batch_sh,
         "metrics": metric_sh,
+        # layout metadata rides next to the sharding trees so the
+        # train→serve handoff (launch code, checkpoint extra) preserves
+        # the init-time ParamLayout decision — param_specs above already
+        # describe the planned (possibly concatenated) leaves
+        "param_layout": getattr(model, "param_layout", None),
     }
 
 

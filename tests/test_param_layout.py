@@ -1,0 +1,334 @@
+"""ISSUE 5: fusion-legal parameter layouts end-to-end.
+
+Pins the layout subsystem at every layer it crosses:
+
+- the ``ParamLayout`` planner (policy-driven, init-time);
+- the layout-agnostic accessors (either stored layout, same numbers);
+- decode-legality: the decode tick fuses exactly when the concatenated
+  tensor is *persisted* (zero weight-traffic overhead), and stays on the
+  PR 4 unfused path for legacy params;
+- structural pinning: the fused decode rows save exactly the activation
+  round trip — no weight term appears or disappears;
+- checkpoint migration: legacy -> concat -> legacy is bitwise on weights,
+  both through ``restore`` templates and ``save(migrate_to=)``;
+- the jit-cache-key fix: two policies at identical shapes bind *their
+  own* dialect's staging plans (plan_dialect is a static kernel arg).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, layout_of, migrate_layout
+from repro.core.registry import REGISTRY, ExecutionPolicy
+from repro.kernels import ops as kernel_ops
+from repro.models import build_model, common, mlp, transformer
+from repro.models.config import (LEGACY_LAYOUT, ModelConfig, MoEConfig,
+                                 ParallelConfig, ParamLayout)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tiny_cfg(**kw):
+    base = dict(name="t", family="dense", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256,
+                dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def models_pair(cfg=None):
+    """(legacy-layout model, concat-layout model) over the same config."""
+    cfg = cfg or tiny_cfg()
+    plain = build_model(cfg, ParallelConfig(remat="none"))
+    fused = build_model(cfg, ParallelConfig(remat="none",
+                                            fuse_epilogues=True))
+    return plain, fused
+
+
+class TestPlanner:
+    def test_default_policy_plans_legacy(self):
+        plain, fused = models_pair()
+        assert plain.param_layout == LEGACY_LAYOUT
+        assert fused.param_layout == ParamLayout(attn_qkv=True,
+                                                 mlp_swiglu=True)
+
+    def test_auto_mode_plans_concat(self):
+        cfg = tiny_cfg()
+        m = build_model(cfg, ParallelConfig(remat="none", isa_mode="auto"))
+        assert m.param_layout.attn_qkv and m.param_layout.mlp_swiglu
+
+    def test_gelu_gets_no_swiglu_tensor(self):
+        cfg = tiny_cfg(act="gelu")
+        m = build_model(cfg, ParallelConfig(remat="none",
+                                            fuse_epilogues=True))
+        assert m.param_layout.attn_qkv and not m.param_layout.mlp_swiglu
+        p = m.init_params(KEY)
+        assert "wig" not in p["blocks"]["mlp"]
+        assert "wqkv" in p["blocks"]["attn"]
+
+    def test_layernorm_stays_legacy(self):
+        cfg = tiny_cfg(norm="layernorm")
+        m = build_model(cfg, ParallelConfig(remat="none",
+                                            fuse_epilogues=True))
+        assert m.param_layout == LEGACY_LAYOUT
+
+    def test_specs_follow_the_layout(self):
+        plain, fused = models_pair()
+        legacy_specs = plain.param_specs()["blocks"]["attn"]
+        concat_specs = fused.param_specs()["blocks"]["attn"]
+        assert "wq" in legacy_specs and "wqkv" not in legacy_specs
+        assert "wqkv" in concat_specs and "wq" not in concat_specs
+
+
+class TestAccessors:
+    def test_same_seed_same_weights_either_layout(self):
+        cfg = tiny_cfg()
+        legacy, _ = transformer.init_attn(KEY, cfg, jnp.float32)
+        concat, _ = transformer.init_attn(
+            KEY, cfg, jnp.float32, ParamLayout(attn_qkv=True))
+        widths = transformer._qkv_widths(cfg)
+        for got, want in zip(
+                common.split_param(concat, "wqkv", ("wq", "wk", "wv"),
+                                   widths),
+                (legacy["wq"], legacy["wk"], legacy["wv"])):
+            assert jnp.array_equal(got, want)
+        cat = common.concat_param(legacy, "wqkv", ("wq", "wk", "wv"))
+        assert jnp.array_equal(cat, concat["wqkv"])
+
+    def test_stored_concat_gate(self):
+        cfg = tiny_cfg()
+        legacy, _ = mlp.init_mlp(KEY, cfg.d_model, cfg.d_ff, "silu",
+                                 jnp.float32)
+        concat, _ = mlp.init_mlp(KEY, cfg.d_model, cfg.d_ff, "silu",
+                                 jnp.float32,
+                                 ParamLayout(mlp_swiglu=True))
+        assert not common.stored_concat(legacy, "wig")
+        assert common.stored_concat(concat, "wig")
+        wi, wg = mlp._wi_wg(concat)
+        assert jnp.array_equal(wi, legacy["wi"])
+        assert jnp.array_equal(wg, legacy["wg"])
+
+
+def _greedy_decode(model, params, prompt, steps=4, cache_len=16):
+    toks = jnp.asarray(prompt, jnp.int32)[None, :]
+    logits, cache = model.prefill(params, {"tokens": toks})
+    pad = cache_len - cache["k"].shape[3]
+    cache = {"k": jnp.pad(cache["k"], ((0, 0),) * 3 + ((0, pad), (0, 0))),
+             "v": jnp.pad(cache["v"], ((0, 0),) * 3 + ((0, pad), (0, 0))),
+             "pos": cache["pos"]}
+    out = [int(jnp.argmax(logits[0]))]
+    for _ in range(steps):
+        lg, cache = model.decode_step(
+            params, jnp.asarray([out[-1]], jnp.int32), cache)
+        out.append(int(jnp.argmax(lg[0])))
+    return out
+
+
+class TestDecodeLayoutEquivalence:
+    """Every (policy, stored layout) quadrant decodes the same tokens —
+    including the all-fusions-on concat quadrant with the Pallas decode
+    attention epilogue."""
+
+    @pytest.mark.parametrize("cfg", [
+        tiny_cfg(),
+        tiny_cfg(name="moe-shared", family="moe",
+                 moe=MoEConfig(num_experts=4, top_k=1, group_size=64,
+                               shared_experts=1)),
+    ], ids=["dense", "moe-shared"])
+    def test_quadrants_match(self, cfg):
+        plain, fused = models_pair(cfg)
+        pallas = build_model(cfg, ParallelConfig(
+            remat="none", fuse_epilogues=True, use_pallas_attn=True))
+        p_legacy = plain.init_params(KEY)
+        p_concat = fused.init_params(KEY)
+        prompt = [3, 5, 7]
+        want = _greedy_decode(plain, p_legacy, prompt)
+        assert _greedy_decode(plain, p_concat, prompt) == want
+        assert _greedy_decode(fused, p_legacy, prompt) == want
+        assert _greedy_decode(fused, p_concat, prompt) == want
+        assert _greedy_decode(pallas, p_concat, prompt) == want
+
+    def test_decode_fusion_gates_on_persisted_layout(self, monkeypatch):
+        """Concat params fuse q/k/v + swiglu at decode; legacy params
+        keep the PR 4 unfused decode (the per-call concat tax is a net
+        loss at decode rows, so the gate must stay shut)."""
+        cfg = tiny_cfg()
+        plain, fused = models_pair(cfg)
+        p_legacy = plain.init_params(KEY)
+        p_concat = fused.init_params(KEY)
+        calls = []
+        for name in ("fused_rmsnorm_matmul", "fused_rmsnorm_swiglu"):
+            orig = getattr(kernel_ops, name)
+            def spy(*a, _name=name, _orig=orig, **k):
+                calls.append(_name)
+                return _orig(*a, **k)
+            monkeypatch.setattr(kernel_ops, name, spy)
+
+        cache = plain.init_cache(1, 8)
+        kv = (cache["k"][0], cache["v"][0])      # layer 0: [B,Hkv,S,hd]
+        x_t = jnp.zeros((1, 1, cfg.d_model), jnp.float32)
+        pos = jnp.zeros((1,), jnp.int32)
+        block_legacy = jax.tree.map(lambda a: a[0], p_legacy["blocks"])
+        block_concat = jax.tree.map(lambda a: a[0], p_concat["blocks"])
+
+        transformer.block_decode(block_legacy, x_t, cfg, kv, pos, None,
+                                 policy=fused.policy)
+        assert calls == []          # legacy layout: gates shut (PR 4)
+        transformer.block_decode(block_concat, x_t, cfg, kv, pos, None,
+                                 policy=fused.policy)
+        assert "fused_rmsnorm_matmul" in calls      # q/k/v prologue
+        assert "fused_rmsnorm_swiglu" in calls      # ln2 -> [wi|wg]
+
+
+class TestDecodeStructuralCost:
+    """The decode-shaped fused rows save exactly one activation round
+    trip — zero weight-traffic overhead vs the unfused decode path (the
+    weight term appears identically on both sides and cancels)."""
+
+    @pytest.mark.parametrize("rows", [1, 8, 128])
+    def test_qkv_prologue_saving_is_activation_only(self, rows):
+        d, n = 1024, 3 * 1024
+        itemsize = 4
+        for mode in REGISTRY.modes("rmsnorm_matmul"):
+            cost = REGISTRY.structural_cost("rmsnorm_matmul", mode,
+                                            rows=rows, d=d, n=n)
+            saved = cost["hbm_bytes_unfused_pair"] - cost["hbm_bytes"]
+            if mode == "library":
+                assert saved == 0
+            else:
+                assert saved == 2 * rows * d * itemsize
+                # scale-invariance of the weight term: the saving never
+                # grows with the weight size (d*n), only with rows*d
+                assert saved < d * n * itemsize
+
+    @pytest.mark.parametrize("rows", [1, 8, 128])
+    def test_swiglu_saving_is_activation_only(self, rows):
+        d = f = 1024
+        itemsize = 4
+        for mode in REGISTRY.modes("rmsnorm_swiglu"):
+            cost = REGISTRY.structural_cost("rmsnorm_swiglu", mode,
+                                            rows=rows, d=d, f=f)
+            saved = cost["hbm_bytes_unfused_pair"] - cost["hbm_bytes"]
+            assert saved == (0 if mode == "library"
+                             else 2 * rows * d * itemsize)
+
+    def test_decode_attention_epilogue_saving(self):
+        b, h, skv, d, n = 128, 8, 32768, 128, 1024
+        itemsize = 4
+        for mode in REGISTRY.modes("flash_attention_matmul"):
+            cost = REGISTRY.structural_cost(
+                "flash_attention_matmul", mode, b=b, h=h, sq=1, skv=skv,
+                d=d, n=n, causal=False)
+            saved = cost["hbm_bytes_unfused_pair"] - cost["hbm_bytes"]
+            assert saved == (0 if mode == "library"
+                             else 2 * b * 1 * h * d * itemsize)
+
+    def test_fused_decode_beats_unfused_pair(self):
+        """At the serve tick's shapes the fused rows are strictly cheaper
+        in HBM bytes than the unfused pair they replace."""
+        for op, shape in (("rmsnorm_matmul", dict(rows=128, d=1024,
+                                                  n=3072)),
+                          ("rmsnorm_swiglu", dict(rows=128, d=1024,
+                                                  f=1024)),
+                          ("flash_attention_matmul",
+                           dict(b=128, h=8, sq=1, skv=32768, d=128,
+                                n=1024, causal=False))):
+            cost = REGISTRY.structural_cost(op, "native", **shape)
+            assert cost["hbm_bytes"] < cost["hbm_bytes_unfused_pair"], op
+
+
+class TestCheckpointMigration:
+    def test_round_trip_bitwise(self, tmp_path):
+        plain, fused = models_pair()
+        p_legacy = plain.init_params(jax.random.PRNGKey(7))
+        ck = CheckpointManager(str(tmp_path))
+        ck.save(0, p_legacy)
+        assert ck.manifest(0)["param_layout"] == "legacy"
+
+        tmpl_c = jax.eval_shape(fused.init_params, KEY)
+        p_concat = ck.restore(0, tmpl_c)           # legacy -> concat
+        assert "wqkv" in p_concat["blocks"]["attn"]
+        ck.save(1, p_concat)
+        assert ck.manifest(1)["param_layout"] == "concat"
+
+        tmpl_l = jax.eval_shape(plain.init_params, KEY)
+        p_back = ck.restore(1, tmpl_l)             # concat -> legacy
+        for a, b in zip(jax.tree_util.tree_leaves(p_legacy),
+                        jax.tree_util.tree_leaves(p_back)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    def test_save_migrate_to_emits_legacy(self, tmp_path):
+        """A concat-layout process saves back out in per-matrix form."""
+        plain, fused = models_pair()
+        p_concat = fused.init_params(jax.random.PRNGKey(7))
+        tmpl_l = jax.eval_shape(plain.init_params, KEY)
+        ck = CheckpointManager(str(tmp_path))
+        ck.save(0, p_concat, migrate_to=tmpl_l)
+        assert ck.manifest(0)["param_layout"] == "legacy"
+        restored = ck.restore(0, tmpl_l)
+        want = plain.init_params(jax.random.PRNGKey(7))
+        for a, b in zip(jax.tree_util.tree_leaves(want),
+                        jax.tree_util.tree_leaves(restored)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    def test_migrate_layout_rejects_width_mismatch(self):
+        flat = {"blocks/attn/wqkv": np.zeros((4, 10), np.float32)}
+        shapes = {"blocks/attn/wq": (4, 4), "blocks/attn/wk": (4, 4),
+                  "blocks/attn/wv": (4, 4)}
+        with pytest.raises(ValueError):
+            migrate_layout(flat, shapes)
+
+    def test_layout_of(self):
+        assert layout_of(["blocks/attn/wq", "embed"]) == "legacy"
+        assert layout_of(["blocks/attn/wqkv"]) == "concat"
+        assert layout_of(["blocks/mlp/wig"]) == "concat"
+
+    def test_train_shardings_carry_layout(self):
+        """train/step.py threads the layout plan next to the sharding
+        trees (train->serve handoff metadata)."""
+        from repro.train.step import _train_shardings
+        _, fused = models_pair()
+        # no mesh: shardings are None and the layout rides on the model
+        assert _train_shardings(fused, None, None) is None
+        assert dataclasses.asdict(fused.param_layout) == {
+            "attn_qkv": True, "mlp_swiglu": True}
+
+
+class TestMixedDialectPlans:
+    """The PR 4 jit-cache-key gap, closed: two policies at identical
+    shapes bind *different* staging plans because plan_dialect is a
+    static kernel argument (part of the jit cache key)."""
+
+    def test_two_dialects_two_plans_one_shape(self, monkeypatch):
+        from repro.kernels import rmsnorm as rms_mod
+        records = []
+        orig = rms_mod.tuned_plan
+
+        def spy(op, rows, rb, **kw):
+            plan = orig(op, rows, rb, **kw)
+            records.append((kw.get("dialect"), plan.block_rows))
+            return plan
+
+        monkeypatch.setattr(rms_mod, "tuned_plan", spy)
+        # a shape no other test traces, so both policies trace freshly
+        x = jax.random.normal(KEY, (88, 2048), jnp.float32)
+        w = jnp.ones((2048,), jnp.float32)
+        pol_a = ExecutionPolicy(mode="abstract", dialect="tpu-v5e")
+        pol_b = ExecutionPolicy(mode="abstract",
+                                dialect="uisa-universal10")
+        out_a = kernel_ops.rmsnorm(x, w, policy=pol_a)
+        out_b = kernel_ops.rmsnorm(x, w, policy=pol_b)
+        assert len(records) == 2
+        (dial_a, block_a), (dial_b, block_b) = records
+        assert dial_a == "tpu-v5e" and dial_b == "uisa-universal10"
+        # identical shapes, different staging plans — the foreign
+        # dialect's 48 KB scratchpad forces a smaller row block
+        assert block_a != block_b
+        # numerics are plan-invariant
+        assert jnp.allclose(out_a, out_b, atol=1e-5)
+        # the same policy again is a cache hit: no retrace, no new plan
+        kernel_ops.rmsnorm(x, w, policy=pol_a)
+        assert len(records) == 2

@@ -66,8 +66,17 @@ class TestRegistration:
                               lambda *a, **k: None)
 
     def test_duplicate_registration_rejected(self, scratch_op):
-        REGISTRY.register(scratch_op, IsaMode.LIBRARY, lambda x: x)
+        REGISTRY.register(scratch_op, IsaMode.LIBRARY,
+                          lambda x, **k: x)
         with pytest.raises(ValueError):
+            REGISTRY.register(scratch_op, IsaMode.LIBRARY,
+                              lambda x, **k: x)
+
+    def test_impl_must_accept_plan_dialect(self, scratch_op):
+        """The dispatch layer injects plan_dialect= into every impl call;
+        an impl that cannot take it fails at registration, not at first
+        dispatch."""
+        with pytest.raises(ContractViolation):
             REGISTRY.register(scratch_op, IsaMode.LIBRARY, lambda x: x)
 
     def test_all_kernels_registered(self):
@@ -119,9 +128,9 @@ class TestAutoSelection:
             primitives=frozenset({Primitive.LOCKSTEP_GROUP,
                                   Primitive.LANE_SHUFFLE}))
         REGISTRY.register(scratch_op, IsaMode.ABSTRACT_SHUFFLE,
-                          lambda x: ("shuffle", x), contract=contract)
+                          lambda x, **k: ("shuffle", x), contract=contract)
         REGISTRY.register(scratch_op, IsaMode.LIBRARY,
-                          lambda x: ("library", x))
+                          lambda x, **k: ("library", x))
         n0 = len(REGISTRY.fallback_events)
         with warnings.catch_warnings():
             warnings.simplefilter("ignore", LoweringFallbackWarning)

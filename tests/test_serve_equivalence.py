@@ -157,6 +157,37 @@ class TestFusionEquivalence:
         for r in got:
             assert r.generated == want[r.rid], r.rid
 
+    def test_all_three_fusions_on_concat_layout(self, model_and_params):
+        """ISSUE 5: with the persisted [wq|wk|wv]/[wi|wg] layout and the
+        Pallas decode attention epilogue, ALL THREE seq-path fusions
+        (q/k/v prologue, flash->wo, ln2->swiglu) are live inside the
+        decode tick — and the engine still emits token-for-token what the
+        unfused legacy engine emits."""
+        model, params, cfg = model_and_params
+        full = build_model(cfg, ParallelConfig(
+            remat="none", fuse_epilogues=True, use_pallas_attn=True))
+        assert full.param_layout.attn_qkv and full.param_layout.mlp_swiglu
+        # same seed, concatenated layout: identical weights, fused form
+        concat_params = full.init_params(KEY)
+        prompts = _prompts(cfg, 4)
+        max_news = [4, 7, 5, 6]
+
+        def run(m, p):
+            eng = BatchedEngine(m, p, ServeConfig(
+                batch_slots=2, max_seq_len=CACHE_LEN, eos_id=-1))
+            done = eng.run([Request(rid=i, prompt=pr, max_new_tokens=mx)
+                            for i, (pr, mx) in enumerate(zip(prompts,
+                                                             max_news))])
+            return done, eng
+
+        want = {r.rid: r.generated for r in run(model, params)[0]}
+        got, eng = run(full, concat_params)
+        assert eng.param_layout.attn_qkv            # engine surfaces it
+        assert eng.trace_count == 1                 # still ONE tick program
+        assert len(got) == 4
+        for r in got:
+            assert r.generated == want[r.rid], r.rid
+
     def test_fused_tick_stays_one_compiled_program(self, model_and_params):
         """Fusion must not break the host-sync-free tick: still exactly
         one trace across admissions and slot reuse."""
