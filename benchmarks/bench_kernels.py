@@ -111,6 +111,23 @@ def _cases(quick: bool):
     v_dec = jax.random.normal(kd[4], (b_att, h, s_att, hd), jnp.float32)
     pos_dec = jax.random.randint(kd[5], (b_att,), 0, s_att, jnp.int32)
 
+    # paged decode streams (ISSUE 6): same op through a page pool + block
+    # table at the same (b_att, s_att) capacity, but with half-occupied
+    # frontiers and sentinel dead entries — the recorded shape carries the
+    # host-computed occupancy so the structural columns (and --compare's
+    # recompute) account HBM by *occupied* pages, not capacity
+    page = 128
+    maxp = s_att // page
+    occ = max(maxp // 2, 1)              # occupied pages per slot
+    n_pool = b_att * maxp
+    kpg = jax.random.split(jax.random.fold_in(KEY, 3), 2)
+    k_pg = jax.random.normal(kpg[0], (n_pool, h, page, hd), jnp.float32)
+    v_pg = jax.random.normal(kpg[1], (n_pool, h, page, hd), jnp.float32)
+    tbl_ids = jnp.arange(n_pool, dtype=jnp.int32).reshape(b_att, maxp)
+    tbl_pg = jnp.where(jnp.arange(maxp)[None, :] < occ, tbl_ids, n_pool)
+    pos_pg = jnp.full((b_att,), occ * page - 1, jnp.int32)
+    pages_occ = b_att * occ
+
     cases = [
         ("reduction", "seq",
          lambda mode: ops.reduce_sum(x_red, mode=mode),
@@ -170,6 +187,16 @@ def _cases(quick: bool):
              pos=pos_dec),
          dict(b=b_att, h=h, sq=1, skv=s_att, d=hd, n=n_wo, causal=False,
               block_kv=blk)),
+        # paged decode (ISSUE 6): block-table gather, dead-entry skip;
+        # hbm_bytes scales with pages_occupied rather than max_len —
+        # compare() gates this row's hbm below the dense decode row's
+        ("flash_attention_matmul", "decode_paged",
+         lambda mode: ops.fused_flash_attention_matmul(
+             q_dec, k_pg, v_pg, w_o, mode=mode, pos=pos_pg,
+             block_tables=tbl_pg),
+         dict(b=b_att, h=h, sq=1, skv=maxp * page, d=hd, n=n_wo,
+              causal=False, block_kv=page, page_size=page,
+              pages_occupied=pages_occ)),
     ]
     return cases, warmup, iters
 
@@ -245,6 +272,9 @@ def compare(old: dict, new: dict, threshold: float = 1.5) -> list:
     3. timing — only when both runs share (backend, quick, interpret)
        and the row shapes match: new median must stay under
        ``threshold × old median``.
+    Plus a cross-row invariant on the new run alone: every
+    ``decode_paged`` row's modeled HBM must stay below its mode's dense
+    ``decode`` row — the occupied-page traffic saving paging exists for.
     """
     failures = []
     new_matrix = new["meta"]["matrix"]
@@ -292,6 +322,22 @@ def compare(old: dict, new: dict, threshold: float = 1.5) -> list:
                     f"{r['median_s'] * 1e3:.2f} -> "
                     f"{nr['median_s'] * 1e3:.2f} ms "
                     f"({ratio:.2f}x > {threshold}x)")
+    # paged-vs-dense consistency gate (ISSUE 6): whenever both decode
+    # regimes are present in the new run, the paged row's modeled HBM
+    # must undercut the dense row's for the same mode — the block-table
+    # walk only pays for occupied pages, and losing that saving is a
+    # regression even when every row individually "improved"
+    for (kernel, mode, case), nr in new_rows.items():
+        if case != "decode_paged":
+            continue
+        dense = new_rows.get((kernel, mode, "decode"))
+        if dense is None:
+            continue
+        if nr["hbm_bytes"] >= dense["hbm_bytes"]:
+            failures.append(
+                f"{kernel}[{mode}]: paged decode hbm_bytes "
+                f"{nr['hbm_bytes']} not below dense decode "
+                f"{dense['hbm_bytes']} — occupied-page saving lost")
     if deltas:
         print("\n[bench_kernels] timing deltas vs baseline:")
         print(fmt_table(["kernel", "case", "mode", "old_ms", "new_ms",

@@ -1,6 +1,13 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# (must precede jax import — see launch/dryrun.py)
+import sys
+
+# The 512-device host platform is for the collective profiler only; the
+# serve-stats mode runs a real tiny engine and must keep the default
+# single device.  (Either way this must precede jax import — see
+# launch/dryrun.py.)
+_SERVE_STATS = len(sys.argv) > 1 and sys.argv[1] == "serve-stats"
+if not _SERVE_STATS:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 """Per-op collective profile of one dry-run cell: the §Perf 'profiler'.
 
@@ -9,14 +16,16 @@ shapes — the evidence the hypothesis loop needs.
 
   PYTHONPATH=src python scripts/profile_cell.py qwen3-32b prefill_32k \\
       single [key=value par overrides...]
+
+A second mode surfaces the paged serve engine's device-resident tick
+stats (occupied pages, pool utilization, shared-prefix hits — harvested
+in sync(), zero per-tick transfers):
+
+  PYTHONPATH=src python scripts/profile_cell.py serve-stats \\
+      [page_size=8 num_pages=24 ticks=12]
 """
 import json
-import sys
 from collections import defaultdict
-
-from repro.launch import cells as cells_lib
-from repro.launch.mesh import make_production_mesh
-from repro.roofline.hlo_parser import HloModule
 
 
 def parse_overrides(args):
@@ -31,7 +40,59 @@ def parse_overrides(args):
     return out
 
 
+def serve_stats(overrides):
+    """Run a tiny paged engine for a few ticks and print the per-tick
+    stats table sync() harvested — the observability surface of the
+    paged KV cache (pool occupancy is what replaces per-slot capacity
+    as the admission currency)."""
+    import jax
+    from repro.models import build_model
+    from repro.models.config import ModelConfig, ParallelConfig
+    from repro.serve import BatchedEngine, Request, ServeConfig
+
+    page_size = overrides.get("page_size", 8)
+    ticks = overrides.get("ticks", 12)
+    cfg = ModelConfig(name="tiny", family="dense", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=128, dtype="float32")
+    model = build_model(cfg, ParallelConfig(remat="none"))
+    params = model.init_params(jax.random.PRNGKey(0))
+    scfg = ServeConfig(batch_slots=4, max_seq_len=64, eos_id=-1,
+                       page_size=page_size,
+                       num_pages=overrides.get("num_pages", 24))
+    eng = BatchedEngine(model, params, scfg)
+
+    shared = list(range(2, 2 + 2 * page_size))   # common "system prompt"
+    reqs = [Request(rid=i, prompt=shared + [20 + i, 21 + i],
+                    max_new_tokens=6) for i in range(4)]
+    eng.admit(reqs)
+    for _ in range(ticks):
+        eng.step()
+    eng.sync()
+
+    print(f"serve-stats page_size={page_size} num_pages={eng.num_pages} "
+          f"slots={scfg.batch_slots} ticks={eng.tick_count}")
+    hdr = ("tick", "live_slots", "frontier_pages", "pool_occupied",
+           "pool_util", "shared_hits")
+    print(f"{hdr[0]:>5s} {hdr[1]:>10s} {hdr[2]:>14s} {hdr[3]:>13s} "
+          f"{hdr[4]:>9s} {hdr[5]:>11s}")
+    for row in eng.tick_stats:
+        print(f"{row['tick']:5d} {row['live_slots']:10d} "
+              f"{row['frontier_pages']:14d} "
+              f"{row['pool_occupied_pages']:13d} "
+              f"{row['pool_utilization']:9.2f} "
+              f"{row['shared_prefix_hits']:11d}")
+
+
 def main():
+    if _SERVE_STATS:
+        serve_stats(parse_overrides(sys.argv[2:]))
+        return
+
+    from repro.launch import cells as cells_lib
+    from repro.launch.mesh import make_production_mesh
+    from repro.roofline.hlo_parser import HloModule
+
     arch, shape, mesh_kind = sys.argv[1:4]
     overrides = parse_overrides(sys.argv[4:])
     multi = mesh_kind == "multi"

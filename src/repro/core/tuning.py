@@ -546,7 +546,12 @@ CANONICAL_SHAPES: Dict[str, List[Dict[str, int]]] = {
                        dict(rows=128, d=1024, f=1024)],
     "flash_attention_matmul": [dict(sq=1024, skv=1024, d=64, n=256),
                                dict(sq=256, skv=256, d=64, n=128),
-                               dict(sq=1, skv=1024, d=64, n=256)],
+                               dict(sq=1, skv=1024, d=64, n=256),
+                               # paged decode frontiers (ISSUE 6): skv is
+                               # page-granular capacity — small (few live
+                               # pages) and large (deep block tables)
+                               dict(sq=1, skv=512, d=64, n=256),
+                               dict(sq=1, skv=4096, d=64, n=256)],
 }
 
 

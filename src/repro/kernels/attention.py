@@ -114,7 +114,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
                   red_ref, *, scale: float, causal: bool, kv_offset: int,
                   block_q: int, block_kv: int, n_kv: int, mode: str,
                   skip: bool, kv_len: int | None = None, q_axis: int = 2,
-                  kv_axis: int = 3, epilogue=None, pos_ref=None):
+                  kv_axis: int = 3, epilogue=None, pos_ref=None,
+                  skip_dead: bool = False):
     """One online-softmax block program.
 
     ``kv_len`` is the true (unpadded) kv length: when the sequence was
@@ -175,7 +176,15 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
             preferred_element_type=jnp.float32)
         m_ref[...] = m_cur
 
-    if causal and skip:
+    if skip_dead and pos_ref is not None:
+        # Paged decode: grid-level predication on the *traced* per-slot
+        # frontier — table entries whose first logical column lies past
+        # ``pos`` are dead (reserved-but-unreached or sentinel) and are
+        # skipped entirely, so the kv walk only visits live pages.
+        @pl.when(ki * block_kv <= pos_ref[0, 0])
+        def _():
+            body()
+    elif causal and skip:
         # Native: grid-level predication — skip blocks entirely above the
         # diagonal (first kv column of the block vs last q row).
         first_col = ki * block_kv

@@ -471,17 +471,24 @@ def resolve_attention_matmul_blocks(mode: str, sq: int, skv: int, d: int,
     return block_q, block_kv
 
 
-def _flash_matmul_kernel(q_ref, k_ref, v_ref, w_ref, *rest, scale: float,
+def _flash_matmul_kernel(*refs, scale: float,
                          causal: bool, kv_offset: int, block_q: int,
                          block_kv: int, n_kv: int, n_heads: int,
-                         kv_len: int, mode: str, has_pos: bool = False):
-    if has_pos:
+                         kv_len: int | None, mode: str,
+                         has_pos: bool = False, paged: bool = False):
+    if paged:
+        # paged decode shape: the block table is the scalar-prefetch
+        # operand (consumed entirely by the kv index maps — the gather);
+        # the per-slot frontier rides in as the (1, 1) pos block.
+        _tbl_ref, q_ref, k_ref, v_ref, w_ref, pos_ref, *rest = refs
+    elif has_pos:
         # decode shape: the per-sequence cache frontier rides in as a
         # (1, 1) int32 block and replaces the static causal triangle
-        pos_ref, o_ref, m_ref, l_ref, acc_ref, red_ref, oacc_ref = rest
+        q_ref, k_ref, v_ref, w_ref, pos_ref, *rest = refs
     else:
+        q_ref, k_ref, v_ref, w_ref, *rest = refs
         pos_ref = None
-        o_ref, m_ref, l_ref, acc_ref, red_ref, oacc_ref = rest
+    o_ref, m_ref, l_ref, acc_ref, red_ref, oacc_ref = rest
     hh = pl.program_id(2)
 
     def epilogue(out):
@@ -511,7 +518,7 @@ def _flash_matmul_kernel(q_ref, k_ref, v_ref, w_ref, *rest, scale: float,
         scale=scale, causal=causal, kv_offset=kv_offset, block_q=block_q,
         block_kv=block_kv, n_kv=n_kv, mode=mode,
         skip=(mode == "native" and causal), kv_len=kv_len, q_axis=1,
-        kv_axis=3, epilogue=epilogue, pos_ref=pos_ref)
+        kv_axis=3, epilogue=epilogue, pos_ref=pos_ref, skip_dead=paged)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -524,6 +531,7 @@ def flash_attention_matmul(q: jax.Array, k: jax.Array, v: jax.Array,
                            block_q: int | None = None,
                            block_kv: int | None = None,
                            pos: jax.Array | None = None,
+                           block_tables: jax.Array | None = None,
                            plan_dialect: str | None = None) -> jax.Array:
     """``flash_attention(q, k, v)`` -> ``wo`` projection in one kernel.
 
@@ -540,7 +548,21 @@ def flash_attention_matmul(q: jax.Array, k: jax.Array, v: jax.Array,
     static causal triangle — how the serve tick, whose batch mixes slot
     positions, runs this fusion against the KV cache.  ``plan_dialect``
     (static) pins the tuned-table slice the trace binds.
+
+    ``block_tables`` is the *paged* decode shape: k/v become page pools
+    ``[P, Hkv, page_size, D]`` and ``block_tables`` a [B, max_pages]
+    int32 table mapping each slot's logical kv blocks to pool pages
+    (entries past the slot's reservation hold the sentinel ``P``).  The
+    table rides as a scalar-prefetch operand so the sequential kv grid
+    walks table entries instead of a contiguous strip, and a ``pl.when``
+    on the ``pos`` frontier skips dead blocks entirely — the kernel only
+    ever visits live pages.  Requires ``pos``; ``causal`` is ignored.
     """
+    if block_tables is not None:
+        return _paged_attention_matmul(
+            q, k, v, w_out, block_tables=block_tables, pos=pos, mode=mode,
+            interpret=interpret, block_q=block_q,
+            plan_dialect=plan_dialect)
     b, h, sq, d = q.shape
     _, hkv, skv, _ = k.shape
     assert h % hkv == 0, (h, hkv)
@@ -625,10 +647,111 @@ def flash_attention_matmul(q: jax.Array, k: jax.Array, v: jax.Array,
     return out[:, :sq, :n]
 
 
+def _paged_attention_matmul(q, k_pages, v_pages, w_out, *, block_tables,
+                            pos, mode: str, interpret: bool,
+                            block_q: int | None,
+                            plan_dialect: str | None):
+    """The paged decode lowering of ``flash_attention_matmul``.
+
+    The kv grid dimension indexes *table entries*: the block table is a
+    scalar-prefetch operand, so each kv step's index map gathers page
+    ``block_tables[b, ki]`` straight out of the pool — no contiguous
+    strip is ever materialized.  ``block_kv`` IS ``page_size``.  Sentinel
+    entries clamp onto a real page whose contents the ``pos`` mask hides,
+    and the ``skip_dead`` predicate in the shared flash kernel skips
+    every block past the frontier before it computes anything.
+    """
+    if pos is None:
+        raise ValueError("paged flash_attention_matmul requires the "
+                         "per-slot pos frontier")
+    b, h, sq, d = q.shape
+    num_pages, hkv, page_size, _ = k_pages.shape
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    assert w_out.shape[0] == h * d, (w_out.shape, h, d)
+    n = w_out.shape[1]
+    maxp = block_tables.shape[1]
+    skv = maxp * page_size
+    tbl = jnp.minimum(block_tables, num_pages - 1).astype(jnp.int32)
+    if mode == "library":
+        # the unfused pair: gather the logical strip, masked softmax over
+        # the frontier, then wo — the dense decode library row applied to
+        # the gathered pages (models/attention.py::gather_paged_kv math).
+        def strip(pages):
+            s = pages[tbl]                     # [B, maxp, Hkv, ps, D]
+            return s.transpose(0, 2, 1, 3, 4).reshape(b, hkv, skv, d)
+        return flash_attention_matmul(
+            q, strip(k_pages), strip(v_pages), w_out, causal=False,
+            mode="library", interpret=interpret, pos=pos,
+            plan_dialect=plan_dialect)
+    if page_size % LANES != 0 and mode != "native":
+        raise ValueError(
+            f"paged decode under mode={mode!r} needs page_size to be a "
+            f"multiple of {LANES} (the abstract row reduces fold into "
+            f"{LANES}-lane vregs); got page_size={page_size}")
+    scale = 1.0 / (d ** 0.5)
+    bq, _ = resolve_attention_matmul_blocks(mode, sq, skv, d, n, block_q,
+                                            page_size, plan_dialect)
+    q_p = _attention._pad_seq(q, bq)
+    sqp = q_p.shape[2]
+    n_p = align_up(n, 128)
+    w3 = w_out.reshape(h, d, n)
+    if n_p != n:
+        w3 = jnp.pad(w3, ((0, 0), (0, 0), (0, n_p - n)))
+    grid = (b, sqp // bq, h, maxp)
+
+    params = None
+    if mode == "native":
+        params = CompilerParams(dimension_semantics=(
+            "parallel", "parallel", "arbitrary", "arbitrary"))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d),
+                         lambda bb, qi, hh, ki, tr: (bb, hh, qi, 0)),
+            pl.BlockSpec((1, 1, page_size, d),
+                         lambda bb, qi, hh, ki, tr, g=group:
+                         (tr[bb, ki], hh // g, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, d),
+                         lambda bb, qi, hh, ki, tr, g=group:
+                         (tr[bb, ki], hh // g, 0, 0)),
+            pl.BlockSpec((1, d, n_p),
+                         lambda bb, qi, hh, ki, tr: (hh, 0, 0)),
+            pl.BlockSpec((1, 1), lambda bb, qi, hh, ki, tr: (bb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, n_p),
+                               lambda bb, qi, hh, ki, tr: (bb, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),           # m
+            pltpu.VMEM((bq, 1), jnp.float32),           # l
+            pltpu.VMEM((bq, d), jnp.float32),           # acc
+            pltpu.VMEM((bq, LANES) if mode == "abstract"
+                       else (8, LANES), jnp.float32),
+            pltpu.VMEM((bq, n_p), jnp.float32),         # cross-head acc
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_matmul_kernel, scale=scale, causal=False, kv_offset=0,
+            block_q=bq, block_kv=page_size, n_kv=maxp, n_heads=h,
+            kv_len=None, mode=mode, has_pos=True, paged=True),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, sqp, n_p), q.dtype),
+        compiler_params=params,
+        interpret=interpret,
+        name=f"uisa_paged_attention_matmul_{mode.replace('+', '_')}",
+    )(tbl, q_p, k_pages, v_pages, w3,
+      pos.reshape(b, 1).astype(jnp.int32))
+    return out[:, :sq, :n]
+
+
 def structural_cost_flash_attention_matmul(
         b: int, h: int, sq: int, skv: int, d: int, n: int, causal: bool,
         mode: str, block_q=None, block_kv=None, dtype=jnp.float32,
-        plan_dialect: str | None = None) -> dict:
+        plan_dialect: str | None = None, page_size: int | None = None,
+        pages_occupied: int | None = None) -> dict:
     """The unfused pair's traffic minus exactly one ``[B,S,H,D]`` trip.
 
     Composes the registered ``flash_attention`` and ``gemm`` cost models
@@ -636,8 +759,21 @@ def structural_cost_flash_attention_matmul(
     attention output (``2·B·S·H·D·itemsize``) — the two legs of the
     staging the epilogue hook eliminates.  The kernel-describing columns
     (visited blocks, scratch traffic) come from attention's visited-block
-    model evaluated at *this* lowering's resolved tiling."""
+    model evaluated at *this* lowering's resolved tiling.
+
+    The paged decode shape (``page_size`` set) swaps the kv traffic term:
+    the kernel gathers *pages* through the block table and the
+    ``skip_dead`` predicate never visits a block past the frontier, so
+    its kv bytes scale with ``pages_occupied`` (live pages across the
+    batch; default ``b · ceil(skv / page_size)``, the fully-occupied
+    worst case used for static auto-selection) — **not** with the
+    ``max_len`` capacity a dense strip would stream."""
     itemsize = jnp.dtype(dtype).itemsize
+    if page_size is not None:
+        return _structural_cost_paged(
+            b=b, h=h, sq=sq, skv=skv, d=d, n=n, mode=mode, block_q=block_q,
+            dtype=dtype, plan_dialect=plan_dialect, page_size=page_size,
+            pages_occupied=pages_occupied)
     if mode == "library":
         bq, bkv = 256, 256
     else:
@@ -667,6 +803,67 @@ def structural_cost_flash_attention_matmul(
         "scratch_bytes_total": att["scratch_bytes_total"],
         "lane_shuffles_per_block": att["lane_shuffles_per_block"],
         "fused_epilogue": mode != "library",
+    }
+
+
+def _structural_cost_paged(*, b: int, h: int, sq: int, skv: int, d: int,
+                           n: int, mode: str, block_q, dtype,
+                           plan_dialect: str | None, page_size: int,
+                           pages_occupied: int | None) -> dict:
+    """Occupied-page accounting for the paged decode shape.
+
+    ``skv`` is the logical capacity (``max_pages · page_size``); the kv
+    stream term reads ``pages_occupied · page_size`` rows because the
+    table gather only touches live pages and ``skip_dead`` predication
+    skips the rest at the grid level.  Capacity (``skv``) appears in
+    ``blocks_total`` only — growing ``max_len`` with fixed occupancy
+    leaves ``hbm_bytes`` unchanged, which is the whole point of paging.
+    """
+    itemsize = jnp.dtype(dtype).itemsize
+    maxp = -(-skv // page_size)
+    total_pages = b * maxp
+    if pages_occupied is None:
+        pages_occupied = total_pages
+    pages_occupied = min(pages_occupied, total_pages)
+    if mode == "library":
+        bq = 256
+    else:
+        bq, _ = resolve_attention_matmul_blocks(mode, sq, skv, d, n,
+                                                block_q, page_size,
+                                                plan_dialect)
+    visited = h * pages_occupied        # every head walks live pages only
+    reduces_per_block = 2               # row-max + row-sum
+    if mode == "abstract":
+        round_trips = reduces_per_block * tree_stages(LANES)
+        scratch_bytes = (visited * reduces_per_block *
+                         scratch_tree_bytes(LANES, rows=bq))
+        shuffles = 0
+    elif mode == "abstract+shuffle":
+        round_trips, scratch_bytes = 0, 0
+        shuffles = reduces_per_block * tree_stages(LANES)
+    else:                               # native / library
+        round_trips, scratch_bytes, shuffles = 0, 0, 0
+    att_hbm = (h * d * (2 * b * sq + 2 * pages_occupied * page_size)
+               * itemsize)
+    g = _gemm.structural_cost(m=b * sq, n=n, k=h * d, mode=mode,
+                              dtype=dtype, plan_dialect=plan_dialect)
+    unfused = att_hbm + g["hbm_bytes"]
+    saved = 0 if mode == "library" else 2 * b * sq * h * d * itemsize
+    return {
+        "hbm_bytes": unfused - saved,
+        "hbm_bytes_unfused_pair": unfused,
+        "hbm_bytes_saved": saved,
+        "flops": visited * 4 * bq * page_size * d + g["flops"],
+        "block": (bq, page_size),
+        "blocks_visited": visited,
+        "blocks_total": h * total_pages,
+        "skip_fraction": 1.0 - pages_occupied / total_pages,
+        "scratch_round_trips_per_block": round_trips,
+        "scratch_bytes_total": scratch_bytes,
+        "lane_shuffles_per_block": shuffles,
+        "fused_epilogue": mode != "library",
+        "page_size": page_size,
+        "pages_occupied": pages_occupied,
     }
 
 
@@ -860,11 +1057,13 @@ def _add_rmsnorm_library(x, residual, weight, *, eps: float = 1e-6,
 def _flash_attention_matmul_library(q, k, v, w_out, *, causal: bool = True,
                                     kv_offset=None, interpret: bool = True,
                                     block_q=None, block_kv=None, pos=None,
+                                    block_tables=None,
                                     plan_dialect: str | None = None):
     # library: XLA decides every staging parameter
     del kv_offset, interpret, block_q, block_kv, plan_dialect
     return flash_attention_matmul(q, k, v, w_out, causal=causal,
-                                  mode="library", pos=pos)
+                                  mode="library", pos=pos,
+                                  block_tables=block_tables)
 
 
 def _rmsnorm_swiglu_library(x, weight, w_cat, *, eps: float = 1e-6,

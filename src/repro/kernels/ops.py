@@ -197,23 +197,42 @@ def fused_flash_attention_matmul(q: jax.Array, k: jax.Array, v: jax.Array,
                                  interpret: Optional[bool] = None,
                                  block_q: Optional[int] = None,
                                  block_kv: Optional[int] = None,
-                                 pos: Optional[jax.Array] = None):
+                                 pos: Optional[jax.Array] = None,
+                                 block_tables: Optional[jax.Array] = None):
     """``flash_attention(q, k, v)`` -> ``wo`` without the HBM round trip.
 
     The `[B,S,H,D]` online-softmax output is consumed from VMEM by the
     per-head wo slices (kernels/fused.py); declared fallbacks: shuffle ->
     scratch tree, native -> the unfused XLA pair.  ``pos`` ([B] int32
     cache frontiers) selects the decode shape: keys past each sequence's
-    frontier are masked instead of the static causal triangle."""
+    frontier are masked instead of the static causal triangle.
+
+    ``block_tables`` ([B, max_pages] int32, with ``pos``) selects the
+    *paged* decode shape: k/v are page pools ``[P, Hkv, page_size, D]``
+    and the kernel's sequential kv walk gathers live pages through the
+    table (kernels/fused.py).  Selection then ranks costs at the
+    fully-occupied page count — the static worst case; the true
+    occupancy is a traced quantity only the running engine knows."""
     pol, interpret = _resolve(mode, policy, interpret)
-    low = REGISTRY.select("flash_attention_matmul", pol, shape=dict(
-        b=q.shape[0], h=q.shape[1], sq=q.shape[2], skv=k.shape[2],
-        d=q.shape[3], n=w_out.shape[1], causal=causal and pos is None,
-        block_q=block_q, block_kv=block_kv))
+    if block_tables is not None:
+        page_size = k.shape[2]
+        maxp = block_tables.shape[1]
+        shape = dict(
+            b=q.shape[0], h=q.shape[1], sq=q.shape[2],
+            skv=maxp * page_size, d=q.shape[3], n=w_out.shape[1],
+            causal=False, block_q=block_q, block_kv=page_size,
+            page_size=page_size, pages_occupied=q.shape[0] * maxp)
+    else:
+        shape = dict(
+            b=q.shape[0], h=q.shape[1], sq=q.shape[2], skv=k.shape[2],
+            d=q.shape[3], n=w_out.shape[1], causal=causal and pos is None,
+            block_q=block_q, block_kv=block_kv)
+    low = REGISTRY.select("flash_attention_matmul", pol, shape=shape)
     return _dispatch(low, pol, q, k, v, w_out,
                      causal=causal and pos is None,
                      kv_offset=kv_offset, interpret=interpret,
-                     block_q=block_q, block_kv=block_kv, pos=pos)
+                     block_q=block_q, block_kv=block_kv, pos=pos,
+                     block_tables=block_tables)
 
 
 def fused_rmsnorm_swiglu(x: jax.Array, weight: jax.Array,

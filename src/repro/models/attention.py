@@ -179,6 +179,66 @@ def update_cache(cache, new, pos):
 
 
 # ---------------------------------------------------------------------------
+# Paged KV cache: fixed-size pages + per-slot block tables (vLLM-style).
+# Pages: [P, Hkv, page_size, D] (one pool per layer; the page index axis is
+# shared across layers).  Block tables: [B, max_pages] int32 — entry j is
+# the page holding tokens [j*page_size, (j+1)*page_size); entries past a
+# slot's reservation hold the sentinel value ``P`` (out of range), so the
+# scatter write drops and the gather clamp reads a page whose contents are
+# masked anyway.  The serve engine owns allocation/refcounts
+# (repro.serve.engine.PagePool); everything here is pure device math.
+# ---------------------------------------------------------------------------
+
+
+def update_paged_cache(pages, new, block_tables, pos):
+    """Insert new [B,Hkv,1,D] at logical index pos [B] through the table.
+
+    The write resolves to page ``block_tables[b, pos[b] // page_size]`` at
+    row ``pos[b] % page_size``.  A sentinel table entry (== num_pages, the
+    engine's reset value for dead/reaped slots) makes the write **drop** —
+    a freed slot whose ``pos`` keeps advancing inside the one-program tick
+    can never touch a page that was handed to another request.  Indices
+    past the table end clamp (jax gather semantics) onto the slot's own
+    last entry, which the engine guarantees is never a shared page.
+    """
+    num_pages, hkv, page_size, d = pages.shape
+    page_of = jnp.take_along_axis(
+        block_tables, (pos // page_size)[:, None], axis=1)[:, 0]    # [B]
+    offset = pos % page_size
+    return pages.at[page_of, :, offset].set(
+        new[:, :, 0, :].astype(pages.dtype), mode="drop")
+
+
+def gather_paged_kv(pages, block_tables):
+    """[P,Hkv,page_size,D] + [B,max_pages] -> a [B,Hkv,S,D] logical strip.
+
+    Sentinel/dead entries clamp to the last real page; whatever they read
+    sits past every consumer's ``pos`` frontier and is masked.  This is
+    the library-row materialization — the Pallas decode kernel gathers the
+    same pages through its index map without ever building the strip.
+    """
+    num_pages = pages.shape[0]
+    tbl = jnp.minimum(block_tables, num_pages - 1)
+    strip = pages[tbl]                     # [B, max_pages, Hkv, ps, D]
+    b, maxp, hkv, ps, d = strip.shape
+    return strip.transpose(0, 2, 1, 3, 4).reshape(b, hkv, maxp * ps, d)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, pos, *,
+                           scale: Optional[float] = None,
+                           ctx: Optional[ShardCtx] = None):
+    """Single-token attention against a paged cache (jnp reference).
+
+    q: [B,H,1,D]; pages: [P,Hkv,page_size,D]; block_tables: [B,max_pages];
+    pos: [B].  Numerically identical to :func:`decode_attention` over the
+    gathered strip — the masked-softmax math never sees page boundaries.
+    """
+    k_cache = gather_paged_kv(k_pages, block_tables)
+    v_cache = gather_paged_kv(v_pages, block_tables)
+    return decode_attention(q, k_cache, v_cache, pos, scale=scale, ctx=ctx)
+
+
+# ---------------------------------------------------------------------------
 # int8 KV cache (beyond-paper serving optimization; ParallelConfig flag)
 # ---------------------------------------------------------------------------
 

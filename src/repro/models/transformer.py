@@ -19,8 +19,9 @@ import jax.numpy as jnp
 from repro.core.registry import ExecutionPolicy
 from repro.models import common, mlp
 from repro.models.attention import (chunked_attention, decode_attention,
-                                    dequantize_kv, quantize_kv,
-                                    update_cache, update_cache_int8)
+                                    dequantize_kv, paged_decode_attention,
+                                    quantize_kv, update_cache,
+                                    update_cache_int8, update_paged_cache)
 from repro.models.config import (LEGACY_LAYOUT, ModelConfig, ParallelConfig,
                                  ParamLayout)
 from repro.parallel.sharding import ShardCtx, shard
@@ -215,7 +216,7 @@ def attn_seq(params, x, cfg: ModelConfig, par: ParallelConfig,
 
 def attn_decode(params, x_t, cfg: ModelConfig, kv_cache, pos, ctx,
                 int8: bool = False, policy=None, norm_scale=None,
-                fuse_wo: bool = False):
+                fuse_wo: bool = False, block_tables=None):
     """One-token attention. x_t: [B,1,D]; kv_cache: (K,V) [B,Hkv,S,hd]
     (bf16) or (Kq,Ks,Vq,Vs) (int8 + scales).
 
@@ -226,11 +227,35 @@ def attn_decode(params, x_t, cfg: ModelConfig, kv_cache, pos, ctx,
     ``fuse_wo`` routes the cache attention + wo projection through the
     decode shape of ``flash_attention_matmul`` (per-slot ``pos``
     frontiers mask the cache), eliminating the `[B,1,H,D]` attention
-    output round trip per layer per tick."""
+    output round trip per layer per tick.
+
+    ``block_tables`` switches the cache to its *paged* form: kv_cache is
+    (k_pages, v_pages) ``[P, Hkv, page_size, hd]`` pools and the table
+    maps each slot's logical kv blocks to pool pages.  The one-token
+    write scatters through the table (sentinel entries drop), and the
+    fused path hands the table to the paged decode shape of
+    ``flash_attention_matmul`` so the kernel only visits live pages."""
     b = x_t.shape[0]
     positions = pos[:, None]                       # [B,1]
     q, k_new, v_new = _project_qkv(params, x_t, cfg, positions, ctx,
                                    policy=policy, norm_scale=norm_scale)
+    if block_tables is not None:
+        k_pages, v_pages = kv_cache
+        k_pages = update_paged_cache(k_pages, k_new, block_tables, pos)
+        v_pages = update_paged_cache(v_pages, v_new, block_tables, pos)
+        new_cache = (k_pages, v_pages)
+        if fuse_wo:
+            from repro.kernels import ops as kernel_ops
+            out = kernel_ops.fused_flash_attention_matmul(
+                q, k_pages, v_pages, params["wo"], pos=pos,
+                block_tables=block_tables,
+                policy=policy.kernel() if policy is not None else None)
+            return out, new_cache
+        o = paged_decode_attention(q, k_pages, v_pages, block_tables, pos,
+                                   ctx=ctx)
+        o = o.transpose(0, 2, 1, 3).reshape(b, 1, -1)
+        out = jnp.einsum("bsh,hd->bsd", o, params["wo"].astype(x_t.dtype))
+        return out, new_cache
     if int8:
         k_q, k_s, v_q, v_s = kv_cache
         k_q, k_s = update_cache_int8(k_q, k_s, k_new, pos)
@@ -320,7 +345,8 @@ def block_seq(params, x, cfg: ModelConfig, par: ParallelConfig, positions,
 
 
 def block_decode(params, x_t, cfg: ModelConfig, kv_cache, pos, ctx,
-                 int8: bool = False, policy=None, fuse_wo: bool = False):
+                 int8: bool = False, policy=None, fuse_wo: bool = False,
+                 block_tables=None):
     fuse = (policy is not None and policy.fuses()
             and cfg.norm == "rmsnorm")
     # Decode fusion gates (ISSUE 5): the qkv / ln2→[wi|wg] prologues fuse
@@ -341,7 +367,8 @@ def block_decode(params, x_t, cfg: ModelConfig, kv_cache, pos, ctx,
         ln1_scale = None
     a, kv_cache = attn_decode(params["attn"], h, cfg, kv_cache, pos, ctx,
                               int8=int8, policy=policy,
-                              norm_scale=ln1_scale, fuse_wo=fuse_wo)
+                              norm_scale=ln1_scale, fuse_wo=fuse_wo,
+                              block_tables=block_tables)
     if cfg.moe is None:
         mlp_params = params["mlp"]
     elif cfg.moe.shared_experts:
@@ -549,6 +576,32 @@ class TransformerLM:
             "pos": jnp.zeros((batch_size,), jnp.int32),
         }
 
+    def init_paged_cache(self, batch_size: int, num_pages: int,
+                         page_size: int, max_pages_per_slot: int):
+        """The paged form of :meth:`init_cache`: fixed-size KV pages plus
+        per-slot block tables (capacity by pages, not slots).
+
+        Pools are ``[L, P, Hkv, page_size, hd]`` — the page index axis is
+        shared across layers, so one table serves the whole scan.  Tables
+        init to the sentinel ``num_pages`` (out of range): a write
+        through a sentinel entry drops and a gather clamps onto a page
+        the ``pos`` mask hides, which is what makes reaped slots inert
+        inside the one-program tick.  Allocation/refcounts live in
+        ``repro.serve.engine.PagePool``."""
+        cfg = self.cfg
+        if self.par.kv_cache_int8:
+            raise NotImplementedError(
+                "paged KV cache + int8 quantization are not composed yet")
+        hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        shape = (cfg.num_layers, num_pages, hkv, page_size, hd)
+        return {
+            "k_pages": jnp.zeros(shape, _dtype(cfg)),
+            "v_pages": jnp.zeros(shape, _dtype(cfg)),
+            "block_tables": jnp.full((batch_size, max_pages_per_slot),
+                                     num_pages, jnp.int32),
+            "pos": jnp.zeros((batch_size,), jnp.int32),
+        }
+
     def cache_specs(self):
         kv = (None, "act_cache_batch", "act_kv_heads", "act_kv_seq",
               "act_head_dim")
@@ -560,9 +613,16 @@ class TransformerLM:
         return {"k": kv, "v": kv, "pos": (None,)}
 
     def decode_step(self, params, tokens, cache):
-        """tokens: [B] int32 -> (logits [B,V], new cache)."""
+        """tokens: [B] int32 -> (logits [B,V], new cache).
+
+        A cache carrying ``block_tables`` routes through the paged decode
+        path: per-layer (k_pages, v_pages) pools ride the scan while the
+        table and ``pos`` frontier broadcast — same one-program shape,
+        page-gathered attention."""
         cfg, ctx = self.cfg, self.ctx
         int8 = self.par.kv_cache_int8
+        paged = "block_tables" in cache
+        tables = cache["block_tables"] if paged else None
         pos = cache["pos"]
         x = jnp.take(params["embed"], tokens[:, None], axis=0
                      ).astype(_dtype(cfg))
@@ -578,17 +638,22 @@ class TransformerLM:
             layer_params, kv = layer
             h, new_kv = block_decode(layer_params, h, cfg, kv, pos, ctx,
                                      int8=int8, policy=self.policy,
-                                     fuse_wo=fuse_wo)
+                                     fuse_wo=fuse_wo, block_tables=tables)
             return h, new_kv
 
-        if int8:
+        if paged:
+            kv_in = (cache["k_pages"], cache["v_pages"])
+        elif int8:
             kv_in = (cache["k"], cache["k_scale"], cache["v"],
                      cache["v_scale"])
         else:
             kv_in = (cache["k"], cache["v"])
         x, new_kvs = jax.lax.scan(body, x, (params["blocks"], kv_in))
         logits = self._head(params, x)[:, 0]
-        if int8:
+        if paged:
+            new_cache = {"k_pages": new_kvs[0], "v_pages": new_kvs[1],
+                         "block_tables": tables, "pos": pos + 1}
+        elif int8:
             new_cache = {"k": new_kvs[0], "k_scale": new_kvs[1],
                          "v": new_kvs[2], "v_scale": new_kvs[3],
                          "pos": pos + 1}

@@ -1,4 +1,5 @@
 """Serving substrate: batched engine with continuous batching."""
-from repro.serve.engine import ServeConfig, BatchedEngine, Request
+from repro.serve.engine import (BatchedEngine, PagePool, Request,
+                                ServeConfig)
 
-__all__ = ["ServeConfig", "BatchedEngine", "Request"]
+__all__ = ["ServeConfig", "BatchedEngine", "Request", "PagePool"]

@@ -3,8 +3,24 @@
 The decode state is a fixed [B, ...] cache pytree; requests claim a slot,
 prefill writes that slot's cache entries, and every engine tick advances
 ALL active slots by one token — the standard fixed-shape continuous-
-batching layout (vLLM-style slots, without paging; the cache seq dim is
-pre-sized to ``max_seq_len``).
+batching layout (vLLM-style slots; the cache seq dim is pre-sized to
+``max_seq_len``).
+
+With ``ServeConfig.page_size`` set, the cache strips become a **paged KV
+cache**: a global pool of fixed-size pages plus device-resident per-slot
+block tables (``models/transformer.py::init_paged_cache``).  Admission is
+then by *page budget* — a request reserves exactly the pages its
+``prompt + max_new_tokens`` frontier can reach, so short prompts stop
+paying the ``max_seq_len`` capacity tax and the engine accepts work until
+the pool is actually exhausted, not until slots are dense-full.  Reaping a
+finished request releases its pages back to the pool (host-side refcounts
+in :class:`PagePool`), and leading full prompt pages are **shared by
+refcount** across requests with a common prefix — the frontier/tail page
+is always freshly allocated, so the one page a slot writes during decode
+is never aliased (copy-on-write without the copy).  Table rows of reaped
+slots reset to the sentinel ``num_pages``: inside the tick their writes
+drop and their gathers clamp onto masked data, which is what keeps the
+tick ONE compiled program with zero host transfers under paging.
 
 The tick is **one device program and zero host transfers**:
 ``last_tokens``, the slot-liveness mask, and the per-slot remaining-token
@@ -48,6 +64,98 @@ class ServeConfig:
     max_new_tokens: int = 64
     eos_id: int = 1
     greedy: bool = True
+    # ---- paged KV cache (None = dense per-slot strips) ----
+    page_size: Optional[int] = None    # tokens per KV page
+    num_pages: Optional[int] = None    # pool size; None = dense-equivalent
+    prefix_sharing: bool = True        # refcount-share full prompt pages
+
+    @property
+    def paged(self) -> bool:
+        return self.page_size is not None
+
+    @property
+    def max_pages_per_slot(self) -> int:
+        assert self.page_size is not None
+        return -(-self.max_seq_len // self.page_size)
+
+
+class PagePool:
+    """Host-side allocator for the global KV page pool.
+
+    Pure bookkeeping — the pages themselves live on device inside the
+    engine's cache pytree; this class only decides which page ids a
+    request holds.  Every held page is refcounted: fresh pages start at
+    1, prefix-shared pages gain a reference per sharer, and a page
+    returns to the free list **only when its refcount reaches 0** (the
+    invariant the conformance suite pins).
+
+    Prefix sharing indexes *full* prompt pages by a chain hash (each
+    page's hash folds in its predecessor's, so a hit guarantees the whole
+    leading path matches, not just one page).  Only pages below a
+    request's reservation tail are ever published or matched — the
+    frontier page a slot writes during decode is always freshly
+    allocated, so sharing never aliases a written page.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        self.num_pages = num_pages
+        self.page_size = page_size
+        # pop() takes from the end: keep ids ascending for determinism
+        self._free = list(range(num_pages - 1, -1, -1))
+        self.refcount: dict = {}
+        self._prefix: dict = {}       # chain hash -> page id
+        self._hash_of: dict = {}      # page id -> chain hash (cleanup)
+        self.shared_hits = 0          # pages NOT allocated thanks to sharing
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def occupied_pages(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"page pool exhausted: need {n}, have {len(self._free)}")
+        ids = [self._free.pop() for _ in range(n)]
+        for p in ids:
+            self.refcount[p] = 1
+        return ids
+
+    def retain(self, page_id: int) -> None:
+        assert self.refcount.get(page_id, 0) > 0, page_id
+        self.refcount[page_id] += 1
+
+    def release(self, page_id: int) -> None:
+        rc = self.refcount[page_id] - 1
+        if rc > 0:
+            self.refcount[page_id] = rc
+            return
+        # refcount 0: ONLY now does the page return to the free list
+        del self.refcount[page_id]
+        h = self._hash_of.pop(page_id, None)
+        if h is not None:
+            self._prefix.pop(h, None)
+        self._free.append(page_id)
+
+    def lookup_prefix(self, chain_hash) -> Optional[int]:
+        return self._prefix.get(chain_hash)
+
+    def publish_prefix(self, chain_hash, page_id: int) -> None:
+        if chain_hash not in self._prefix and page_id not in self._hash_of:
+            self._prefix[chain_hash] = page_id
+            self._hash_of[page_id] = chain_hash
+
+    @staticmethod
+    def prefix_hashes(prompt: List[int], page_size: int) -> List:
+        """One chain hash per FULL page of prompt tokens."""
+        out, h = [], hash(("uisa-kv-page-chain",))
+        for i in range(len(prompt) // page_size):
+            h = hash((h, tuple(prompt[i * page_size:(i + 1) * page_size])))
+            out.append(h)
+        return out
 
 
 @dataclasses.dataclass
@@ -81,7 +189,25 @@ class BatchedEngine:
         self.params = params
         self.cfg = cfg
         b = cfg.batch_slots
-        self.cache = model.init_cache(b, cfg.max_seq_len)
+        self._paged = cfg.paged
+        if self._paged:
+            self._max_pages = cfg.max_pages_per_slot
+            # dense-equivalent pool by default; cfg.num_pages < B·maxp is
+            # the page-budget admission regime (capacity by pages)
+            self.num_pages = (cfg.num_pages if cfg.num_pages is not None
+                              else b * self._max_pages)
+            self.pool: Optional[PagePool] = PagePool(self.num_pages,
+                                                     cfg.page_size)
+            self._slot_pages: List[List[int]] = [[] for _ in range(b)]
+            self.cache = model.init_paged_cache(
+                b, self.num_pages, cfg.page_size, self._max_pages)
+        else:
+            self.pool = None
+            self.cache = model.init_cache(b, cfg.max_seq_len)
+        # per-tick device-resident stats vectors (paged mode), drained by
+        # sync() into tick_stats rows alongside the token history
+        self._stats_history: List[jax.Array] = []
+        self.tick_stats: List[dict] = []
         self.slots: List[Optional[Request]] = [None] * b
         # ---- device-resident tick state (never read per tick) ----
         self.last_tokens = jnp.zeros((b,), jnp.int32)
@@ -118,20 +244,31 @@ class BatchedEngine:
 
     def admit(self, reqs: List[Request]) -> int:
         """Batched admission: prefill as many of ``reqs`` (in order) as
-        there are free slots, then fetch all first tokens in ONE host
-        transfer.  Returns how many requests were admitted."""
+        there are free slots — and, under paging, free *pages* — then
+        fetch all first tokens in ONE host transfer.  Returns how many
+        requests were admitted."""
         self.sync()                    # make slot liveness current
+        if self._paged:
+            self._reap_done_pages()    # page budget current before admitting
         staged = []                    # (req, slot, first_token_device)
         for req in reqs:
             slot = self._free_slot()
             if slot is None:
                 break
+            if self._paged:
+                plan = self._plan_pages(req)
+                if plan is None:
+                    break              # pool exhausted: stop admitting
             # reap the finished occupant (exactly the slot we claim)
             req.slot = slot
             self.slots[slot] = req
             toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
             logits, cache1 = self._prefill_one(self.params, toks)
-            self._write_slot(slot, cache1, len(req.prompt))
+            if self._paged:
+                self._write_slot_paged(slot, cache1, len(req.prompt),
+                                       *plan)
+            else:
+                self._write_slot(slot, cache1, len(req.prompt))
             staged.append((req, slot,
                            jnp.argmax(logits[0]).astype(jnp.int32)))
         if not staged:
@@ -179,6 +316,92 @@ class BatchedEngine:
 
         self.cache = jax.tree.map(write, self.cache, cache1)
 
+    # ---- paged slot management ----
+
+    def _reap_done_pages(self) -> None:
+        """Release every finished slot's pages and reset its table row to
+        the sentinel.  Safe while the slot's ``pos`` keeps advancing in
+        the tick: sentinel entries drop writes, so a page handed to the
+        next request can never be touched by its previous owner."""
+        for slot, req in enumerate(self.slots):
+            if req is None or not req.done or not self._slot_pages[slot]:
+                continue
+            for p in self._slot_pages[slot]:
+                self.pool.release(p)
+            self._slot_pages[slot] = []
+            self.cache["block_tables"] = \
+                self.cache["block_tables"].at[slot].set(self.num_pages)
+
+    def _plan_pages(self, req: Request):
+        """Reserve the pages ``req`` can ever reach, sharing leading full
+        prompt pages by refcount.  Returns ``(page_ids, n_shared)`` or
+        None when the pool cannot cover the reservation (nothing is
+        mutated on failure).
+
+        The reservation covers ``prompt + max_new_tokens - 1`` token
+        positions (the final sampled token is never written back), capped
+        at ``max_seq_len`` — so the tick allocates nothing and admission
+        is the only allocation boundary.  Sharing is capped at
+        ``reserve - 1`` pages: the tail page is always exclusively owned,
+        which is what makes decode writes alias-free by construction."""
+        ps = self.cfg.page_size
+        total = min(len(req.prompt) + max(req.max_new_tokens, 1) - 1,
+                    self.cfg.max_seq_len)
+        total = max(total, len(req.prompt))
+        reserve = -(-total // ps)
+        shared: List[int] = []
+        hashes = (PagePool.prefix_hashes(req.prompt, ps)[:reserve - 1]
+                  if self.cfg.prefix_sharing else [])
+        for h in hashes:
+            pid = self.pool.lookup_prefix(h)
+            if pid is None:
+                break
+            shared.append(pid)
+        if reserve - len(shared) > self.pool.free_pages:
+            return None
+        for pid in shared:
+            self.pool.retain(pid)
+        self.pool.shared_hits += len(shared)
+        page_ids = shared + self.pool.alloc(reserve - len(shared))
+        for h, pid in zip(hashes, page_ids):
+            self.pool.publish_prefix(h, pid)
+        return page_ids, len(shared)
+
+    def _write_slot_paged(self, slot: int, cache1, prompt_len: int,
+                          page_ids: List[int], n_shared: int) -> None:
+        """Scatter a batch-1 prefill cache into the slot's reserved pages.
+
+        Only the *fresh* prompt pages are written — shared prefix pages
+        already hold identical bytes and are never rewritten (the
+        refcount invariant backs the aliasing argument, this backs the
+        data one).  Reserved-but-unreached generation pages keep stale
+        pool contents; every read of them sits past the ``pos`` mask."""
+        ps = self.cfg.page_size
+        self._slot_pages[slot] = page_ids
+        row = np.full((self._max_pages,), self.num_pages, np.int32)
+        row[:len(page_ids)] = page_ids
+        tables = self.cache["block_tables"].at[slot].set(jnp.asarray(row))
+        pos = self.cache["pos"].at[slot].set(prompt_len)
+        new_cache = dict(self.cache, block_tables=tables, pos=pos)
+        n_prompt_pages = -(-prompt_len // ps)
+        write_ids = page_ids[n_shared:n_prompt_pages]
+        if write_ids:
+            ids = jnp.asarray(write_ids, jnp.int32)
+            pad = n_prompt_pages * ps - prompt_len
+            for pool_name, strip_name in (("k_pages", "k"),
+                                          ("v_pages", "v")):
+                strip = cache1[strip_name][:, 0]        # [L,Hkv,plen,hd]
+                if pad:
+                    strip = jnp.pad(
+                        strip, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                nl, hkv, _, hd = strip.shape
+                pages = strip.reshape(nl, hkv, n_prompt_pages, ps, hd
+                                      ).transpose(0, 2, 1, 3, 4)
+                pages = pages[:, n_shared:n_prompt_pages]
+                new_cache[pool_name] = new_cache[pool_name].at[:, ids].set(
+                    pages.astype(new_cache[pool_name].dtype))
+        self.cache = new_cache
+
     # ---- ticking ----
 
     def _tick_impl(self, params, tokens, live, remaining, cache):
@@ -193,23 +416,38 @@ class BatchedEngine:
         nxt = jnp.where(live, nxt, tokens)
         remaining = jnp.where(live, remaining - 1, remaining)
         live = live & (nxt != self.cfg.eos_id) & (remaining > 0)
-        return nxt, live, remaining, cache
+        if not self._paged:
+            return nxt, live, remaining, cache
+        # per-tick observability, computed inside the one program: live
+        # slot count + pages actually reached by live frontiers.  A tiny
+        # device vector appended to history — harvested by sync(), so the
+        # tick stays transfer-free.
+        frontier = jnp.where(live, cache["pos"] // self.cfg.page_size + 1,
+                             0)
+        stats = jnp.stack([jnp.sum(live.astype(jnp.int32)),
+                           jnp.sum(frontier).astype(jnp.int32)])
+        return nxt, live, remaining, cache, stats
 
     def step(self) -> None:
         """One decode tick for all slots — zero host transfers.
 
         Emitted tokens land in the device-side history; call :meth:`sync`
         (or :meth:`run`, which does) to drain them into the requests."""
-        nxt, self.live, self.remaining, self.cache = self._tick(
-            self.params, self.last_tokens, self.live, self.remaining,
-            self.cache)
+        out = self._tick(self.params, self.last_tokens, self.live,
+                         self.remaining, self.cache)
+        if self._paged:
+            nxt, self.live, self.remaining, self.cache, stats = out
+            self._stats_history.append(stats)
+        else:
+            nxt, self.live, self.remaining, self.cache = out
         self.last_tokens = nxt
         self._history.append(nxt)
         self.tick_count += 1
 
     def sync(self) -> None:
         """Drain the device-side token history into the Request objects
-        with a single stacked device->host transfer."""
+        with a single stacked device->host transfer (plus one more for
+        the paged per-tick stats vectors)."""
         if not self._history:
             return
         hist = np.asarray(jnp.stack(self._history))   # [T, B], one transfer
@@ -223,6 +461,22 @@ class BatchedEngine:
                 if tok == self.cfg.eos_id or \
                         len(req.generated) >= req.max_new_tokens:
                     req.done = True
+        if self._stats_history:
+            rows = np.asarray(jnp.stack(self._stats_history))  # [T, 2]
+            self._stats_history = []
+            base = self.tick_count - rows.shape[0]
+            for i in range(rows.shape[0]):
+                # device columns are per-tick; the pool columns are the
+                # host allocator's view at harvest time (admission-grain)
+                self.tick_stats.append({
+                    "tick": base + i,
+                    "live_slots": int(rows[i, 0]),
+                    "frontier_pages": int(rows[i, 1]),
+                    "pool_occupied_pages": self.pool.occupied_pages,
+                    "pool_utilization":
+                        self.pool.occupied_pages / max(self.num_pages, 1),
+                    "shared_prefix_hits": self.pool.shared_hits,
+                })
 
     def run(self, requests: List[Request],
             max_ticks: int = 10_000) -> List[Request]:

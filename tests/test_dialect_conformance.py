@@ -37,6 +37,7 @@ from repro.core import (DIALECTS, ExecutionPolicy, IsaMode,
 from repro.core.registry import cost_key
 from repro.kernels import ops
 from repro.kernels.fused import FUSED_OPS
+from repro.serve import PagePool
 
 settings.register_profile("conformance", max_examples=20, deadline=None)
 settings.load_profile("conformance")
@@ -129,6 +130,130 @@ class TestConformance:
         for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
             np.testing.assert_allclose(np.asarray(g), np.asarray(w),
                                        rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode shape of flash_attention_matmul (ISSUE 6): same op, new
+# shape — k/v are page pools gathered through a block table with per-slot
+# pos frontiers and dead-block skip.  Not a separate registry op, so it
+# rides next to CASES rather than inside it; the dialect matrix still
+# covers it in full.
+# ---------------------------------------------------------------------------
+
+_PG_PS, _PG_MAXP, _PG_POOL = 128, 2, 7      # lane-multiple page size:
+_PG_KEYS = jax.random.split(_k[4], 4)        # legal for ALL modes
+_PG_Q = jax.random.normal(_PG_KEYS[0], (2, 4, 1, 32), jnp.float32)
+_PG_K = jax.random.normal(_PG_KEYS[1], (_PG_POOL, 2, _PG_PS, 32),
+                          jnp.float32)
+_PG_V = jax.random.normal(_PG_KEYS[2], (_PG_POOL, 2, _PG_PS, 32),
+                          jnp.float32)
+_PG_WO = jax.random.normal(_PG_KEYS[3], (4 * 32, 80), jnp.float32)
+# slot 0: two live pages (non-contiguous ids); slot 1: second entry is
+# the sentinel — its frontier stops inside page 0, exercising the skip
+_PG_TBL = jnp.array([[4, 6], [1, _PG_POOL]], jnp.int32)
+_PG_POS = jnp.array([200, 60], jnp.int32)
+
+
+@pytest.mark.parametrize("dialect_name", DIALECT_NAMES)
+class TestPagedDecodeConformance:
+    def _run(self, pol):
+        return ops.fused_flash_attention_matmul(
+            _PG_Q, _PG_K, _PG_V, _PG_WO, pos=_PG_POS,
+            block_tables=_PG_TBL, policy=pol)
+
+    def test_paged_auto_matches_masked_softmax_library(self, dialect_name):
+        """The paged decode shape resolves and computes the same numbers
+        as the gather + masked-softmax jnp library row — on every
+        dialect, including table gather, sentinel clamp, and dead-block
+        skip."""
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", LoweringFallbackWarning)
+            got = self._run(ExecutionPolicy(mode="auto",
+                                            dialect=dialect_name))
+            want = self._run(ExecutionPolicy(mode=IsaMode.LIBRARY.value,
+                                             dialect=dialect_name))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_paged_cost_registered_for_resolved_mode(self, dialect_name):
+        """Every dialect's auto-resolved variant carries the paged cost
+        columns (page_size/pages_occupied), scaling with occupancy."""
+        pol = ExecutionPolicy(mode="auto", dialect=dialect_name)
+        shape = dict(b=2, h=4, sq=1, skv=_PG_MAXP * _PG_PS, d=32, n=80,
+                     causal=False, page_size=_PG_PS)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", LoweringFallbackWarning)
+            low = REGISTRY.select("flash_attention_matmul", pol,
+                                  shape=dict(shape, pages_occupied=4))
+        half = low.structural_cost(**dict(shape, pages_occupied=2))
+        full = low.structural_cost(**dict(shape, pages_occupied=4))
+        assert half["page_size"] == _PG_PS
+        assert half["hbm_bytes"] < full["hbm_bytes"]
+        assert half["blocks_visited"] < full["blocks_visited"]
+
+
+class TestPagePoolInvariants:
+    """ISSUE 6 satellite: prefix-sharing refcount invariants — a page is
+    freed only at refcount 0, and the copy-on-write discipline (fresh
+    tail pages) never aliases a shared page."""
+
+    def test_free_only_at_refcount_zero(self):
+        pool = PagePool(num_pages=4, page_size=8)
+        (pid,) = pool.alloc(1)
+        pool.retain(pid)                       # two holders
+        assert pool.refcount[pid] == 2
+        pool.release(pid)                      # one left: NOT freed
+        assert pool.refcount[pid] == 1
+        assert pool.free_pages == 3
+        pool.release(pid)                      # refcount 0: freed
+        assert pid not in pool.refcount
+        assert pool.free_pages == 4
+
+    def test_prefix_index_cleared_when_page_freed(self):
+        pool = PagePool(num_pages=2, page_size=4)
+        (pid,) = pool.alloc(1)
+        h = PagePool.prefix_hashes([1, 2, 3, 4], 4)[0]
+        pool.publish_prefix(h, pid)
+        assert pool.lookup_prefix(h) == pid
+        pool.release(pid)
+        assert pool.lookup_prefix(h) is None   # no dangling shared entry
+
+    def test_chain_hash_requires_full_leading_match(self):
+        """A chain hash folds in its predecessor: page 2 of [A,B] never
+        collides with page 2 of [C,B], so a hit guarantees the whole
+        leading path matches."""
+        a = PagePool.prefix_hashes([1, 2, 3, 4], 2)
+        b = PagePool.prefix_hashes([9, 9, 3, 4], 2)
+        assert a[0] != b[0]
+        assert a[1] != b[1]                    # same bytes, different chain
+        assert a == PagePool.prefix_hashes([1, 2, 3, 4, 5], 2)
+
+    def test_copy_on_write_never_aliases_shared_page(self):
+        """Engine-level: two same-prompt admissions share full prefix
+        pages but each owns a fresh tail — the only page decode ever
+        writes.  (The engine caps sharing at reserve-1 pages, so even a
+        prompt filling its whole reservation keeps an exclusive tail.)"""
+        import jax as _jax
+        from repro.models import build_model
+        from repro.models.config import ModelConfig, ParallelConfig
+        from repro.serve import BatchedEngine, Request, ServeConfig
+        cfg = ModelConfig(name="t", family="dense", num_layers=1,
+                          d_model=32, num_heads=2, num_kv_heads=1,
+                          d_ff=64, vocab_size=64, dtype="float32")
+        model = build_model(cfg, ParallelConfig(remat="none"))
+        params = model.init_params(_jax.random.PRNGKey(3))
+        eng = BatchedEngine(model, params, ServeConfig(
+            batch_slots=2, max_seq_len=32, eos_id=-1, page_size=8))
+        prompt = list(range(2, 18))            # 16 tokens = 2 full pages
+        r0 = Request(rid=0, prompt=list(prompt), max_new_tokens=6)
+        r1 = Request(rid=1, prompt=list(prompt), max_new_tokens=6)
+        assert eng.admit([r0, r1]) == 2
+        p0, p1 = eng._slot_pages
+        assert p0[:2] == p1[:2]                # both full pages shared
+        assert all(eng.pool.refcount[p] == 2 for p in p0[:2])
+        tail0, tail1 = set(p0[2:]), set(p1[2:])
+        assert tail0 and tail1 and tail0.isdisjoint(tail1)
+        assert all(eng.pool.refcount[p] == 1 for p in tail0 | tail1)
 
 
 # ---------------------------------------------------------------------------

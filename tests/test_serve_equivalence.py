@@ -9,6 +9,7 @@ import pytest
 
 from repro.models import build_model
 from repro.models.config import ModelConfig, ParallelConfig
+from repro.core import REGISTRY
 from repro.serve import BatchedEngine, Request, ServeConfig
 
 KEY = jax.random.PRNGKey(0)
@@ -201,6 +202,211 @@ class TestFusionEquivalence:
                  for i, p in enumerate(prompts)])
         assert eng.tick_count > 4
         assert eng.trace_count == 1
+
+
+class TestPagedEngine:
+    """ISSUE 6 tentpole: the paged KV cache (page pool + per-slot block
+    tables) must be invisible to correctness — identical tokens to the
+    dense engine for identical request streams — while keeping the tick
+    ONE compiled program with zero per-tick host transfers, admitting by
+    page budget instead of slot-dense capacity, and freeing pages on
+    reap."""
+
+    PAGE = 8                      # CACHE_LEN=32 -> 4 pages per slot
+
+    def _run(self, model, params, reqs, **cfg_kw):
+        eng = BatchedEngine(model, params, ServeConfig(
+            batch_slots=2, max_seq_len=CACHE_LEN, eos_id=-1, **cfg_kw))
+        done = eng.run(reqs)
+        return {r.rid: r.generated for r in done}, eng
+
+    def _reqs(self, cfg, n=5, max_news=(4, 7, 5, 6, 4)):
+        return [Request(rid=i, prompt=p, max_new_tokens=m)
+                for i, (p, m) in enumerate(zip(_prompts(cfg, n),
+                                               max_news))]
+
+    def test_paged_matches_dense_tokens(self, model_and_params):
+        """Oversubscribed (5 requests, 2 slots, mid-stream reaping):
+        paged and dense engines emit identical token streams."""
+        model, params, cfg = model_and_params
+        want, _ = self._run(model, params, self._reqs(cfg))
+        got, eng = self._run(model, params, self._reqs(cfg),
+                             page_size=self.PAGE)
+        assert len(got) == 5
+        assert got == want
+        assert eng.trace_count == 1          # still ONE tick program
+
+    def test_paged_fused_pallas_matches_dense(self, model_and_params):
+        """The paged decode shape of flash_attention_matmul (block-table
+        gather + dead-block skip) inside the fully-fused Pallas tick:
+        token-for-token against the unfused dense engine."""
+        model, params, cfg = model_and_params
+        full = build_model(cfg, ParallelConfig(
+            remat="none", fuse_epilogues=True, use_pallas_attn=True))
+        want, _ = self._run(model, params, self._reqs(cfg, 4,
+                                                      (4, 7, 5, 6)))
+        got, eng = self._run(full, full.init_params(KEY),
+                             self._reqs(cfg, 4, (4, 7, 5, 6)),
+                             page_size=self.PAGE)
+        assert got == want
+        assert eng.trace_count == 1
+
+    def test_page_budget_admission_beats_dense_capacity(
+            self, model_and_params):
+        """ISSUE 6 satellite: short prompts must not pay the max_seq_len
+        capacity tax.  A pool holding FEWER tokens than
+        ``batch_slots × max_seq_len`` (dense-impossible) still admits
+        every slot, because reservations follow actual request length."""
+        model, params, cfg = model_and_params
+        num_pages = 8                        # 64 tokens of pool capacity
+        eng = BatchedEngine(model, params, ServeConfig(
+            batch_slots=4, max_seq_len=CACHE_LEN, eos_id=-1,
+            page_size=self.PAGE, num_pages=num_pages))
+        assert num_pages * self.PAGE < 4 * CACHE_LEN   # < dense bytes
+        prompts = _prompts(cfg, 4)
+        reqs = [Request(rid=i, prompt=p[:3], max_new_tokens=4)
+                for i, p in enumerate(prompts)]
+        assert eng.admit(reqs) == 4          # all slots, tiny pool
+        # capacity regression: the pool covers > batch_slots × avg_len
+        # actual tokens, while a dense layout of the same byte budget
+        # would hold only num_pages·page/max_len = 2 slots
+        avg_len = sum(len(r.prompt) + r.max_new_tokens for r in reqs) / 4
+        assert num_pages * self.PAGE > 4 * avg_len
+        assert num_pages * self.PAGE // CACHE_LEN < 4
+        done = eng.run([])
+        for r in reqs:
+            assert r.generated == sequential_decode(
+                model, params, r.prompt, 4, eos=-1), r.rid
+
+    def test_admission_stops_when_pool_exhausted(self, model_and_params):
+        """Page budget is a real budget: with pages for only one
+        reservation, the second request waits even though a slot is
+        free — then admits once the first reaps and frees its pages."""
+        model, params, cfg = model_and_params
+        prompts = _prompts(cfg, 2)
+        # each request reserves ceil((3..5 + 4 - 1)/8) = 1 page
+        eng = BatchedEngine(model, params, ServeConfig(
+            batch_slots=2, max_seq_len=CACHE_LEN, eos_id=-1,
+            page_size=self.PAGE, num_pages=1))
+        reqs = [Request(rid=i, prompt=p[:3], max_new_tokens=4)
+                for i, p in enumerate(prompts)]
+        assert eng.admit(reqs) == 1          # pool, not slots, is the gate
+        assert eng.pool.free_pages == 0
+        done = eng.run(reqs[1:])             # finishes r0, then admits r1
+        assert reqs[0].done and reqs[1].done
+        for r in reqs:
+            assert r.generated == sequential_decode(
+                model, params, r.prompt, 4, eos=-1), r.rid
+
+    def test_prefix_sharing_refcounts_and_tokens(self, model_and_params):
+        """Two requests with one common full prompt page share it by
+        refcount; the tail/frontier page is never shared (copy-on-write
+        never aliases), and output tokens match the non-sharing engine."""
+        model, params, cfg = model_and_params
+        prompt = _prompts(cfg, 1)[0] * 4     # >= 10 tokens: 1 full page
+        assert len(prompt) > self.PAGE
+        eng = BatchedEngine(model, params, ServeConfig(
+            batch_slots=2, max_seq_len=CACHE_LEN, eos_id=-1,
+            page_size=self.PAGE))
+        r0 = Request(rid=0, prompt=list(prompt), max_new_tokens=5)
+        r1 = Request(rid=1, prompt=list(prompt), max_new_tokens=5)
+        assert eng.admit([r0, r1]) == 2
+        head0, head1 = eng._slot_pages[0][0], eng._slot_pages[1][0]
+        assert head0 == head1                        # shared prefix page
+        assert eng.pool.refcount[head0] == 2
+        assert (set(eng._slot_pages[0][1:])
+                & set(eng._slot_pages[1][1:]) == set())   # tails disjoint
+        assert eng.pool.shared_hits == 1
+        eng.run([])
+        assert r0.generated == r1.generated
+        plain = BatchedEngine(model, params, ServeConfig(
+            batch_slots=2, max_seq_len=CACHE_LEN, eos_id=-1,
+            page_size=self.PAGE, prefix_sharing=False))
+        solo = plain.run([Request(rid=0, prompt=list(prompt),
+                                  max_new_tokens=5)])
+        assert plain.pool.shared_hits == 0
+        assert solo[0].generated == r0.generated
+
+    def test_reap_frees_pages_and_slot_reuse_is_clean(
+            self, model_and_params):
+        """Pages release exactly at reap; a newcomer over a reaped slot
+        reuses its pages without contamination from the previous
+        occupant (sentinel table hygiene)."""
+        model, params, cfg = model_and_params
+        prompts = _prompts(cfg, 4)
+        eng = BatchedEngine(model, params, ServeConfig(
+            batch_slots=2, max_seq_len=CACHE_LEN, eos_id=-1,
+            page_size=self.PAGE))
+        reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=3 + i)
+                for i in range(4)]
+        done = eng.run(reqs)
+        assert len(done) == 4
+        assert eng.pool.occupied_pages == sum(
+            len(p) for p in eng._slot_pages)
+        for r in done:
+            assert r.generated == sequential_decode(
+                model, params, r.prompt, 3 + r.rid, eos=-1), r.rid
+
+    def test_paged_tick_loop_is_transfer_free(self, model_and_params):
+        """Zero host transfers inside the paged tick loop — the block
+        tables, page pools, and per-tick stats all stay on device."""
+        model, params, cfg = model_and_params
+        eng = BatchedEngine(model, params, ServeConfig(
+            batch_slots=2, max_seq_len=CACHE_LEN, eos_id=-1,
+            page_size=self.PAGE))
+        eng.add_request(Request(rid=0, prompt=[3, 5, 7],
+                                max_new_tokens=50))
+        eng.step()                       # compile outside the guard
+        with jax.transfer_guard("disallow"):
+            for _ in range(10):
+                eng.step()
+        eng.sync()
+        assert len(eng.slots[0].generated) >= 11
+        assert eng.trace_count == 1
+
+    def test_tick_stats_harvested_in_sync(self, model_and_params):
+        """ISSUE 6 satellite: per-tick stats ride the device history and
+        drain in sync() — live slots, frontier pages, pool utilization,
+        shared-prefix hits."""
+        model, params, cfg = model_and_params
+        eng = BatchedEngine(model, params, ServeConfig(
+            batch_slots=2, max_seq_len=CACHE_LEN, eos_id=-1,
+            page_size=self.PAGE))
+        eng.run(self._reqs(cfg))
+        assert len(eng.tick_stats) == eng.tick_count
+        first = eng.tick_stats[0]
+        assert set(first) == {"tick", "live_slots", "frontier_pages",
+                              "pool_occupied_pages", "pool_utilization",
+                              "shared_prefix_hits"}
+        assert first["live_slots"] == 2
+        assert 0 < first["frontier_pages"] <= eng.num_pages
+        assert 0.0 < first["pool_utilization"] <= 1.0
+
+    def test_paged_hbm_cost_scales_with_occupied_pages(
+            self, model_and_params):
+        """Acceptance pin: the paged decode structural_cost.hbm_bytes
+        follows occupied pages, NOT max_len.  Doubling capacity at fixed
+        occupancy leaves traffic unchanged; doubling occupancy raises
+        it; a quarter-occupied paged cache beats the dense decode shape
+        that streams the whole strip."""
+        del model_and_params
+        base = dict(b=8, h=4, sq=1, d=64, n=256, causal=False)
+        for mode in REGISTRY.modes("flash_attention_matmul"):
+            paged = REGISTRY.structural_cost(
+                "flash_attention_matmul", mode, skv=1024, page_size=128,
+                pages_occupied=16, **base)
+            grown = REGISTRY.structural_cost(
+                "flash_attention_matmul", mode, skv=4096, page_size=128,
+                pages_occupied=16, **base)
+            double = REGISTRY.structural_cost(
+                "flash_attention_matmul", mode, skv=1024, page_size=128,
+                pages_occupied=32, **base)
+            dense = REGISTRY.structural_cost(
+                "flash_attention_matmul", mode, skv=1024, **base)
+            assert paged["hbm_bytes"] == grown["hbm_bytes"], mode
+            assert double["hbm_bytes"] > paged["hbm_bytes"], mode
+            assert paged["hbm_bytes"] < dense["hbm_bytes"], mode
+            assert paged["blocks_visited"] == 4 * 16, mode
 
 
 class TestHostSyncFreeTick:
