@@ -43,8 +43,10 @@ except ModuleNotFoundError:  # `python benchmarks/bench_kernels.py`
     sys.path.insert(0, os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))))
     from benchmarks.common import fmt_table, time_fn
-from repro.core.registry import REGISTRY
+from repro.core.registry import REGISTRY, ExecutionPolicy
 from repro.kernels import ops
+from repro.kernels.fused import quantize_weight
+from repro.models.attention import quantize_kv
 
 KEY = jax.random.PRNGKey(0)
 
@@ -128,6 +130,22 @@ def _cases(quick: bool):
     pos_pg = jnp.full((b_att,), occ * page - 1, jnp.int32)
     pages_occ = b_att * occ
 
+    # quantized streams (ISSUE 7): the same decode/paged shapes through
+    # the registered _q8 twins — int8 weights + per-channel scales (and,
+    # on the paged row, int8 KV pages + per-token scale strips) so the
+    # matrix records the weight/kv-stream cut next to the f32 rows it
+    # undercuts.  Weights are quantized once here: the timed region sees
+    # the serving steady state (dequantize-in-VMEM), not the one-time
+    # quantization.
+    p_q, p_s = quantize_weight(p_rms)
+    wc_q, wc_s = quantize_weight(w_cat)
+    wo_q, wo_s = quantize_weight(w_o)
+    k_pgq, k_pgs = quantize_kv(k_pg)
+    v_pgq, v_pgs = quantize_kv(v_pg)
+
+    def _q8_pol(mode):
+        return ExecutionPolicy(mode=mode, precision="int8")
+
     cases = [
         ("reduction", "seq",
          lambda mode: ops.reduce_sum(x_red, mode=mode),
@@ -194,6 +212,32 @@ def _cases(quick: bool):
          lambda mode: ops.fused_flash_attention_matmul(
              q_dec, k_pg, v_pg, w_o, mode=mode, pos=pos_pg,
              block_tables=tbl_pg),
+         dict(b=b_att, h=h, sq=1, skv=maxp * page, d=hd, n=n_wo,
+              causal=False, block_kv=page, page_size=page,
+              pages_occupied=pages_occ)),
+        # quantized decode rows (ISSUE 7): int8 weights dequantized in
+        # VMEM — weight_stream_bytes must undercut the matching f32
+        # decode row by >= 2x (compare() gates this); the paged row adds
+        # int8 KV pages + scale strips, halving the kv stream as well
+        ("rmsnorm_matmul_q8", "decode_q8",
+         lambda mode: ops.fused_rmsnorm_matmul(
+             x_dec, w_rms, p_q, w_scale=p_s, policy=_q8_pol(mode)),
+         dict(rows=b_dec, d=d_rms, n=n_proj)),
+        ("rmsnorm_swiglu_q8", "decode_q8",
+         lambda mode: ops.fused_rmsnorm_swiglu(
+             x_dec, w_rms, wc_q, w_scale=wc_s, policy=_q8_pol(mode)),
+         dict(rows=b_dec, d=d_rms, f=f_ff)),
+        ("flash_attention_matmul_q8", "decode_q8",
+         lambda mode: ops.fused_flash_attention_matmul(
+             q_dec, k_dec, v_dec, wo_q, pos=pos_dec, block_kv=blk,
+             w_scale=wo_s, policy=_q8_pol(mode)),
+         dict(b=b_att, h=h, sq=1, skv=s_att, d=hd, n=n_wo, causal=False,
+              block_kv=blk)),
+        ("flash_attention_matmul_q8", "decode_paged_q8",
+         lambda mode: ops.fused_flash_attention_matmul(
+             q_dec, k_pgq, v_pgq, wo_q, pos=pos_pg, block_tables=tbl_pg,
+             w_scale=wo_s, k_scale=k_pgs, v_scale=v_pgs,
+             policy=_q8_pol(mode)),
          dict(b=b_att, h=h, sq=1, skv=maxp * page, d=hd, n=n_wo,
               causal=False, block_kv=page, page_size=page,
               pages_occupied=pages_occ)),
@@ -338,6 +382,26 @@ def compare(old: dict, new: dict, threshold: float = 1.5) -> list:
                 f"{kernel}[{mode}]: paged decode hbm_bytes "
                 f"{nr['hbm_bytes']} not below dense decode "
                 f"{dense['hbm_bytes']} — occupied-page saving lost")
+    # quantized-vs-f32 stream gate (ISSUE 7): every ``_q8`` row's modeled
+    # weight stream must stay at or below HALF its f32 twin's (same mode,
+    # same shape regime) — the int8-weights-dequantized-in-VMEM saving
+    # the variants exist for — and wherever both rows model a kv stream
+    # (the paged regime), the int8-pages cut must hold at 2x as well.
+    for (kernel, mode, case), nr in new_rows.items():
+        if not kernel.endswith("_q8") or not case.endswith("_q8"):
+            continue
+        f32_row = new_rows.get((kernel[:-3], mode, case[:-3].rstrip("_")))
+        if f32_row is None:
+            continue
+        st, f32_st = nr["structural"], f32_row["structural"]
+        for col in ("weight_stream_bytes", "kv_stream_bytes"):
+            if col not in st or col not in f32_st:
+                continue
+            if 2 * st[col] > f32_st[col]:
+                failures.append(
+                    f"{kernel}[{mode}] ({case}): modeled {col} "
+                    f"{st[col]} exceeds 0.5x the f32 row's "
+                    f"{f32_st[col]} — int8 stream saving lost")
     if deltas:
         print("\n[bench_kernels] timing deltas vs baseline:")
         print(fmt_table(["kernel", "case", "mode", "old_ms", "new_ms",

@@ -59,10 +59,43 @@ def layout_of(flat_keys) -> str:
     return "legacy"
 
 
+def precision_of(flat: Mapping[str, Any]) -> str:
+    """'int8' when any weight leaf is quantized (has a scale sibling)."""
+    for key, leaf in flat.items():
+        if np.dtype(leaf.dtype) == np.int8 and key + "_scale" in flat:
+            return "int8"
+    return "f32"
+
+
+def quantize_leaf(arr: np.ndarray):
+    """Per-output-channel symmetric int8 with **power-of-two** scales.
+
+    The runtime scheme (kernels/fused.py) uses exact max/127 scales; at
+    rest we snap the scale to 2^(floor(log2 max) - 6) instead so the
+    round trip is a fixed point: dequantize→requantize recovers the same
+    exponent (127·2^e < 2^(e+7) keeps frexp on the same side), hence the
+    same scale, hence — round(q·s/s) = q — the same int8 bytes.  Cost is
+    under one bit of the 8 (|q| lands in [64,127] instead of [.,127])."""
+    a = arr.astype(np.float32)
+    m = np.maximum(np.max(np.abs(a), axis=-2), 1e-8)
+    _, e = np.frexp(m)                           # m = f * 2^e, f in [.5,1)
+    scale = np.ldexp(np.float32(1.0), e - 7).astype(np.float32)
+    q = np.clip(np.round(a / np.expand_dims(scale, -2)),
+                -127, 127).astype(np.int8)
+    return q, scale
+
+
+def dequantize_leaf(q: np.ndarray, scale: np.ndarray, dtype=np.float32):
+    return (q.astype(np.float32)
+            * np.expand_dims(scale, -2)).astype(dtype)
+
+
 def migrate_layout(flat: Dict[str, np.ndarray],
-                   template_shapes: Mapping[str, tuple]
+                   template_shapes: Mapping[str, tuple],
+                   template_dtypes: Optional[Mapping[str, Any]] = None
                    ) -> Dict[str, np.ndarray]:
-    """Reconcile checkpoint leaves to the template's parameter layout.
+    """Reconcile checkpoint leaves to the template's parameter layout
+    *and precision*.
 
     ``template_shapes`` maps the target tree's flat keys to leaf shapes.
     A template key missing from ``flat`` is synthesized from the other
@@ -71,8 +104,30 @@ def migrate_layout(flat: Dict[str, np.ndarray],
     leaf at the widths the template's part shapes dictate.  Leaves the
     template does not name are dropped once consumed; everything else
     passes through untouched.  Both directions are bitwise on weights.
-    """
+
+    With ``template_dtypes`` given, a precision pass brackets the layout
+    pass: int8 leaves whose ``<key>_scale`` sibling rides along are
+    dequantized *first* unless the template wants that exact key int8
+    (so an int8 concat can still split toward a legacy f32 template),
+    and template keys declared int8 are quantized *last*
+    (:func:`quantize_leaf`), growing the scale sibling the quantized
+    model tree expects.  Quantize→dequantize→quantize is bitwise-stable
+    on the int8 bytes and scales (power-of-two scales; see
+    :func:`quantize_leaf`)."""
     out = dict(flat)
+    dtypes = dict(template_dtypes or {})
+    # precision pass, downward: dequantize any scale-carrying int8 leaf
+    # the template does not want quantized (or does not name at all)
+    for key in list(out):
+        if key not in out:                 # a scale popped by a prior key
+            continue
+        skey = key + "_scale"
+        if (np.dtype(out[key].dtype) == np.int8 and skey in out
+                and np.dtype(dtypes.get(key, np.float32)) != np.int8):
+            target = dtypes.get(key, np.float32)
+            out[key] = dequantize_leaf(out[key], out[skey], target)
+            if skey not in template_shapes:
+                out.pop(skey)
     for key, shape in template_shapes.items():
         if key in out:
             continue
@@ -81,7 +136,7 @@ def migrate_layout(flat: Dict[str, np.ndarray],
         if base in LAYOUT_GROUPS:
             part_keys = [pfx + p for p in LAYOUT_GROUPS[base]]
             if all(p in flat for p in part_keys):
-                joined = np.concatenate([flat[p] for p in part_keys],
+                joined = np.concatenate([out[p] for p in part_keys],
                                         axis=-1)
                 if joined.shape != tuple(shape):
                     raise ValueError(
@@ -103,9 +158,25 @@ def migrate_layout(flat: Dict[str, np.ndarray],
                         f"{widths}")
                 off = 0
                 for p, w in zip(parts, widths):
-                    out[pfx + p] = flat[cat_key][..., off:off + w]
+                    out[pfx + p] = out[cat_key][..., off:off + w]
                     off += w
                 out.pop(cat_key, None)
+    # precision pass, upward: quantize toward int8 template leaves
+    for key, dtype in dtypes.items():
+        if np.dtype(dtype) != np.int8:
+            continue
+        leaf = out.get(key)
+        if leaf is None or np.dtype(leaf.dtype) == np.int8:
+            continue                       # absent, or already quantized
+        q, s = quantize_leaf(leaf)
+        skey = key + "_scale"
+        if skey in template_shapes and s.shape != tuple(
+                template_shapes[skey]):
+            raise ValueError(
+                f"{skey}: quantized scales have shape {s.shape} != "
+                f"template {tuple(template_shapes[skey])}")
+        out[key] = q
+        out[skey] = s
     return out
 
 
@@ -182,14 +253,17 @@ class CheckpointManager:
         host_flat = {k: np.asarray(jax.device_get(v))
                      for k, v in _flatten(tree).items()}
         if migrate_to is not None:
-            shapes = {k: tuple(v.shape)
-                      for k, v in _flatten(migrate_to).items()}
-            host_flat = migrate_layout(host_flat, shapes)
+            tmpl_flat = _flatten(migrate_to)
+            host_flat = migrate_layout(
+                host_flat,
+                {k: tuple(v.shape) for k, v in tmpl_flat.items()},
+                {k: v.dtype for k, v in tmpl_flat.items()})
         manifest = {
             "step": step,
             "time": time.time(),
             "extra": extra or {},
             "param_layout": layout_of(host_flat),
+            "precision": precision_of(host_flat),
             "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                        for k, v in host_flat.items()},
         }
@@ -277,12 +351,19 @@ class CheckpointManager:
                 needed |= {pfx + p for p in LAYOUT_GROUPS[base]} & stored
             elif base in _PART_TO_CAT:
                 needed |= {pfx + _PART_TO_CAT[base][0]} & stored
+        # an int8 checkpoint's scale siblings ride along even when the
+        # (f32) template does not name them — dequantization needs them
+        for key in list(needed):
+            skey = key + "_scale"
+            if skey in stored and skey not in tmpl_flat:
+                needed.add(skey)
         flat_np = {}
         for key in needed:
             fname = key.replace("/", "__") + ".npy"
             flat_np[key] = np.load(os.path.join(d, fname))
         flat_np = migrate_layout(
-            flat_np, {k: tuple(v.shape) for k, v in tmpl_flat.items()})
+            flat_np, {k: tuple(v.shape) for k, v in tmpl_flat.items()},
+            {k: v.dtype for k, v in tmpl_flat.items()})
         tree = _unflatten(template, flat_np)
 
         def put(leaf, tmpl, sh):

@@ -47,6 +47,12 @@ from repro.core.primitives import (ContractViolation, IsaMode,
 AUTO = "auto"
 POLICY_MODES = tuple(m.value for m in IsaMode) + (AUTO,)
 
+#: weight-precision knobs a policy may carry.  ``None`` and ``"f32"`` both
+#: mean full precision; other values retarget ops that registered a
+#: precision variant (ISSUE 7: ``"int8"`` — per-channel-scaled weights
+#: dequantized in VMEM).
+POLICY_PRECISIONS = (None, "f32", "int8")
+
 #: stable cheapness tiebreak: smaller primitive budget wins a cost tie,
 #: the library escape hatch never wins one.
 _PORTABILITY = {IsaMode.ABSTRACT: 0, IsaMode.ABSTRACT_SHUFFLE: 1,
@@ -78,6 +84,13 @@ class ExecutionPolicy:
     ``None`` (default) fuses exactly when ``mode == "auto"`` — the policy
     that ranks lowerings by structural cost is the one that should pick
     the variant whose ``hbm_bytes`` dropped by an activation round trip.
+
+    ``precision`` treats weight precision as one more dialect parameter
+    (ISSUE 7): ``"int8"`` retargets every op that registered a precision
+    variant (:meth:`LoweringRegistry.register_precision_variant`) to its
+    quantized twin at the :meth:`LoweringRegistry.select` dispatch point,
+    wherever the dialect keeps that variant legal; ops without a variant
+    are untouched (the declared-fallback discipline, not an error).
     """
 
     mode: str = AUTO
@@ -85,12 +98,17 @@ class ExecutionPolicy:
     interpret: Optional[bool] = None
     kernel_mode: Optional[str] = None
     fuse: Optional[bool] = None
+    precision: Optional[str] = None
 
     def __post_init__(self):
         for m in (self.mode, self.kernel_mode):
             if m is not None and m not in POLICY_MODES:
                 raise ValueError(
                     f"unknown isa mode {m!r}; valid: {POLICY_MODES}")
+        if self.precision not in POLICY_PRECISIONS:
+            raise ValueError(
+                f"unknown precision {self.precision!r}; valid: "
+                f"{POLICY_PRECISIONS}")
 
     def resolved_dialect(self) -> Dialect:
         return get_dialect(self.dialect)
@@ -216,6 +234,8 @@ class LoweringRegistry:
     def __init__(self):
         self._variants: Dict[str, Dict[IsaMode, Lowering]] = {}
         self._fallbacks: Dict[Tuple[str, IsaMode], Fallback] = {}
+        #: (base op, precision) -> quantized op name (ISSUE 7)
+        self._precision_variants: Dict[Tuple[str, str], str] = {}
         self.fallback_events: "collections.deque[FallbackEvent]" = \
             collections.deque(maxlen=self.EVENT_LOG_MAXLEN)
 
@@ -274,11 +294,38 @@ class LoweringRegistry:
         missing, to = IsaMode(missing), IsaMode(to)
         self._fallbacks[(op, missing)] = Fallback(op, missing, to, reason)
 
+    def register_precision_variant(self, base_op: str, precision: str,
+                                   quant_op: str) -> None:
+        """Declare that ``base_op`` under ``ExecutionPolicy(precision=)``
+        dispatches to ``quant_op`` — the quantized twin registered as its
+        own op (own contracts, own costs, own fallbacks).  Both ops must
+        already be registered; the mapping is consulted once, at
+        :meth:`select` entry, so every downstream decision (mode legality,
+        auto ranking, declared fallbacks) runs against the quantized op's
+        own rows."""
+        if precision not in POLICY_PRECISIONS or precision in (None, "f32"):
+            raise ValueError(f"not a quantized precision: {precision!r}")
+        for name in (base_op, quant_op):
+            if name not in self._variants:
+                raise UnsupportedLowering(
+                    f"precision variant maps unknown op {name!r}")
+        self._precision_variants[(base_op, precision)] = quant_op
+
+    def precision_variant(self, op: str, precision: Optional[str]
+                          ) -> Optional[str]:
+        """The quantized twin of ``op`` at ``precision``, if declared."""
+        if precision in (None, "f32"):
+            return None
+        return self._precision_variants.get((op, precision))
+
     def unregister(self, op: str, mode=None) -> None:
         if mode is None:
             self._variants.pop(op, None)
             for key in [k for k in self._fallbacks if k[0] == op]:
                 del self._fallbacks[key]
+            for key in [k for k, v in self._precision_variants.items()
+                        if k[0] == op or v == op]:
+                del self._precision_variants[key]
         else:
             self._variants.get(op, {}).pop(IsaMode(mode), None)
 
@@ -332,6 +379,12 @@ class LoweringRegistry:
         point every call site above repro/kernels routes through)."""
         policy = policy or current_policy() or DEFAULT_POLICY
         dialect = policy.resolved_dialect()
+        # precision retarget (ISSUE 7): a policy carrying precision="int8"
+        # dispatches to the quantized twin wherever one is declared — the
+        # retargeted op then competes on its own contracts/costs/fallbacks
+        quant_op = self.precision_variant(op, policy.precision)
+        if quant_op is not None:
+            op = quant_op
         try:
             variants = self._variants[op]
         except KeyError:

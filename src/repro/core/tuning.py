@@ -552,6 +552,14 @@ CANONICAL_SHAPES: Dict[str, List[Dict[str, int]]] = {
                                # pages) and large (deep block tables)
                                dict(sq=1, skv=512, d=64, n=256),
                                dict(sq=1, skv=4096, d=64, n=256)],
+    # quantized twins (ISSUE 7): decode-focused — the int8 weight stream
+    # matters most at small rows/sq, where weight traffic dominates; the
+    # q8 rows tune their own staging (the VMEM working set differs: int8
+    # weight tiles + f32 scale rows)
+    "rmsnorm_swiglu_q8": [dict(rows=128, d=1024, f=1024),
+                          dict(rows=64, d=256, f=256)],
+    "flash_attention_matmul_q8": [dict(sq=1, skv=1024, d=64, n=256),
+                                  dict(sq=1, skv=512, d=64, n=256)],
 }
 
 

@@ -115,7 +115,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
                   block_q: int, block_kv: int, n_kv: int, mode: str,
                   skip: bool, kv_len: int | None = None, q_axis: int = 2,
                   kv_axis: int = 3, epilogue=None, pos_ref=None,
-                  skip_dead: bool = False):
+                  skip_dead: bool = False, k_scale_ref=None,
+                  v_scale_ref=None):
     """One online-softmax block program.
 
     ``kv_len`` is the true (unpadded) kv length: when the sequence was
@@ -133,6 +134,11 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
     ``> pos`` are masked, replacing the static causal triangle with the
     traced per-slot cache frontier (the serve tick's batch mixes
     positions, so the mask cannot be a static kv_offset).
+
+    ``k_scale_ref``/``v_scale_ref`` are the int8-KV dequant hooks: when
+    set, k/v blocks arrive as int8 values and the (bkv, 1) per-token
+    scale blocks rescale them *in VMEM* — quantized cache pages never
+    stage through HBM at f32 width (ISSUE 7).
     """
     qi, ki = pl.program_id(q_axis), pl.program_id(kv_axis)
 
@@ -146,6 +152,10 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         q = q_ref[0, 0].astype(jnp.float32)              # (bq, d)
         k = k_ref[0, 0].astype(jnp.float32)              # (bkv, d)
         v = v_ref[0, 0].astype(jnp.float32)              # (bkv, d)
+        if k_scale_ref is not None:
+            k = k * k_scale_ref[0, 0]                    # (bkv, 1) bcast
+        if v_scale_ref is not None:
+            v = v * v_scale_ref[0, 0]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale  # (bq, bkv)

@@ -82,11 +82,73 @@ register_op_space("add_rmsnorm", "rowwise", max_block_rows=_MAX_BLOCK_ROWS)
 # have genuinely different working sets and get their own Eq. 1 grids.
 register_op_space("rmsnorm_swiglu", "swiglu")
 register_op_space("flash_attention_matmul", "attention_matmul")
+# The quantized twins tune separately: their weight tiles are int8, so a
+# given scratchpad budget admits larger (or deeper-buffered) tiles — the
+# tuner must be allowed to find that.  rmsnorm_matmul_q8 rides gemm's
+# space exactly like its f32 twin.
+register_op_space("rmsnorm_swiglu_q8", "swiglu")
+register_op_space("flash_attention_matmul_q8", "attention_matmul")
 
 #: every fused multi-op lowering this module registers — the sweep target
 #: for validate_contracts' cost-accounting gate and the property tests.
+#: Extended with QUANT_OPS at the bottom of this module once the quantized
+#: twins are registered.
 FUSED_OPS = ("add_rmsnorm", "flash_attention_matmul", "rmsnorm_matmul",
              "rmsnorm_swiglu")
+
+#: the int8 dialect variants (ISSUE 7): same fused program structure, but
+#: the weight prologue loads int8 blocks + per-channel f32 scales and
+#: dequantizes in VMEM — quantized weights never stage through HBM at f32
+#: width.  ``REGISTRY.select`` retargets the f32 op onto its twin when the
+#: policy carries ``precision="int8"``.
+QUANT_OPS = ("flash_attention_matmul_q8", "rmsnorm_matmul_q8",
+             "rmsnorm_swiglu_q8")
+
+
+def quantize_weight(w: jax.Array):
+    """Per-output-channel symmetric int8 quantization of a weight matrix.
+
+    ``w``: [..., K, N] — the scale reduces over the contraction axis
+    (axis -2), one f32 scale per output channel: [..., N].  The channel
+    max maps to exactly ±127, so ``dequantize_weight`` round-trips the
+    extreme value losslessly.
+    """
+    m = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-2)
+    scale = jnp.maximum(m / 127.0, 1e-8).astype(jnp.float32)
+    q = jnp.clip(jnp.round(w.astype(jnp.float32)
+                           / jnp.expand_dims(scale, -2)),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_weight(q: jax.Array, scale: jax.Array,
+                      dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`quantize_weight` (the library rows' prologue)."""
+    return (q.astype(jnp.float32)
+            * jnp.expand_dims(scale, -2)).astype(dtype)
+
+
+def _weight_stream(m: int, n: int, k: int, mode: str, dtype,
+                   plan_dialect: str | None):
+    """The B-matrix leg of the composed GEMM's hbm stream.
+
+    Mirrors ``gemm.structural_cost`` exactly (same resolver, same library
+    constant, same re-read count) so a quantized cost can substitute its
+    own weight stream into the composed sum without breaking the
+    ``hbm == unfused - saved`` identity validate_contracts pins."""
+    itemsize = jnp.dtype(dtype).itemsize
+    if mode == "library":
+        bm = 512
+    else:
+        bm, _, _ = _gemm.block_shape_for(mode, m, n, k, dtype, plan_dialect)
+    rereads = max(1, -(-m // bm))
+    return k * n * itemsize * rereads, rereads
+
+
+def _q8_weight_stream(rereads: int, k: int, n: int) -> int:
+    """int8 weight elements + the f32 per-channel scale row, re-fetched
+    once per row-block sweep like the f32 weight tile they replace."""
+    return (k * n * 1 + n * 4) * rereads
 
 # --------------------------------------------------------------------------
 # Contracts: the fused ops spend the union of their constituents' budgets.
@@ -151,10 +213,51 @@ _SW_NATIVE = KernelContract(
     native_features=frozenset({"fused_epilogue", "mxu_aligned_tiles",
                                "dimension_semantics", "multi_buffering"}))
 
+# The quantized twins spend the identical primitive budgets: dequantize
+# is an elementwise multiply on a block already resident in VMEM — no new
+# cross-lane or native capability is consumed, only the *operand dtype*
+# of the prologue load changes.  (Same contract discipline, new kernel
+# names: contract.kernel must match the registered op.)
+_RMQ_ABSTRACT = KernelContract(
+    kernel="rmsnorm_matmul_q8", mode=IsaMode.ABSTRACT,
+    primitives=_RM_ABSTRACT.primitives)
+_RMQ_SHUFFLE = KernelContract(
+    kernel="rmsnorm_matmul_q8", mode=IsaMode.ABSTRACT_SHUFFLE,
+    primitives=_RM_SHUFFLE.primitives)
+_RMQ_NATIVE = KernelContract(
+    kernel="rmsnorm_matmul_q8", mode=IsaMode.NATIVE,
+    primitives=frozenset(Primitive),
+    native_features=_RM_NATIVE.native_features)
+
+_FAQ_ABSTRACT = KernelContract(
+    kernel="flash_attention_matmul_q8", mode=IsaMode.ABSTRACT,
+    primitives=_FA_ABSTRACT.primitives)
+_FAQ_SHUFFLE = KernelContract(
+    kernel="flash_attention_matmul_q8", mode=IsaMode.ABSTRACT_SHUFFLE,
+    primitives=_FA_SHUFFLE.primitives)
+_FAQ_NATIVE = KernelContract(
+    kernel="flash_attention_matmul_q8", mode=IsaMode.NATIVE,
+    primitives=frozenset(Primitive),
+    native_features=_FA_NATIVE.native_features)
+
+_SWQ_ABSTRACT = KernelContract(
+    kernel="rmsnorm_swiglu_q8", mode=IsaMode.ABSTRACT,
+    primitives=_SW_ABSTRACT.primitives)
+_SWQ_SHUFFLE = KernelContract(
+    kernel="rmsnorm_swiglu_q8", mode=IsaMode.ABSTRACT_SHUFFLE,
+    primitives=_SW_SHUFFLE.primitives)
+_SWQ_NATIVE = KernelContract(
+    kernel="rmsnorm_swiglu_q8", mode=IsaMode.NATIVE,
+    primitives=frozenset(Primitive),
+    native_features=_SW_NATIVE.native_features)
+
 for _c in (_RM_ABSTRACT, _RM_SHUFFLE, _RM_NATIVE,
            _AR_ABSTRACT, _AR_SHUFFLE, _AR_NATIVE,
            _FA_ABSTRACT, _FA_SHUFFLE, _FA_NATIVE,
-           _SW_ABSTRACT, _SW_SHUFFLE, _SW_NATIVE):
+           _SW_ABSTRACT, _SW_SHUFFLE, _SW_NATIVE,
+           _RMQ_ABSTRACT, _RMQ_SHUFFLE, _RMQ_NATIVE,
+           _FAQ_ABSTRACT, _FAQ_SHUFFLE, _FAQ_NATIVE,
+           _SWQ_ABSTRACT, _SWQ_SHUFFLE, _SWQ_NATIVE):
     validate_contract(_c)
 
 
@@ -163,25 +266,36 @@ for _c in (_RM_ABSTRACT, _RM_SHUFFLE, _RM_NATIVE,
 # --------------------------------------------------------------------------
 
 
-def _rmsnorm_matmul_kernel(x_ref, w_ref, p_ref, o_ref, scratch_ref, *,
-                           eps: float, mode: str, d_true: int):
+def _rmsnorm_matmul_kernel(*refs, eps: float, mode: str, d_true: int,
+                           quant: bool = False):
+    if quant:
+        x_ref, w_ref, p_ref, s_ref, o_ref, scratch_ref = refs
+    else:
+        x_ref, w_ref, p_ref, o_ref, scratch_ref = refs
+        s_ref = None
     x = x_ref[...].astype(jnp.float32)                    # (bm, d)
     w = w_ref[...].astype(jnp.float32)                    # (1, d)
     # one shared source for the per-mode moment discipline (rmsnorm.py)
     y = _rmsnorm.normalize_block(x, w, scratch_ref, eps=eps, mode=mode,
                                  d_true=d_true)
+    p = p_ref[...].astype(jnp.float32)                    # (d, bn)
+    if s_ref is not None:
+        # the quantized prologue: the weight block arrives int8 and its
+        # (1, bn) per-channel scales rescale it HERE, in VMEM — the f32
+        # weight never exists in HBM (ISSUE 7).
+        p = p * s_ref[...]
     # the epilogue: the normalized block goes straight into the MXU
     # contraction from VMEM — it never exists in HBM.
     o_ref[...] = jax.lax.dot_general(
-        y, p_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        y, p, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "eps", "interpret",
                                              "plan_dialect"))
 def rmsnorm_matmul(x: jax.Array, weight: jax.Array, w_proj: jax.Array, *,
-                   eps: float = 1e-6, mode: str = "native",
-                   interpret: bool = True,
+                   w_scale: jax.Array | None = None, eps: float = 1e-6,
+                   mode: str = "native", interpret: bool = True,
                    plan_dialect: str | None = None) -> jax.Array:
     """``rmsnorm(x, weight) @ w_proj`` in one kernel.
 
@@ -189,8 +303,15 @@ def rmsnorm_matmul(x: jax.Array, weight: jax.Array, w_proj: jax.Array, *,
     accumulation).  Tiled over (row blocks × N blocks) with the shared
     GEMM tile resolver; the full feature row stays resident per block
     (the moment needs the whole row), so D is not tiled.
+
+    ``w_scale`` ([N] f32, with ``w_proj`` int8) selects the quantized
+    prologue: the weight block is dequantized per-channel in VMEM
+    (the ``rmsnorm_matmul_q8`` registry rows; the library row
+    dequantizes up front and runs the unfused pair).
     """
     if mode == "library":
+        if w_scale is not None:
+            w_proj = dequantize_weight(w_proj, w_scale, x.dtype)
         y = _ref.rmsnorm(x, weight, eps)
         return jnp.einsum("...d,dn->...n", y, w_proj.astype(y.dtype))
     *lead, d = x.shape
@@ -202,6 +323,7 @@ def rmsnorm_matmul(x: jax.Array, weight: jax.Array, w_proj: jax.Array, *,
     x2d = x.reshape(rows, d)
     w2d = weight.reshape(1, d)
     p2d = w_proj
+    s2d = None if w_scale is None else w_scale.reshape(1, n)
 
     d_padded = d
     if mode != "native":
@@ -222,6 +344,8 @@ def rmsnorm_matmul(x: jax.Array, weight: jax.Array, w_proj: jax.Array, *,
         x2d = jnp.pad(x2d, ((0, pad_m), (0, 0)))
     if pad_n:
         p2d = jnp.pad(p2d, ((0, 0), (0, pad_n)))
+        if s2d is not None:
+            s2d = jnp.pad(s2d, ((0, 0), (0, pad_n)))
     mp, np_ = rows + pad_m, n + pad_n
     grid = (mp // bm, np_ // bn)
 
@@ -230,15 +354,23 @@ def rmsnorm_matmul(x: jax.Array, weight: jax.Array, w_proj: jax.Array, *,
         params = CompilerParams(
             dimension_semantics=("parallel", "parallel"))
 
+    in_specs = [
+        pl.BlockSpec((bm, d_padded), lambda i, j: (i, 0)),
+        pl.BlockSpec((1, d_padded), lambda i, j: (0, 0)),
+        pl.BlockSpec((d_padded, bn), lambda i, j: (0, j)),
+    ]
+    operands = [x2d, w2d, p2d]
+    if s2d is not None:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j: (0, j)))
+        operands.append(s2d)
+    kernel_name = ("uisa_rmsnorm_matmul_q8_" if s2d is not None
+                   else "uisa_rmsnorm_matmul_") + mode.replace('+', '_')
+
     out = pl.pallas_call(
         functools.partial(_rmsnorm_matmul_kernel, eps=eps, mode=mode,
-                          d_true=d),
+                          d_true=d, quant=s2d is not None),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, d_padded), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, d_padded), lambda i, j: (0, 0)),
-            pl.BlockSpec((d_padded, bn), lambda i, j: (0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
         # only the abstract moment tree stages through scratch
@@ -247,8 +379,8 @@ def rmsnorm_matmul(x: jax.Array, weight: jax.Array, w_proj: jax.Array, *,
             jnp.float32)],
         compiler_params=params,
         interpret=interpret,
-        name=f"uisa_rmsnorm_matmul_{mode.replace('+', '_')}",
-    )(x2d, w2d, p2d)
+        name=kernel_name,
+    )(*operands)
     return out[:rows, :n].reshape(*lead, n)
 
 
@@ -288,10 +420,12 @@ def structural_cost_rmsnorm_matmul(rows: int, d: int, n: int, mode: str,
     else:
         round_trips = 0
         scratch_bytes = 0
+    ws, _ = _weight_stream(rows, n, d, mode, dtype, plan_dialect)
     return {
         "hbm_bytes": unfused - saved,
         "hbm_bytes_unfused_pair": unfused,
         "hbm_bytes_saved": saved,
+        "weight_stream_bytes": ws,
         "flops": g["flops"],
         "block": (bm, bn),
         "blocks": steps,
@@ -301,6 +435,33 @@ def structural_cost_rmsnorm_matmul(rows: int, d: int, n: int, mode: str,
         if mode == "abstract+shuffle" else 0,
         "fused_epilogue": mode != "library",
     }
+
+
+def structural_cost_rmsnorm_matmul_q8(rows: int, d: int, n: int, mode: str,
+                                      dtype=jnp.float32,
+                                      plan_dialect: str | None = None
+                                      ) -> dict:
+    """The f32 cost with the weight stream swapped to int8 + scales.
+
+    Same composed sum, same identities (``hbm == unfused - saved``, the
+    saving unchanged — the fusion still removes exactly one activation
+    round trip); only the B-matrix leg of the GEMM term shrinks from f32
+    width to int8 + one f32 scale row per re-read.  The library row is
+    the dequantize-then-unfused-pair reference and carries the same
+    substitution (XLA fuses the dequant into the consumer's read)."""
+    base = structural_cost_rmsnorm_matmul(rows, d, n, mode, dtype,
+                                          plan_dialect)
+    ws_f32, rereads = _weight_stream(rows, n, d, mode, dtype, plan_dialect)
+    ws_q8 = _q8_weight_stream(rereads, d, n)
+    delta = ws_f32 - ws_q8
+    base.update(
+        hbm_bytes=base["hbm_bytes"] - delta,
+        hbm_bytes_unfused_pair=base["hbm_bytes_unfused_pair"] - delta,
+        weight_stream_bytes=ws_q8,
+        weight_stream_bytes_f32=ws_f32,
+        weight_precision="int8",
+    )
+    return base
 
 
 # --------------------------------------------------------------------------
@@ -446,14 +607,16 @@ def structural_cost_add_rmsnorm(rows: int, d: int, mode: str,
 
 def resolve_attention_matmul_blocks(mode: str, sq: int, skv: int, d: int,
                                     n: int, block_q=None, block_kv=None,
-                                    plan_dialect: str | None = None):
+                                    plan_dialect: str | None = None,
+                                    op: str = "flash_attention_matmul"):
     """Caller-pinned blocks win; then this op's own tuned entry (its
     working set includes the wo slice and the shared output block, so it
     tunes separately from bare flash); then the flash resolution.  Shared
     by the kernel and ``structural_cost`` — modeled == executed.
-    ``plan_dialect`` names the table slice consulted."""
+    ``plan_dialect`` names the table slice consulted; ``op`` names the
+    table *row* — the quantized twin consults its own tuned slice."""
     if block_q is None or block_kv is None:
-        entry = tuned_entry("flash_attention_matmul", mode,
+        entry = tuned_entry(op, mode,
                             attention_matmul_bucket(sq, skv, d, n),
                             dialect=plan_dialect)
         if entry and "block_q" in entry and "block_kv" in entry:
@@ -475,20 +638,28 @@ def _flash_matmul_kernel(*refs, scale: float,
                          causal: bool, kv_offset: int, block_q: int,
                          block_kv: int, n_kv: int, n_heads: int,
                          kv_len: int | None, mode: str,
-                         has_pos: bool = False, paged: bool = False):
+                         has_pos: bool = False, paged: bool = False,
+                         quant_w: bool = False, quant_kv: bool = False):
+    # Operand order (optional members gated by the static flags):
+    #   [tbl,] q, k, [k_scale,] v, [v_scale,] w, [w_scale,] [pos]
+    # paged: the block table is the scalar-prefetch operand (consumed
+    # entirely by the kv index maps — the gather) and the per-slot
+    # frontier rides in as the (1, 1) pos block.  quant_kv: the kv blocks
+    # arrive int8 with (block_kv, 1) per-token scales; quant_w: the wo
+    # slice arrives int8 with a (1, n) per-channel scale row.  All
+    # dequantization happens in VMEM, on blocks already resident.
+    refs = list(refs)
     if paged:
-        # paged decode shape: the block table is the scalar-prefetch
-        # operand (consumed entirely by the kv index maps — the gather);
-        # the per-slot frontier rides in as the (1, 1) pos block.
-        _tbl_ref, q_ref, k_ref, v_ref, w_ref, pos_ref, *rest = refs
-    elif has_pos:
-        # decode shape: the per-sequence cache frontier rides in as a
-        # (1, 1) int32 block and replaces the static causal triangle
-        q_ref, k_ref, v_ref, w_ref, pos_ref, *rest = refs
-    else:
-        q_ref, k_ref, v_ref, w_ref, *rest = refs
-        pos_ref = None
-    o_ref, m_ref, l_ref, acc_ref, red_ref, oacc_ref = rest
+        refs.pop(0)                               # block table (index maps)
+    q_ref = refs.pop(0)
+    k_ref = refs.pop(0)
+    k_scale_ref = refs.pop(0) if quant_kv else None
+    v_ref = refs.pop(0)
+    v_scale_ref = refs.pop(0) if quant_kv else None
+    w_ref = refs.pop(0)
+    ws_ref = refs.pop(0) if quant_w else None
+    pos_ref = refs.pop(0) if (paged or has_pos) else None
+    o_ref, m_ref, l_ref, acc_ref, red_ref, oacc_ref = refs
     hh = pl.program_id(2)
 
     def epilogue(out):
@@ -497,8 +668,11 @@ def _flash_matmul_kernel(*refs, scale: float,
         # scratch (a single output-dtype cast at the last head — the same
         # accumulation discipline as the unfused einsum), so the
         # attention output never exists in HBM.
+        w = w_ref[0].astype(jnp.float32)
+        if ws_ref is not None:
+            w = w * ws_ref[...]                   # (1, n) channel scales
         contrib = jax.lax.dot_general(
-            out, w_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            out, w, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
 
         @pl.when(hh == 0)
@@ -518,12 +692,13 @@ def _flash_matmul_kernel(*refs, scale: float,
         scale=scale, causal=causal, kv_offset=kv_offset, block_q=block_q,
         block_kv=block_kv, n_kv=n_kv, mode=mode,
         skip=(mode == "native" and causal), kv_len=kv_len, q_axis=1,
-        kv_axis=3, epilogue=epilogue, pos_ref=pos_ref, skip_dead=paged)
+        kv_axis=3, epilogue=epilogue, pos_ref=pos_ref, skip_dead=paged,
+        k_scale_ref=k_scale_ref, v_scale_ref=v_scale_ref)
 
 
 @functools.partial(jax.jit, static_argnames=(
     "causal", "mode", "interpret", "block_q", "block_kv", "kv_offset",
-    "plan_dialect"))
+    "plan_dialect", "tuning_op"))
 def flash_attention_matmul(q: jax.Array, k: jax.Array, v: jax.Array,
                            w_out: jax.Array, *, causal: bool = True,
                            kv_offset: int | None = None,
@@ -532,7 +707,12 @@ def flash_attention_matmul(q: jax.Array, k: jax.Array, v: jax.Array,
                            block_kv: int | None = None,
                            pos: jax.Array | None = None,
                            block_tables: jax.Array | None = None,
-                           plan_dialect: str | None = None) -> jax.Array:
+                           w_scale: jax.Array | None = None,
+                           k_scale: jax.Array | None = None,
+                           v_scale: jax.Array | None = None,
+                           plan_dialect: str | None = None,
+                           tuning_op: str = "flash_attention_matmul"
+                           ) -> jax.Array:
     """``flash_attention(q, k, v)`` -> ``wo`` projection in one kernel.
 
     q: [B,H,Sq,D]; k/v: [B,Hkv,Skv,D]; w_out: [H·D, N] -> [B,Sq,N].
@@ -557,12 +737,26 @@ def flash_attention_matmul(q: jax.Array, k: jax.Array, v: jax.Array,
     walks table entries instead of a contiguous strip, and a ``pl.when``
     on the ``pos`` frontier skips dead blocks entirely — the kernel only
     ever visits live pages.  Requires ``pos``; ``causal`` is ignored.
+
+    ``w_scale`` ([N] f32, with ``w_out`` int8) selects the quantized
+    weight prologue — the head's wo slice is dequantized per-channel in
+    VMEM.  ``k_scale``/``v_scale`` (paged shape only: per-token scale
+    pools ``[P, Hkv, page_size, 1]``, with int8 kv pools) select the
+    int8-KV gather: pages are dequantized in VMEM after the block-table
+    gather.  These are the ``flash_attention_matmul_q8`` registry rows;
+    ``tuning_op`` (static) names the tuned-table row consulted so the
+    quantized twin runs its own staging plans.
     """
     if block_tables is not None:
         return _paged_attention_matmul(
             q, k, v, w_out, block_tables=block_tables, pos=pos, mode=mode,
-            interpret=interpret, block_q=block_q,
-            plan_dialect=plan_dialect)
+            interpret=interpret, block_q=block_q, w_scale=w_scale,
+            k_scale=k_scale, v_scale=v_scale, plan_dialect=plan_dialect,
+            tuning_op=tuning_op)
+    if k_scale is not None or v_scale is not None:
+        raise ValueError("int8 kv scales are a paged-shape operand; the "
+                         "dense decode path dequantizes its cache strip "
+                         "up front (models/attention.py)")
     b, h, sq, d = q.shape
     _, hkv, skv, _ = k.shape
     assert h % hkv == 0, (h, hkv)
@@ -570,6 +764,8 @@ def flash_attention_matmul(q: jax.Array, k: jax.Array, v: jax.Array,
     assert w_out.shape[0] == h * d, (w_out.shape, h, d)
     n = w_out.shape[1]
     if mode == "library":
+        if w_scale is not None:
+            w_out = dequantize_weight(w_out, w_scale, q.dtype)
         if pos is None:
             o = _ref.attention(q, k, v, causal=causal)
         else:
@@ -590,7 +786,8 @@ def flash_attention_matmul(q: jax.Array, k: jax.Array, v: jax.Array,
     scale = 1.0 / (d ** 0.5)
     causal = causal and pos is None
     block_q, block_kv = resolve_attention_matmul_blocks(
-        mode, sq, skv, d, n, block_q, block_kv, plan_dialect)
+        mode, sq, skv, d, n, block_q, block_kv, plan_dialect,
+        op=tuning_op)
     q_p = _attention._pad_seq(q, block_q)
     k_p = _attention._pad_seq(k, block_kv)
     v_p = _attention._pad_seq(v, block_kv)
@@ -616,6 +813,13 @@ def flash_attention_matmul(q: jax.Array, k: jax.Array, v: jax.Array,
         pl.BlockSpec((1, d, n_p), lambda bb, qi, hh, ki: (hh, 0, 0)),
     ]
     operands = [q_p, k_p, v_p, w3]
+    if w_scale is not None:
+        s2d = w_scale.reshape(1, n).astype(jnp.float32)
+        if n_p != n:
+            s2d = jnp.pad(s2d, ((0, 0), (0, n_p - n)))
+        in_specs.append(pl.BlockSpec((1, n_p),
+                                     lambda bb, qi, hh, ki: (0, 0)))
+        operands.append(s2d)
     if pos is not None:
         in_specs.append(pl.BlockSpec((1, 1),
                                      lambda bb, qi, hh, ki: (bb, 0)))
@@ -626,7 +830,7 @@ def flash_attention_matmul(q: jax.Array, k: jax.Array, v: jax.Array,
             _flash_matmul_kernel, scale=scale, causal=causal,
             kv_offset=kv_offset, block_q=block_q, block_kv=block_kv,
             n_kv=grid[3], n_heads=h, kv_len=skv, mode=mode,
-            has_pos=pos is not None),
+            has_pos=pos is not None, quant_w=w_scale is not None),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block_q, n_p),
@@ -650,7 +854,9 @@ def flash_attention_matmul(q: jax.Array, k: jax.Array, v: jax.Array,
 def _paged_attention_matmul(q, k_pages, v_pages, w_out, *, block_tables,
                             pos, mode: str, interpret: bool,
                             block_q: int | None,
-                            plan_dialect: str | None):
+                            w_scale=None, k_scale=None, v_scale=None,
+                            plan_dialect: str | None = None,
+                            tuning_op: str = "flash_attention_matmul"):
     """The paged decode lowering of ``flash_attention_matmul``.
 
     The kv grid dimension indexes *table entries*: the block table is a
@@ -660,10 +866,17 @@ def _paged_attention_matmul(q, k_pages, v_pages, w_out, *, block_tables,
     entries clamp onto a real page whose contents the ``pos`` mask hides,
     and the ``skip_dead`` predicate in the shared flash kernel skips
     every block past the frontier before it computes anything.
+
+    ``k_scale``/``v_scale`` ([P, Hkv, page_size, 1] f32 per-token scale
+    pools, with int8 ``k_pages``/``v_pages``) ride the *same* block-table
+    index maps as the value pools, so the gather stays one scalar-prefetch
+    plan and dequantization happens in VMEM on the gathered page.
     """
     if pos is None:
         raise ValueError("paged flash_attention_matmul requires the "
                          "per-slot pos frontier")
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("int8 paged kv needs BOTH k_scale and v_scale")
     b, h, sq, d = q.shape
     num_pages, hkv, page_size, _ = k_pages.shape
     assert h % hkv == 0, (h, hkv)
@@ -677,13 +890,19 @@ def _paged_attention_matmul(q, k_pages, v_pages, w_out, *, block_tables,
         # the unfused pair: gather the logical strip, masked softmax over
         # the frontier, then wo — the dense decode library row applied to
         # the gathered pages (models/attention.py::gather_paged_kv math).
+        # int8 pools dequantize at gather time (host-side reference).
+        if k_scale is not None:
+            k_pages = k_pages.astype(jnp.float32) * k_scale
+            v_pages = v_pages.astype(jnp.float32) * v_scale
+
         def strip(pages):
             s = pages[tbl]                     # [B, maxp, Hkv, ps, D]
             return s.transpose(0, 2, 1, 3, 4).reshape(b, hkv, skv, d)
         return flash_attention_matmul(
-            q, strip(k_pages), strip(v_pages), w_out, causal=False,
+            q, strip(k_pages).astype(q.dtype),
+            strip(v_pages).astype(q.dtype), w_out, causal=False,
             mode="library", interpret=interpret, pos=pos,
-            plan_dialect=plan_dialect)
+            w_scale=w_scale, plan_dialect=plan_dialect)
     if page_size % LANES != 0 and mode != "native":
         raise ValueError(
             f"paged decode under mode={mode!r} needs page_size to be a "
@@ -691,7 +910,8 @@ def _paged_attention_matmul(q, k_pages, v_pages, w_out, *, block_tables,
             f"{LANES}-lane vregs); got page_size={page_size}")
     scale = 1.0 / (d ** 0.5)
     bq, _ = resolve_attention_matmul_blocks(mode, sq, skv, d, n, block_q,
-                                            page_size, plan_dialect)
+                                            page_size, plan_dialect,
+                                            op=tuning_op)
     q_p = _attention._pad_seq(q, bq)
     sqp = q_p.shape[2]
     n_p = align_up(n, 128)
@@ -705,22 +925,46 @@ def _paged_attention_matmul(q, k_pages, v_pages, w_out, *, block_tables,
         params = CompilerParams(dimension_semantics=(
             "parallel", "parallel", "arbitrary", "arbitrary"))
 
+    page_spec = pl.BlockSpec((1, 1, page_size, d),
+                             lambda bb, qi, hh, ki, tr, g=group:
+                             (tr[bb, ki], hh // g, 0, 0))
+    # per-token scale pools ride the SAME table-gather index map as the
+    # value pools — one scalar-prefetch plan covers both widths
+    scale_spec = pl.BlockSpec((1, 1, page_size, 1),
+                              lambda bb, qi, hh, ki, tr, g=group:
+                              (tr[bb, ki], hh // g, 0, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, bq, d),
+                     lambda bb, qi, hh, ki, tr: (bb, hh, qi, 0)),
+        page_spec,
+    ]
+    operands = [q_p, k_pages]
+    if k_scale is not None:
+        in_specs.append(scale_spec)
+        operands.append(k_scale.astype(jnp.float32))
+    in_specs.append(page_spec)
+    operands.append(v_pages)
+    if v_scale is not None:
+        in_specs.append(scale_spec)
+        operands.append(v_scale.astype(jnp.float32))
+    in_specs.append(pl.BlockSpec((1, d, n_p),
+                                 lambda bb, qi, hh, ki, tr: (hh, 0, 0)))
+    operands.append(w3)
+    if w_scale is not None:
+        s2d = w_scale.reshape(1, n).astype(jnp.float32)
+        if n_p != n:
+            s2d = jnp.pad(s2d, ((0, 0), (0, n_p - n)))
+        in_specs.append(pl.BlockSpec((1, n_p),
+                                     lambda bb, qi, hh, ki, tr: (0, 0)))
+        operands.append(s2d)
+    in_specs.append(pl.BlockSpec((1, 1),
+                                 lambda bb, qi, hh, ki, tr: (bb, 0)))
+    operands.append(pos.reshape(b, 1).astype(jnp.int32))
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, bq, d),
-                         lambda bb, qi, hh, ki, tr: (bb, hh, qi, 0)),
-            pl.BlockSpec((1, 1, page_size, d),
-                         lambda bb, qi, hh, ki, tr, g=group:
-                         (tr[bb, ki], hh // g, 0, 0)),
-            pl.BlockSpec((1, 1, page_size, d),
-                         lambda bb, qi, hh, ki, tr, g=group:
-                         (tr[bb, ki], hh // g, 0, 0)),
-            pl.BlockSpec((1, d, n_p),
-                         lambda bb, qi, hh, ki, tr: (hh, 0, 0)),
-            pl.BlockSpec((1, 1), lambda bb, qi, hh, ki, tr: (bb, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bq, n_p),
                                lambda bb, qi, hh, ki, tr: (bb, qi, 0)),
         scratch_shapes=[
@@ -736,14 +980,14 @@ def _paged_attention_matmul(q, k_pages, v_pages, w_out, *, block_tables,
         functools.partial(
             _flash_matmul_kernel, scale=scale, causal=False, kv_offset=0,
             block_q=bq, block_kv=page_size, n_kv=maxp, n_heads=h,
-            kv_len=None, mode=mode, has_pos=True, paged=True),
+            kv_len=None, mode=mode, has_pos=True, paged=True,
+            quant_w=w_scale is not None, quant_kv=k_scale is not None),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, sqp, n_p), q.dtype),
         compiler_params=params,
         interpret=interpret,
         name=f"uisa_paged_attention_matmul_{mode.replace('+', '_')}",
-    )(tbl, q_p, k_pages, v_pages, w3,
-      pos.reshape(b, 1).astype(jnp.int32))
+    )(tbl, *operands)
     return out[:, :sq, :n]
 
 
@@ -751,7 +995,8 @@ def structural_cost_flash_attention_matmul(
         b: int, h: int, sq: int, skv: int, d: int, n: int, causal: bool,
         mode: str, block_q=None, block_kv=None, dtype=jnp.float32,
         plan_dialect: str | None = None, page_size: int | None = None,
-        pages_occupied: int | None = None) -> dict:
+        pages_occupied: int | None = None,
+        op: str = "flash_attention_matmul") -> dict:
     """The unfused pair's traffic minus exactly one ``[B,S,H,D]`` trip.
 
     Composes the registered ``flash_attention`` and ``gemm`` cost models
@@ -773,13 +1018,13 @@ def structural_cost_flash_attention_matmul(
         return _structural_cost_paged(
             b=b, h=h, sq=sq, skv=skv, d=d, n=n, mode=mode, block_q=block_q,
             dtype=dtype, plan_dialect=plan_dialect, page_size=page_size,
-            pages_occupied=pages_occupied)
+            pages_occupied=pages_occupied, op=op)
     if mode == "library":
         bq, bkv = 256, 256
     else:
         bq, bkv = resolve_attention_matmul_blocks(mode, sq, skv, d, n,
                                                   block_q, block_kv,
-                                                  plan_dialect)
+                                                  plan_dialect, op=op)
     # ONE attention evaluation at this lowering's resolved tiling: its
     # hbm term is block-independent (so the pair sum is unaffected) and
     # its flops/visited/scratch columns then all describe the same grid.
@@ -790,10 +1035,12 @@ def structural_cost_flash_attention_matmul(
                               dtype=dtype, plan_dialect=plan_dialect)
     unfused = att["hbm_bytes"] + g["hbm_bytes"]
     saved = 0 if mode == "library" else 2 * b * sq * h * d * itemsize
+    ws, _ = _weight_stream(b * sq, n, h * d, mode, dtype, plan_dialect)
     return {
         "hbm_bytes": unfused - saved,
         "hbm_bytes_unfused_pair": unfused,
         "hbm_bytes_saved": saved,
+        "weight_stream_bytes": ws,
         "flops": att["flops"] + g["flops"],
         "block": (bq, bkv),
         "blocks_visited": att["blocks_visited"],
@@ -809,7 +1056,8 @@ def structural_cost_flash_attention_matmul(
 def _structural_cost_paged(*, b: int, h: int, sq: int, skv: int, d: int,
                            n: int, mode: str, block_q, dtype,
                            plan_dialect: str | None, page_size: int,
-                           pages_occupied: int | None) -> dict:
+                           pages_occupied: int | None,
+                           op: str = "flash_attention_matmul") -> dict:
     """Occupied-page accounting for the paged decode shape.
 
     ``skv`` is the logical capacity (``max_pages · page_size``); the kv
@@ -830,7 +1078,7 @@ def _structural_cost_paged(*, b: int, h: int, sq: int, skv: int, d: int,
     else:
         bq, _ = resolve_attention_matmul_blocks(mode, sq, skv, d, n,
                                                 block_q, page_size,
-                                                plan_dialect)
+                                                plan_dialect, op=op)
     visited = h * pages_occupied        # every head walks live pages only
     reduces_per_block = 2               # row-max + row-sum
     if mode == "abstract":
@@ -843,16 +1091,19 @@ def _structural_cost_paged(*, b: int, h: int, sq: int, skv: int, d: int,
         shuffles = reduces_per_block * tree_stages(LANES)
     else:                               # native / library
         round_trips, scratch_bytes, shuffles = 0, 0, 0
-    att_hbm = (h * d * (2 * b * sq + 2 * pages_occupied * page_size)
-               * itemsize)
+    kv_stream = 2 * h * d * pages_occupied * page_size * itemsize
+    att_hbm = h * d * 2 * b * sq * itemsize + kv_stream
     g = _gemm.structural_cost(m=b * sq, n=n, k=h * d, mode=mode,
                               dtype=dtype, plan_dialect=plan_dialect)
     unfused = att_hbm + g["hbm_bytes"]
     saved = 0 if mode == "library" else 2 * b * sq * h * d * itemsize
+    ws, _ = _weight_stream(b * sq, n, h * d, mode, dtype, plan_dialect)
     return {
         "hbm_bytes": unfused - saved,
         "hbm_bytes_unfused_pair": unfused,
         "hbm_bytes_saved": saved,
+        "weight_stream_bytes": ws,
+        "kv_stream_bytes": kv_stream,
         "flops": visited * 4 * bq * page_size * d + g["flops"],
         "block": (bq, page_size),
         "blocks_visited": visited,
@@ -867,6 +1118,41 @@ def _structural_cost_paged(*, b: int, h: int, sq: int, skv: int, d: int,
     }
 
 
+def structural_cost_flash_attention_matmul_q8(
+        b: int, h: int, sq: int, skv: int, d: int, n: int, causal: bool,
+        mode: str, block_q=None, block_kv=None, dtype=jnp.float32,
+        plan_dialect: str | None = None, page_size: int | None = None,
+        pages_occupied: int | None = None) -> dict:
+    """The f32 model with the weight stream (and, on the paged shape, the
+    kv stream) re-priced at int8 width: int8 values plus the f32 scale
+    sideband (per-channel for wo, per-token for kv pages) replace each
+    f32 stream, and the delta comes off both the fused bytes and the
+    unfused pair — the saving is a *stream width* effect, orthogonal to
+    what fusion saves."""
+    base = structural_cost_flash_attention_matmul(
+        b, h, sq, skv, d, n, causal, mode, block_q, block_kv, dtype,
+        plan_dialect, page_size, pages_occupied,
+        op="flash_attention_matmul_q8")
+    ws_f32, rereads = _weight_stream(b * sq, n, h * d, mode, dtype,
+                                     plan_dialect)
+    ws_q8 = _q8_weight_stream(rereads, h * d, n)
+    delta = ws_f32 - ws_q8
+    if page_size is not None:
+        # int8 page rows: 2·d value bytes + two f32 per-token scales
+        kv_q8 = (h * base["pages_occupied"] * page_size * (2 * d + 8))
+        delta += base["kv_stream_bytes"] - kv_q8
+        base["kv_stream_bytes"] = kv_q8
+        base["kv_precision"] = "int8"
+    base.update(
+        hbm_bytes=base["hbm_bytes"] - delta,
+        hbm_bytes_unfused_pair=base["hbm_bytes_unfused_pair"] - delta,
+        weight_stream_bytes=ws_q8,
+        weight_stream_bytes_f32=ws_f32,
+        weight_precision="int8",
+    )
+    return base
+
+
 # --------------------------------------------------------------------------
 # rmsnorm -> [wi|wg] swiglu: the norm as prologue, the silu gate as epilogue
 # --------------------------------------------------------------------------
@@ -874,12 +1160,14 @@ def _structural_cost_paged(*, b: int, h: int, sq: int, skv: int, d: int,
 
 def resolve_swiglu_blocks(mode: str, rows: int, d: int, f: int,
                           dtype=jnp.float32,
-                          plan_dialect: str | None = None):
+                          plan_dialect: str | None = None,
+                          op: str = "rmsnorm_swiglu"):
     """The (bm, bn) tile over ``rows × f``: this op's tuned entry first
     (its working set holds *two* weight tiles plus the hi/hg/out trio),
     then the shared GEMM heuristic.  Shared by kernel and cost;
-    ``plan_dialect`` names the table slice consulted."""
-    entry = tuned_entry("rmsnorm_swiglu", mode, swiglu_bucket(rows, d, f),
+    ``plan_dialect`` names the table slice consulted; ``op`` names the
+    table row — the quantized twin tunes its own staging."""
+    entry = tuned_entry(op, mode, swiglu_bucket(rows, d, f),
                         dialect=plan_dialect)
     if entry and "block" in entry:
         bm, bn = entry["block"]
@@ -888,8 +1176,16 @@ def resolve_swiglu_blocks(mode: str, rows: int, d: int, f: int,
     return bm, bn
 
 
-def _rmsnorm_swiglu_kernel(x_ref, w_ref, wi_ref, wg_ref, o_ref, scratch_ref,
-                           *, eps: float, mode: str, d_true: int):
+def _rmsnorm_swiglu_kernel(*refs, eps: float, mode: str, d_true: int,
+                           quant: bool = False):
+    # operands: x, w, wi, wg, [si, sg] — the scale rows ride only the
+    # quantized rows and dequantize the int8 weight tiles in VMEM
+    if quant:
+        (x_ref, w_ref, wi_ref, wg_ref, si_ref, sg_ref, o_ref,
+         scratch_ref) = refs
+    else:
+        x_ref, w_ref, wi_ref, wg_ref, o_ref, scratch_ref = refs
+        si_ref = sg_ref = None
     x = x_ref[...].astype(jnp.float32)                    # (bm, d)
     w = w_ref[...].astype(jnp.float32)                    # (1, d)
     y = _rmsnorm.normalize_block(x, w, scratch_ref, eps=eps, mode=mode,
@@ -897,21 +1193,28 @@ def _rmsnorm_swiglu_kernel(x_ref, w_ref, wi_ref, wg_ref, o_ref, scratch_ref,
     # both halves of the concatenated [wi|wg] weight consume the
     # normalized block from VMEM; the silu gate runs in the epilogue on
     # products that never left the core.
+    wi = wi_ref[...].astype(jnp.float32)
+    wg = wg_ref[...].astype(jnp.float32)
+    if si_ref is not None:
+        wi = wi * si_ref[...]                             # (1, bn) scales
+        wg = wg * sg_ref[...]
     hi = jax.lax.dot_general(
-        y, wi_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        y, wi, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
     hg = jax.lax.dot_general(
-        y, wg_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        y, wg, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
     o_ref[...] = (jax.nn.silu(hg) * hi).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "eps", "interpret",
-                                             "plan_dialect"))
+                                             "plan_dialect", "tuning_op"))
 def rmsnorm_swiglu(x: jax.Array, weight: jax.Array, w_cat: jax.Array, *,
                    eps: float = 1e-6, mode: str = "native",
                    interpret: bool = True,
-                   plan_dialect: str | None = None) -> jax.Array:
+                   w_scale: jax.Array | None = None,
+                   plan_dialect: str | None = None,
+                   tuning_op: str = "rmsnorm_swiglu") -> jax.Array:
     """``silu(y @ wg) * (y @ wi)`` with ``y = rmsnorm(x, weight)``, fused.
 
     x: [..., D]; weight: [D]; w_cat: [D, 2F] — the concatenated
@@ -919,12 +1222,19 @@ def rmsnorm_swiglu(x: jax.Array, weight: jax.Array, w_cat: jax.Array, *,
     One call per sublayer: the residual is read and the moment computed
     once, the normalized activation and both projection products stay in
     VMEM.
+
+    ``w_scale`` ([2F] f32, with ``w_cat`` int8) selects the quantized
+    weight prologue: both int8 weight tiles dequantize per-channel in
+    VMEM — the ``rmsnorm_swiglu_q8`` registry rows.  ``tuning_op``
+    (static) names the tuned-table row consulted.
     """
     *lead, d = x.shape
     assert w_cat.shape[0] == d and w_cat.shape[1] % 2 == 0, \
         (x.shape, w_cat.shape)
     f = w_cat.shape[1] // 2
     if mode == "library":
+        if w_scale is not None:
+            w_cat = dequantize_weight(w_cat, w_scale, x.dtype)
         y = _ref.rmsnorm(x, weight, eps)
         hi = jnp.einsum("...d,df->...f", y, w_cat[:, :f].astype(y.dtype))
         hg = jnp.einsum("...d,df->...f", y, w_cat[:, f:].astype(y.dtype))
@@ -935,6 +1245,10 @@ def rmsnorm_swiglu(x: jax.Array, weight: jax.Array, w_cat: jax.Array, *,
     x2d = x.reshape(rows, d)
     w2d = weight.reshape(1, d)
     wi2d, wg2d = w_cat[:, :f], w_cat[:, f:]
+    si2d = sg2d = None
+    if w_scale is not None:
+        si2d = w_scale[:f].reshape(1, f).astype(jnp.float32)
+        sg2d = w_scale[f:].reshape(1, f).astype(jnp.float32)
 
     d_padded = d
     if mode != "native":
@@ -946,7 +1260,8 @@ def rmsnorm_swiglu(x: jax.Array, weight: jax.Array, w_cat: jax.Array, *,
             wi2d = jnp.pad(wi2d, ((0, pad_d), (0, 0)))
             wg2d = jnp.pad(wg2d, ((0, pad_d), (0, 0)))
 
-    bm, bn = resolve_swiglu_blocks(mode, rows, d, f, x.dtype, plan_dialect)
+    bm, bn = resolve_swiglu_blocks(mode, rows, d, f, x.dtype, plan_dialect,
+                                   op=tuning_op)
     bm = min(bm, align_up(rows, 128))
     bn = min(bn, align_up(f, 128))
     pad_m = (-rows) % bm
@@ -956,6 +1271,9 @@ def rmsnorm_swiglu(x: jax.Array, weight: jax.Array, w_cat: jax.Array, *,
     if pad_n:
         wi2d = jnp.pad(wi2d, ((0, 0), (0, pad_n)))
         wg2d = jnp.pad(wg2d, ((0, 0), (0, pad_n)))
+        if si2d is not None:
+            si2d = jnp.pad(si2d, ((0, 0), (0, pad_n)))
+            sg2d = jnp.pad(sg2d, ((0, 0), (0, pad_n)))
     mp, fp = rows + pad_m, f + pad_n
     grid = (mp // bm, fp // bn)
 
@@ -964,16 +1282,24 @@ def rmsnorm_swiglu(x: jax.Array, weight: jax.Array, w_cat: jax.Array, *,
         params = CompilerParams(
             dimension_semantics=("parallel", "parallel"))
 
+    in_specs = [
+        pl.BlockSpec((bm, d_padded), lambda i, j: (i, 0)),
+        pl.BlockSpec((1, d_padded), lambda i, j: (0, 0)),
+        pl.BlockSpec((d_padded, bn), lambda i, j: (0, j)),
+        pl.BlockSpec((d_padded, bn), lambda i, j: (0, j)),
+    ]
+    operands = [x2d, w2d, wi2d, wg2d]
+    if si2d is not None:
+        in_specs += [pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+                     pl.BlockSpec((1, bn), lambda i, j: (0, j))]
+        operands += [si2d, sg2d]
+    kernel_name = ("uisa_rmsnorm_swiglu_q8_" if si2d is not None
+                   else "uisa_rmsnorm_swiglu_") + mode.replace('+', '_')
     out = pl.pallas_call(
         functools.partial(_rmsnorm_swiglu_kernel, eps=eps, mode=mode,
-                          d_true=d),
+                          d_true=d, quant=si2d is not None),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, d_padded), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, d_padded), lambda i, j: (0, 0)),
-            pl.BlockSpec((d_padded, bn), lambda i, j: (0, j)),
-            pl.BlockSpec((d_padded, bn), lambda i, j: (0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, fp), x.dtype),
         scratch_shapes=[pltpu.VMEM(
@@ -981,14 +1307,15 @@ def rmsnorm_swiglu(x: jax.Array, weight: jax.Array, w_cat: jax.Array, *,
             jnp.float32)],
         compiler_params=params,
         interpret=interpret,
-        name=f"uisa_rmsnorm_swiglu_{mode.replace('+', '_')}",
-    )(x2d, w2d, wi2d, wg2d)
+        name=kernel_name,
+    )(*operands)
     return out[:rows, :f].reshape(*lead, f)
 
 
 def structural_cost_rmsnorm_swiglu(rows: int, d: int, f: int, mode: str,
                                    dtype=jnp.float32,
-                                   plan_dialect: str | None = None) -> dict:
+                                   plan_dialect: str | None = None,
+                                   op: str = "rmsnorm_swiglu") -> dict:
     """The unfused pair's traffic minus exactly one activation round trip.
 
     The pair is ``rmsnorm`` + one GEMM against the concatenated
@@ -1007,7 +1334,7 @@ def structural_cost_rmsnorm_swiglu(rows: int, d: int, f: int, mode: str,
         bm = bn = 512
     else:
         bm, bn = resolve_swiglu_blocks(mode, rows, d, f, dtype,
-                                       plan_dialect)
+                                       plan_dialect, op=op)
         bm = min(bm, align_up(rows, 128))
         bn = min(bn, align_up(f, 128))
     steps = -(-rows // bm) * -(-f // bn)
@@ -1018,10 +1345,12 @@ def structural_cost_rmsnorm_swiglu(rows: int, d: int, f: int, mode: str,
     else:
         round_trips = 0
         scratch_bytes = 0
+    ws, _ = _weight_stream(rows, 2 * f, d, mode, dtype, plan_dialect)
     return {
         "hbm_bytes": unfused - saved,
         "hbm_bytes_unfused_pair": unfused,
         "hbm_bytes_saved": saved,
+        "weight_stream_bytes": ws,
         "flops": g["flops"],
         "block": (bm, bn),
         "blocks": steps,
@@ -1031,6 +1360,30 @@ def structural_cost_rmsnorm_swiglu(rows: int, d: int, f: int, mode: str,
         if mode == "abstract+shuffle" else 0,
         "fused_epilogue": mode != "library",
     }
+
+
+def structural_cost_rmsnorm_swiglu_q8(rows: int, d: int, f: int, mode: str,
+                                      dtype=jnp.float32,
+                                      plan_dialect: str | None = None
+                                      ) -> dict:
+    """The f32 model with the ``[wi|wg]`` stream re-priced at int8 width
+    (int8 tiles + one f32 per-channel scale row), off both the fused
+    bytes and the unfused pair."""
+    base = structural_cost_rmsnorm_swiglu(rows, d, f, mode, dtype,
+                                          plan_dialect,
+                                          op="rmsnorm_swiglu_q8")
+    ws_f32, rereads = _weight_stream(rows, 2 * f, d, mode, dtype,
+                                     plan_dialect)
+    ws_q8 = _q8_weight_stream(rereads, d, 2 * f)
+    delta = ws_f32 - ws_q8
+    base.update(
+        hbm_bytes=base["hbm_bytes"] - delta,
+        hbm_bytes_unfused_pair=base["hbm_bytes_unfused_pair"] - delta,
+        weight_stream_bytes=ws_q8,
+        weight_stream_bytes_f32=ws_f32,
+        weight_precision="int8",
+    )
+    return base
 
 
 # --------------------------------------------------------------------------
@@ -1071,6 +1424,100 @@ def _rmsnorm_swiglu_library(x, weight, w_cat, *, eps: float = 1e-6,
                             plan_dialect: str | None = None):
     del interpret, plan_dialect
     return rmsnorm_swiglu(x, weight, w_cat, eps=eps, mode="library")
+
+
+# --------------------------------------------------------------------------
+# Quantized twins: the SAME fused bodies behind int8 weight prologues.
+# Each accepts pre-quantized operands (int8 + per-channel f32 scale, the
+# checkpoint's stored form) or, with ``w_scale=None``, f32 weights it
+# quantizes on the fly — so ``REGISTRY.select`` under an int8 precision
+# policy can retarget a call site that still holds f32 operands.
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "eps", "interpret",
+                                             "plan_dialect"))
+def rmsnorm_matmul_q8(x: jax.Array, weight: jax.Array, w_proj: jax.Array,
+                      *, eps: float = 1e-6, mode: str = "native",
+                      interpret: bool = True,
+                      w_scale: jax.Array | None = None,
+                      plan_dialect: str | None = None) -> jax.Array:
+    if w_scale is None:
+        w_proj, w_scale = quantize_weight(w_proj)
+    return rmsnorm_matmul(x, weight, w_proj, eps=eps, mode=mode,
+                          interpret=interpret, w_scale=w_scale,
+                          plan_dialect=plan_dialect)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "eps", "interpret",
+                                             "plan_dialect"))
+def rmsnorm_swiglu_q8(x: jax.Array, weight: jax.Array, w_cat: jax.Array,
+                      *, eps: float = 1e-6, mode: str = "native",
+                      interpret: bool = True,
+                      w_scale: jax.Array | None = None,
+                      plan_dialect: str | None = None) -> jax.Array:
+    if w_scale is None:
+        w_cat, w_scale = quantize_weight(w_cat)
+    return rmsnorm_swiglu(x, weight, w_cat, eps=eps, mode=mode,
+                          interpret=interpret, w_scale=w_scale,
+                          plan_dialect=plan_dialect,
+                          tuning_op="rmsnorm_swiglu_q8")
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "mode", "interpret", "block_q", "block_kv", "kv_offset",
+    "plan_dialect"))
+def flash_attention_matmul_q8(q: jax.Array, k: jax.Array, v: jax.Array,
+                              w_out: jax.Array, *, causal: bool = True,
+                              kv_offset: int | None = None,
+                              mode: str = "native", interpret: bool = True,
+                              block_q: int | None = None,
+                              block_kv: int | None = None,
+                              pos: jax.Array | None = None,
+                              block_tables: jax.Array | None = None,
+                              w_scale: jax.Array | None = None,
+                              k_scale: jax.Array | None = None,
+                              v_scale: jax.Array | None = None,
+                              plan_dialect: str | None = None
+                              ) -> jax.Array:
+    if w_scale is None:
+        w_out, w_scale = quantize_weight(w_out)
+    return flash_attention_matmul(
+        q, k, v, w_out, causal=causal, kv_offset=kv_offset, mode=mode,
+        interpret=interpret, block_q=block_q, block_kv=block_kv, pos=pos,
+        block_tables=block_tables, w_scale=w_scale, k_scale=k_scale,
+        v_scale=v_scale, plan_dialect=plan_dialect,
+        tuning_op="flash_attention_matmul_q8")
+
+
+def _rmsnorm_matmul_q8_library(x, weight, w_proj, *, eps: float = 1e-6,
+                               interpret: bool = True, w_scale=None,
+                               plan_dialect: str | None = None):
+    del interpret, plan_dialect
+    return rmsnorm_matmul_q8(x, weight, w_proj, eps=eps, mode="library",
+                             w_scale=w_scale)
+
+
+def _rmsnorm_swiglu_q8_library(x, weight, w_cat, *, eps: float = 1e-6,
+                               interpret: bool = True, w_scale=None,
+                               plan_dialect: str | None = None):
+    del interpret, plan_dialect
+    return rmsnorm_swiglu_q8(x, weight, w_cat, eps=eps, mode="library",
+                             w_scale=w_scale)
+
+
+def _flash_attention_matmul_q8_library(q, k, v, w_out, *,
+                                       causal: bool = True, kv_offset=None,
+                                       interpret: bool = True, block_q=None,
+                                       block_kv=None, pos=None,
+                                       block_tables=None, w_scale=None,
+                                       k_scale=None, v_scale=None,
+                                       plan_dialect: str | None = None):
+    del kv_offset, interpret, block_q, block_kv, plan_dialect
+    return flash_attention_matmul_q8(
+        q, k, v, w_out, causal=causal, mode="library", pos=pos,
+        block_tables=block_tables, w_scale=w_scale, k_scale=k_scale,
+        v_scale=v_scale)
 
 
 for _mode, _contract in (("abstract", _RM_ABSTRACT),
@@ -1134,3 +1581,66 @@ for _op in FUSED_OPS:
         _op, IsaMode.NATIVE, IsaMode.LIBRARY,
         reason="fused native epilogue is target-pinned; the unfused XLA "
                "pair is the declared escape")
+
+# Quantized rows: same mode grid, q8 contracts, q8 cost models.  Their
+# cost dicts re-price the weight (and paged-kv) streams at int8 width,
+# so auto-selection sees the traffic cut before anything runs.
+for _mode, _contract in (("abstract", _RMQ_ABSTRACT),
+                         ("abstract+shuffle", _RMQ_SHUFFLE),
+                         ("native", _RMQ_NATIVE)):
+    REGISTRY.register(
+        "rmsnorm_matmul_q8", _mode,
+        functools.partial(rmsnorm_matmul_q8, mode=_mode),
+        contract=_contract,
+        cost=functools.partial(structural_cost_rmsnorm_matmul_q8,
+                               mode=_mode))
+REGISTRY.register(
+    "rmsnorm_matmul_q8", IsaMode.LIBRARY, _rmsnorm_matmul_q8_library,
+    cost=functools.partial(structural_cost_rmsnorm_matmul_q8,
+                           mode="library"))
+
+for _mode, _contract in (("abstract", _FAQ_ABSTRACT),
+                         ("abstract+shuffle", _FAQ_SHUFFLE),
+                         ("native", _FAQ_NATIVE)):
+    REGISTRY.register(
+        "flash_attention_matmul_q8", _mode,
+        functools.partial(flash_attention_matmul_q8, mode=_mode),
+        contract=_contract,
+        cost=functools.partial(structural_cost_flash_attention_matmul_q8,
+                               mode=_mode))
+REGISTRY.register(
+    "flash_attention_matmul_q8", IsaMode.LIBRARY,
+    _flash_attention_matmul_q8_library,
+    cost=functools.partial(structural_cost_flash_attention_matmul_q8,
+                           mode="library"))
+
+for _mode, _contract in (("abstract", _SWQ_ABSTRACT),
+                         ("abstract+shuffle", _SWQ_SHUFFLE),
+                         ("native", _SWQ_NATIVE)):
+    REGISTRY.register(
+        "rmsnorm_swiglu_q8", _mode,
+        functools.partial(rmsnorm_swiglu_q8, mode=_mode),
+        contract=_contract,
+        cost=functools.partial(structural_cost_rmsnorm_swiglu_q8,
+                               mode=_mode))
+REGISTRY.register(
+    "rmsnorm_swiglu_q8", IsaMode.LIBRARY, _rmsnorm_swiglu_q8_library,
+    cost=functools.partial(structural_cost_rmsnorm_swiglu_q8,
+                           mode="library"))
+
+for _op in QUANT_OPS:
+    REGISTRY.declare_fallback(
+        _op, IsaMode.ABSTRACT_SHUFFLE, IsaMode.ABSTRACT,
+        reason="no lane shuffle on this dialect; the cross-lane reduction "
+               "degrades to the scratch-tree lowering")
+    REGISTRY.declare_fallback(
+        _op, IsaMode.NATIVE, IsaMode.LIBRARY,
+        reason="fused native epilogue is target-pinned; the unfused XLA "
+               "pair (dequantize, then the pair) is the declared escape")
+
+# the precision axis: ExecutionPolicy(precision="int8") retargets the f32
+# op names at select() time — call sites never spell the q8 names.
+for _base in ("rmsnorm_matmul", "rmsnorm_swiglu", "flash_attention_matmul"):
+    REGISTRY.register_precision_variant(_base, "int8", _base + "_q8")
+
+FUSED_OPS = FUSED_OPS + QUANT_OPS

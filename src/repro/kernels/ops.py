@@ -57,6 +57,12 @@ PROBE_SHAPES = {
     "flash_attention_matmul": dict(b=1, h=4, sq=1024, skv=1024, d=64,
                                    n=256, causal=True),
     "rmsnorm_swiglu": dict(rows=1024, d=1024, f=1024),
+    # quantized twins (ISSUE 7): same geometry as their f32 bases — the
+    # cost delta under probe is purely the int8 stream width
+    "rmsnorm_matmul_q8": dict(rows=1024, d=1024, n=1024),
+    "flash_attention_matmul_q8": dict(b=1, h=4, sq=1024, skv=1024, d=64,
+                                      n=256, causal=True),
+    "rmsnorm_swiglu_q8": dict(rows=1024, d=1024, f=1024),
 }
 
 
@@ -157,18 +163,29 @@ def fused_rmsnorm_matmul(x: jax.Array, weight: jax.Array,
                          w_proj: jax.Array, *, eps: float = 1e-6,
                          mode=None,
                          policy: Optional[ExecutionPolicy] = None,
-                         interpret: Optional[bool] = None):
+                         interpret: Optional[bool] = None,
+                         w_scale: Optional[jax.Array] = None):
     """``rmsnorm(x, weight) @ w_proj`` without the HBM round trip.
 
     Dispatches the fused multi-op lowering; an illegal mode request
     follows the *declared* fallbacks (shuffle -> scratch tree, native ->
-    the unfused XLA pair), warned and recorded — never silent."""
+    the unfused XLA pair), warned and recorded — never silent.
+
+    ``w_scale`` marks ``w_proj`` as int8 with per-channel scales.  The
+    precision policy picks the op; this shim keeps operands coherent
+    either way: a quantized selection forwards the scale (or quantizes f32
+    weights on the fly), an f32 selection dequantizes int8 operands."""
     pol, interpret = _resolve(mode, policy, interpret)
     rows = 1
     for s in x.shape[:-1]:
         rows *= s
     low = REGISTRY.select("rmsnorm_matmul", pol, shape=dict(
         rows=rows, d=x.shape[-1], n=w_proj.shape[1]))
+    if low.op.endswith("_q8"):
+        return _dispatch(low, pol, x, weight, w_proj, eps=eps,
+                         interpret=interpret, w_scale=w_scale)
+    if w_scale is not None:
+        w_proj = _fused.dequantize_weight(w_proj, w_scale, x.dtype)
     return _dispatch(low, pol, x, weight, w_proj, eps=eps,
                      interpret=interpret)
 
@@ -198,7 +215,10 @@ def fused_flash_attention_matmul(q: jax.Array, k: jax.Array, v: jax.Array,
                                  block_q: Optional[int] = None,
                                  block_kv: Optional[int] = None,
                                  pos: Optional[jax.Array] = None,
-                                 block_tables: Optional[jax.Array] = None):
+                                 block_tables: Optional[jax.Array] = None,
+                                 w_scale: Optional[jax.Array] = None,
+                                 k_scale: Optional[jax.Array] = None,
+                                 v_scale: Optional[jax.Array] = None):
     """``flash_attention(q, k, v)`` -> ``wo`` without the HBM round trip.
 
     The `[B,S,H,D]` online-softmax output is consumed from VMEM by the
@@ -228,6 +248,18 @@ def fused_flash_attention_matmul(q: jax.Array, k: jax.Array, v: jax.Array,
             d=q.shape[3], n=w_out.shape[1], causal=causal and pos is None,
             block_q=block_q, block_kv=block_kv)
     low = REGISTRY.select("flash_attention_matmul", pol, shape=shape)
+    if low.op.endswith("_q8"):
+        return _dispatch(low, pol, q, k, v, w_out,
+                         causal=causal and pos is None,
+                         kv_offset=kv_offset, interpret=interpret,
+                         block_q=block_q, block_kv=block_kv, pos=pos,
+                         block_tables=block_tables, w_scale=w_scale,
+                         k_scale=k_scale, v_scale=v_scale)
+    if w_scale is not None:
+        w_out = _fused.dequantize_weight(w_out, w_scale, q.dtype)
+    if k_scale is not None:
+        k = (k.astype(jnp.float32) * k_scale).astype(q.dtype)
+        v = (v.astype(jnp.float32) * v_scale).astype(q.dtype)
     return _dispatch(low, pol, q, k, v, w_out,
                      causal=causal and pos is None,
                      kv_offset=kv_offset, interpret=interpret,
@@ -238,16 +270,23 @@ def fused_flash_attention_matmul(q: jax.Array, k: jax.Array, v: jax.Array,
 def fused_rmsnorm_swiglu(x: jax.Array, weight: jax.Array,
                          w_cat: jax.Array, *, eps: float = 1e-6, mode=None,
                          policy: Optional[ExecutionPolicy] = None,
-                         interpret: Optional[bool] = None):
+                         interpret: Optional[bool] = None,
+                         w_scale: Optional[jax.Array] = None):
     """``silu(y @ wg) * (y @ wi)`` for ``y = rmsnorm(x, weight)`` in one
     kernel; ``w_cat`` is the concatenated ``[wi|wg]`` weight ``[D, 2F]``
-    (same fallback discipline as :func:`fused_rmsnorm_matmul`)."""
+    (same fallback + operand-coherence discipline as
+    :func:`fused_rmsnorm_matmul`)."""
     pol, interpret = _resolve(mode, policy, interpret)
     rows = 1
     for s in x.shape[:-1]:
         rows *= s
     low = REGISTRY.select("rmsnorm_swiglu", pol, shape=dict(
         rows=rows, d=x.shape[-1], f=w_cat.shape[1] // 2))
+    if low.op.endswith("_q8"):
+        return _dispatch(low, pol, x, weight, w_cat, eps=eps,
+                         interpret=interpret, w_scale=w_scale)
+    if w_scale is not None:
+        w_cat = _fused.dequantize_weight(w_cat, w_scale, x.dtype)
     return _dispatch(low, pol, x, weight, w_cat, eps=eps,
                      interpret=interpret)
 
@@ -262,6 +301,10 @@ STRUCTURAL_COSTS = {
     "add_rmsnorm": _fused.structural_cost_add_rmsnorm,
     "flash_attention_matmul": _fused.structural_cost_flash_attention_matmul,
     "rmsnorm_swiglu": _fused.structural_cost_rmsnorm_swiglu,
+    "rmsnorm_matmul_q8": _fused.structural_cost_rmsnorm_matmul_q8,
+    "flash_attention_matmul_q8":
+        _fused.structural_cost_flash_attention_matmul_q8,
+    "rmsnorm_swiglu_q8": _fused.structural_cost_rmsnorm_swiglu_q8,
 }
 
 #: Pallas-variant contracts per op, in portability order (registry view;

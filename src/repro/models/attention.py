@@ -268,3 +268,19 @@ def update_cache_int8(cache_q, cache_scale, new, pos):
     cache_q = jnp.where(onehot[:, None, :, None], q_new, cache_q)
     cache_scale = jnp.where(onehot[:, None, :, None], s_new, cache_scale)
     return cache_q, cache_scale
+
+
+def update_paged_cache_int8(pages, scale_pages, new, block_tables, pos):
+    """Quantized paged write (ISSUE 7): the int8 composition of
+    :func:`update_paged_cache`.
+
+    ``pages``: int8 ``[P,Hkv,page_size,D]``; ``scale_pages``: f32
+    ``[P,Hkv,page_size,1]`` — per-token scales in a pool of the *same*
+    page geometry, so both writes resolve through the same table entry
+    and the same sentinel/drop semantics (the value row and its scale can
+    never land on different pages).  ``new`` arrives bf16/f32 and is
+    quantized per-(token, head) here, at write time."""
+    q_new, s_new = quantize_kv(new)
+    pages = update_paged_cache(pages, q_new, block_tables, pos)
+    scale_pages = update_paged_cache(scale_pages, s_new, block_tables, pos)
+    return pages, scale_pages

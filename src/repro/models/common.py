@@ -84,6 +84,64 @@ def stored_concat(params, cat_key: str) -> bool:
 
 
 # --------------------------------------------------------------------------
+# Weight quantization (ISSUE 7).  The kernel layer owns the scheme
+# (per-output-channel symmetric int8, kernels/fused.py); these re-exports
+# plus `quantize_params` are the model-layer surface: scales ride the
+# params tree as `<key>_scale` siblings of the (int8) weight leaves —
+# the SAME persisted concats the layout planner owns, so the quantized
+# decode tick still takes zero-copy views of tensors at rest.
+# --------------------------------------------------------------------------
+
+
+def quantize_weight(w):
+    from repro.kernels.fused import quantize_weight as _qw
+    return _qw(w)
+
+
+def dequantize_weight(q, scale, dtype=jnp.float32):
+    from repro.kernels.fused import dequantize_weight as _dw
+    return _dw(q, scale, dtype)
+
+
+#: the hot-pair weight leaves the precision policy quantizes, by block
+#: subgroup: the layout planner's persisted concats plus attention's wo —
+#: exactly the operands the three quantized fused lowerings consume.
+QUANT_GROUPS = (("attn", ("wqkv", "wo")), ("mlp", ("wig",)))
+
+
+def _quantize_group(sub, keys):
+    sub = dict(sub)
+    for key in keys:
+        if key not in sub or sub[key].dtype == jnp.int8:
+            continue
+        q, s = quantize_weight(sub[key])
+        sub[key] = q
+        sub[key + "_scale"] = s
+    return sub
+
+
+def quantize_params(params):
+    """Quantize the hot-pair weight leaves of a TransformerLM params tree
+    (functionally): every ``blocks/attn/{wqkv,wo}`` and ``blocks/mlp/wig``
+    leaf (plus a MoE shared expert's ``wig``) becomes int8 with an f32
+    ``<key>_scale`` sibling.  Per-channel scales reduce over the input
+    axis (``-2``), so stacked ``[L, d, n]`` leaves get ``[L, n]`` scales
+    — per-layer scales in one vectorized pass.  Leaves already int8 are
+    left alone.  Embeddings, norms, the lm head, and legacy per-matrix
+    layouts stay f32: the quantized decode tick requires the persisted
+    concats anyway — the same gate the fusion planner enforces."""
+    blocks = dict(params["blocks"])
+    for group, keys in QUANT_GROUPS:
+        if group in blocks:
+            blocks[group] = _quantize_group(blocks[group], keys)
+    if "moe" in blocks and "shared" in blocks["moe"]:
+        moe_p = dict(blocks["moe"])
+        moe_p["shared"] = _quantize_group(moe_p["shared"], ("wig",))
+        blocks["moe"] = moe_p
+    return dict(params, blocks=blocks)
+
+
+# --------------------------------------------------------------------------
 # Norms / activations.  RMSNorm routes through the lowering registry
 # (core/registry.py): the pure-jnp path is the registered `library`
 # variant, so model norms no longer bypass the kernel layer — an
@@ -103,14 +161,19 @@ def rmsnorm(x, weight, eps: float = 1e-6,
 
 
 def rmsnorm_matmul(x, weight, w_proj, eps: float = 1e-6,
-                   policy: Optional[ExecutionPolicy] = None):
+                   policy: Optional[ExecutionPolicy] = None,
+                   w_scale=None):
     """The norm→projection hot pair: ``rmsnorm(x, weight) @ w_proj``.
 
     Policy-gated: when the resolved policy fuses (``fuse=True``, or
     ``mode="auto"`` by default), the pair lowers through the fused
     ``rmsnorm_matmul`` registry op and the normalized activation never
     makes the HBM round trip; otherwise the unfused sequence runs, which
-    is bit-identical to the historical norm-then-einsum call sites."""
+    is bit-identical to the historical norm-then-einsum call sites.
+
+    ``w_scale`` rides along when ``w_proj`` is an int8 leaf: fusing
+    policies hand it to the quantized lowering (dequantize-in-VMEM);
+    unfused policies dequantize up front — same math, staged at f32."""
     from repro.kernels import ops as kernel_ops
     pol = resolve_policy(policy=policy, default=LIBRARY_POLICY)
     if pol.fuses():
@@ -119,26 +182,35 @@ def rmsnorm_matmul(x, weight, w_proj, eps: float = 1e-6,
         # the default library-norm policy selects the fused Pallas
         # lowering instead of the library row (the unfused pair).
         return kernel_ops.fused_rmsnorm_matmul(x, weight, w_proj, eps=eps,
-                                               policy=pol.kernel())
+                                               policy=pol.kernel(),
+                                               w_scale=w_scale)
     y = rmsnorm(x, weight, eps, policy=pol)
+    if w_scale is not None:
+        w_proj = dequantize_weight(w_proj, w_scale, y.dtype)
     return jnp.einsum("...d,dn->...n", y, w_proj.astype(y.dtype))
 
 
 def rmsnorm_swiglu(x, weight, w_cat, eps: float = 1e-6,
-                   policy: Optional[ExecutionPolicy] = None):
+                   policy: Optional[ExecutionPolicy] = None,
+                   w_scale=None):
     """The norm→swiglu hot pair: ``silu(y @ wg) * (y @ wi)`` for
     ``y = rmsnorm(x, weight)``, ``w_cat`` the concatenated ``[wi|wg]``.
 
     Same gate as :func:`rmsnorm_matmul`: fused policies consume the
     normalized activation (and both projection products) from VMEM;
     unfused policies keep the historical norm-then-two-einsums sequence,
-    bit-identical to the pre-fusion call sites."""
+    bit-identical to the pre-fusion call sites.  ``w_scale`` (the int8
+    concat's per-channel scales) follows the same split as the weights:
+    fused lowerings dequantize blocks in VMEM, unfused math up front."""
     from repro.kernels import ops as kernel_ops
     pol = resolve_policy(policy=policy, default=LIBRARY_POLICY)
     if pol.fuses():
         return kernel_ops.fused_rmsnorm_swiglu(x, weight, w_cat, eps=eps,
-                                               policy=pol.kernel())
+                                               policy=pol.kernel(),
+                                               w_scale=w_scale)
     y = rmsnorm(x, weight, eps, policy=pol)
+    if w_scale is not None:
+        w_cat = dequantize_weight(w_cat, w_scale, y.dtype)
     f = w_cat.shape[1] // 2
     hi = jnp.einsum("...d,df->...f", y, w_cat[:, :f].astype(y.dtype))
     hg = jnp.einsum("...d,df->...f", y, w_cat[:, f:].astype(y.dtype))

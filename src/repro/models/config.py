@@ -236,6 +236,12 @@ class ParallelConfig:
     # policy mode is "auto" — the structural-cost ranking then picks the
     # variant whose hbm_bytes dropped by an activation round trip.
     fuse_epilogues: Optional[bool] = None
+    # Weight-precision axis (ISSUE 7): "int8" retargets the hot fused
+    # lowerings to their quantized twins (registry precision variants) —
+    # int8 weights + per-channel scales dequantized in VMEM, so the
+    # weight stream never rides HBM at f32 width.  None/"f32" keeps the
+    # f32 rows.  Orthogonal to kv_cache_int8 (the cache axis).
+    weight_precision: Optional[str] = None
 
     def execution_policy(self):
         """Resolve this config's ExecutionPolicy — the ONE place mode
@@ -246,14 +252,16 @@ class ParallelConfig:
         if self.isa_mode is not None:
             return ExecutionPolicy(mode=self.isa_mode, dialect=dialect,
                                    kernel_mode=self.isa_mode,
-                                   fuse=self.fuse_epilogues)
+                                   fuse=self.fuse_epilogues,
+                                   precision=self.weight_precision)
         # Native lowerings are pinned to the framework TARGET; under a
         # foreign dialect the kernel path must degrade to a legal variant
         # ("auto") instead of requesting an unlowerable native kernel.
         kernel_mode = "native" if dialect == TARGET.name else "auto"
         return ExecutionPolicy(mode="library", dialect=dialect,
                                kernel_mode=kernel_mode,
-                               fuse=self.fuse_epilogues)
+                               fuse=self.fuse_epilogues,
+                               precision=self.weight_precision)
 
 
 @dataclasses.dataclass(frozen=True)

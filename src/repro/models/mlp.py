@@ -69,7 +69,8 @@ def apply_mlp(params, x, act: str, ctx: Optional[ShardCtx],
         if act == "silu":
             w_cat = common.concat_param(params, "wig", ("wi", "wg"))
             h = common.rmsnorm_swiglu(x, norm_scale, w_cat, eps,
-                                      policy=policy)
+                                      policy=policy,
+                                      w_scale=params.get("wig_scale"))
         else:
             # no gate pair to fuse into: the norm rides into the single
             # wi projection as a GEMM prologue instead
@@ -78,6 +79,12 @@ def apply_mlp(params, x, act: str, ctx: Optional[ShardCtx],
             h = common.activation(h, act)
     else:
         if act == "silu":
+            if "wig_scale" in params:
+                # int8 concat on the unfused path: dequantize once, then
+                # take the usual views (only the persisted concat is ever
+                # quantized — see common.quantize_params)
+                params = dict(params, wig=common.dequantize_weight(
+                    params["wig"], params["wig_scale"], x.dtype))
             wi, wg = _wi_wg(params)
             h = jnp.einsum("bsd,df->bsf", x, wi.astype(x.dtype))
             gate = jnp.einsum("bsd,df->bsf", x, wg.astype(x.dtype))

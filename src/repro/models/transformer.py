@@ -21,7 +21,8 @@ from repro.models import common, mlp
 from repro.models.attention import (chunked_attention, decode_attention,
                                     dequantize_kv, paged_decode_attention,
                                     quantize_kv, update_cache,
-                                    update_cache_int8, update_paged_cache)
+                                    update_cache_int8, update_paged_cache,
+                                    update_paged_cache_int8)
 from repro.models.config import (LEGACY_LAYOUT, ModelConfig, ParallelConfig,
                                  ParamLayout)
 from repro.parallel.sharding import ShardCtx, shard
@@ -107,9 +108,16 @@ def _project_qkv(params, x, cfg: ModelConfig, positions, ctx,
         # per sublayer, not thrice.
         w_qkv = common.concat_param(params, "wqkv", ("wq", "wk", "wv"))
         qkv = common.rmsnorm_matmul(x, norm_scale, w_qkv,
-                                    cfg.norm_eps, policy=policy)
+                                    cfg.norm_eps, policy=policy,
+                                    w_scale=params.get("wqkv_scale"))
         q, k, v = jnp.split(qkv, [h * hd, (h + hkv) * hd], axis=-1)
     else:
+        if "wqkv_scale" in params:
+            # int8 concat on the unfused path: dequantize once, then take
+            # the usual per-matrix views (only the persisted concat is
+            # ever quantized — see common.quantize_params)
+            params = dict(params, wqkv=common.dequantize_weight(
+                params["wqkv"], params["wqkv_scale"], x.dtype))
         wq, wk, wv = common.split_param(params, "wqkv", ("wq", "wk", "wv"),
                                         _qkv_widths(cfg))
         q = jnp.einsum("bsd,dh->bsh", x, wq.astype(x.dtype))
@@ -136,6 +144,16 @@ def _project_qkv(params, x, cfg: ModelConfig, positions, ctx,
         v = shard(v, ("act_batch", "act_kv_heads", "act_seq_unsharded",
                       "act_head_dim"), ctx)
     return q, k, v
+
+
+def _wo_weight(params, dtype):
+    """The output projection at math width: dequantized when the
+    precision policy stored it int8 (unfused paths only — fused lowerings
+    take the int8 leaf + scale and dequantize blocks in VMEM)."""
+    if "wo_scale" in params:
+        return common.dequantize_weight(params["wo"], params["wo_scale"],
+                                        dtype)
+    return params["wo"].astype(dtype)
 
 
 def _repeat_kv(k, v, group: int, ctx):
@@ -188,7 +206,8 @@ def attn_seq(params, x, cfg: ModelConfig, par: ParallelConfig,
                 q, k_rep, v_rep, params["wo"], causal=causal,
                 block_q=min(par.attn_chunk_q, 256),
                 block_kv=min(par.attn_chunk_kv, 256),
-                policy=policy.kernel())
+                policy=policy.kernel(),
+                w_scale=params.get("wo_scale"))
         else:
             o = kernel_ops.flash_attention(
                 q, k_rep, v_rep, causal=causal,
@@ -196,15 +215,14 @@ def attn_seq(params, x, cfg: ModelConfig, par: ParallelConfig,
                 block_kv=min(par.attn_chunk_kv, 256),
                 policy=policy.kernel())
             o = o.transpose(0, 2, 1, 3).reshape(b, s, -1)
-            out = jnp.einsum("bsh,hd->bsd", o,
-                             params["wo"].astype(x.dtype))
+            out = jnp.einsum("bsh,hd->bsd", o, _wo_weight(params, x.dtype))
     else:
         o = chunked_attention(
             q, k_rep, v_rep, causal=causal, kv_offset=0,
             chunk_q=par.attn_chunk_q, chunk_kv=par.attn_chunk_kv,
             exact_causal=par.causal_folding, ctx=ctx)
         o = o.transpose(0, 2, 1, 3).reshape(b, s, -1)
-        out = jnp.einsum("bsh,hd->bsd", o, params["wo"].astype(x.dtype))
+        out = jnp.einsum("bsh,hd->bsd", o, _wo_weight(params, x.dtype))
     if par.rs_outputs:
         # Constrain the row-parallel partial sum to the seq-sharded
         # residual layout so the TP combine compiles to reduce-scatter.
@@ -240,21 +258,39 @@ def attn_decode(params, x_t, cfg: ModelConfig, kv_cache, pos, ctx,
     q, k_new, v_new = _project_qkv(params, x_t, cfg, positions, ctx,
                                    policy=policy, norm_scale=norm_scale)
     if block_tables is not None:
-        k_pages, v_pages = kv_cache
-        k_pages = update_paged_cache(k_pages, k_new, block_tables, pos)
-        v_pages = update_paged_cache(v_pages, v_new, block_tables, pos)
-        new_cache = (k_pages, v_pages)
+        if int8:
+            # int8 paged cache: quantize-on-write through the same table
+            # scatter, per-page scales riding parallel [P,Hkv,ps,1] pools.
+            k_pages, k_sc, v_pages, v_sc = kv_cache
+            k_pages, k_sc = update_paged_cache_int8(k_pages, k_sc, k_new,
+                                                    block_tables, pos)
+            v_pages, v_sc = update_paged_cache_int8(v_pages, v_sc, v_new,
+                                                    block_tables, pos)
+            new_cache = (k_pages, k_sc, v_pages, v_sc)
+        else:
+            k_pages, v_pages = kv_cache
+            k_pages = update_paged_cache(k_pages, k_new, block_tables, pos)
+            v_pages = update_paged_cache(v_pages, v_new, block_tables, pos)
+            k_sc = v_sc = None
+            new_cache = (k_pages, v_pages)
         if fuse_wo:
             from repro.kernels import ops as kernel_ops
             out = kernel_ops.fused_flash_attention_matmul(
                 q, k_pages, v_pages, params["wo"], pos=pos,
                 block_tables=block_tables,
-                policy=policy.kernel() if policy is not None else None)
+                policy=policy.kernel() if policy is not None else None,
+                w_scale=params.get("wo_scale"), k_scale=k_sc, v_scale=v_sc)
             return out, new_cache
+        if int8:
+            # unfused reference path: dequantize the gathered-from pools
+            # up front (the fused kernel instead dequantizes per page, in
+            # VMEM, only for live table entries)
+            k_pages = dequantize_kv(k_pages, k_sc, x_t.dtype)
+            v_pages = dequantize_kv(v_pages, v_sc, x_t.dtype)
         o = paged_decode_attention(q, k_pages, v_pages, block_tables, pos,
                                    ctx=ctx)
         o = o.transpose(0, 2, 1, 3).reshape(b, 1, -1)
-        out = jnp.einsum("bsh,hd->bsd", o, params["wo"].astype(x_t.dtype))
+        out = jnp.einsum("bsh,hd->bsd", o, _wo_weight(params, x_t.dtype))
         return out, new_cache
     if int8:
         k_q, k_s, v_q, v_s = kv_cache
@@ -272,11 +308,12 @@ def attn_decode(params, x_t, cfg: ModelConfig, kv_cache, pos, ctx,
         from repro.kernels import ops as kernel_ops
         out = kernel_ops.fused_flash_attention_matmul(
             q, k_cache, v_cache, params["wo"], pos=pos,
-            policy=policy.kernel() if policy is not None else None)
+            policy=policy.kernel() if policy is not None else None,
+            w_scale=params.get("wo_scale"))
         return out, new_cache
     o = decode_attention(q, k_cache, v_cache, pos, ctx=ctx)
     o = o.transpose(0, 2, 1, 3).reshape(b, 1, -1)
-    out = jnp.einsum("bsh,hd->bsd", o, params["wo"].astype(x_t.dtype))
+    out = jnp.einsum("bsh,hd->bsd", o, _wo_weight(params, x_t.dtype))
     return out, new_cache
 
 
@@ -589,17 +626,30 @@ class TransformerLM:
         inside the one-program tick.  Allocation/refcounts live in
         ``repro.serve.engine.PagePool``."""
         cfg = self.cfg
-        if self.par.kv_cache_int8:
-            raise NotImplementedError(
-                "paged KV cache + int8 quantization are not composed yet")
         hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
         shape = (cfg.num_layers, num_pages, hkv, page_size, hd)
+        tables = jnp.full((batch_size, max_pages_per_slot), num_pages,
+                          jnp.int32)
+        pos = jnp.zeros((batch_size,), jnp.int32)
+        if self.par.kv_cache_int8:
+            # int8 pools + per-(token,head) f32 scale pools riding the
+            # same page index axis — a page costs hd + 4 bytes per token
+            # per head instead of 4*hd, which is where the PagePool
+            # capacity multiplier comes from (serve/engine.py).
+            sshape = shape[:-1] + (1,)
+            return {
+                "k_pages": jnp.zeros(shape, jnp.int8),
+                "k_scale_pages": jnp.full(sshape, 1e-8, jnp.float32),
+                "v_pages": jnp.zeros(shape, jnp.int8),
+                "v_scale_pages": jnp.full(sshape, 1e-8, jnp.float32),
+                "block_tables": tables,
+                "pos": pos,
+            }
         return {
             "k_pages": jnp.zeros(shape, _dtype(cfg)),
             "v_pages": jnp.zeros(shape, _dtype(cfg)),
-            "block_tables": jnp.full((batch_size, max_pages_per_slot),
-                                     num_pages, jnp.int32),
-            "pos": jnp.zeros((batch_size,), jnp.int32),
+            "block_tables": tables,
+            "pos": pos,
         }
 
     def cache_specs(self):
@@ -641,7 +691,10 @@ class TransformerLM:
                                      fuse_wo=fuse_wo, block_tables=tables)
             return h, new_kv
 
-        if paged:
+        if paged and int8:
+            kv_in = (cache["k_pages"], cache["k_scale_pages"],
+                     cache["v_pages"], cache["v_scale_pages"])
+        elif paged:
             kv_in = (cache["k_pages"], cache["v_pages"])
         elif int8:
             kv_in = (cache["k"], cache["k_scale"], cache["v"],
@@ -650,7 +703,11 @@ class TransformerLM:
             kv_in = (cache["k"], cache["v"])
         x, new_kvs = jax.lax.scan(body, x, (params["blocks"], kv_in))
         logits = self._head(params, x)[:, 0]
-        if paged:
+        if paged and int8:
+            new_cache = {"k_pages": new_kvs[0], "k_scale_pages": new_kvs[1],
+                         "v_pages": new_kvs[2], "v_scale_pages": new_kvs[3],
+                         "block_tables": tables, "pos": pos + 1}
+        elif paged:
             new_cache = {"k_pages": new_kvs[0], "v_pages": new_kvs[1],
                          "block_tables": tables, "pos": pos + 1}
         elif int8:

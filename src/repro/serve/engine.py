@@ -68,6 +68,12 @@ class ServeConfig:
     page_size: Optional[int] = None    # tokens per KV page
     num_pages: Optional[int] = None    # pool size; None = dense-equivalent
     prefix_sharing: bool = True        # refcount-share full prompt pages
+    # pool sized by a DEVICE-BYTE budget instead of a page count (used
+    # when num_pages is None): capacity reflects the page footprint, so
+    # an int8 KV cache fits ~4·hd/(hd+4)× more pages in the same bytes —
+    # the quantization win expressed as admission capacity, not just
+    # bandwidth (BatchedEngine.page_footprint_bytes)
+    kv_pool_bytes: Optional[int] = None
 
     @property
     def paged(self) -> bool:
@@ -193,9 +199,16 @@ class BatchedEngine:
         if self._paged:
             self._max_pages = cfg.max_pages_per_slot
             # dense-equivalent pool by default; cfg.num_pages < B·maxp is
-            # the page-budget admission regime (capacity by pages)
-            self.num_pages = (cfg.num_pages if cfg.num_pages is not None
-                              else b * self._max_pages)
+            # the page-budget admission regime (capacity by pages), and
+            # cfg.kv_pool_bytes sizes the pool by device bytes — where an
+            # int8 cache's smaller page footprint becomes extra capacity
+            if cfg.num_pages is not None:
+                self.num_pages = cfg.num_pages
+            elif cfg.kv_pool_bytes is not None:
+                self.num_pages = max(
+                    cfg.kv_pool_bytes // self.page_footprint_bytes(), 1)
+            else:
+                self.num_pages = b * self._max_pages
             self.pool: Optional[PagePool] = PagePool(self.num_pages,
                                                      cfg.page_size)
             self._slot_pages: List[List[int]] = [[] for _ in range(b)]
@@ -225,6 +238,21 @@ class BatchedEngine:
         donate = (2, 3, 4) if jax.default_backend() in ("tpu", "gpu") \
             else ()
         self._tick = jax.jit(self._tick_impl, donate_argnums=donate)
+
+    def page_footprint_bytes(self) -> int:
+        """Device bytes one KV page costs across the layer stack: K + V
+        pool blocks, plus the per-(token,head) f32 scale blocks when the
+        cache is int8.  A token-position then costs ``hd + 4`` bytes per
+        head per direction instead of ``4*hd`` — the 4·hd/(hd+4)
+        capacity multiplier a fixed ``kv_pool_bytes`` budget realizes."""
+        mcfg = self.model.cfg
+        hkv, hd = mcfg.num_kv_heads, mcfg.resolved_head_dim
+        ps = self.cfg.page_size
+        if getattr(self.model.par, "kv_cache_int8", False):
+            per_layer = 2 * hkv * ps * (hd + 4)
+        else:
+            per_layer = 2 * hkv * ps * hd * np.dtype(mcfg.dtype).itemsize
+        return mcfg.num_layers * per_layer
 
     # ---- slot management ----
 
@@ -388,8 +416,14 @@ class BatchedEngine:
         if write_ids:
             ids = jnp.asarray(write_ids, jnp.int32)
             pad = n_prompt_pages * ps - prompt_len
-            for pool_name, strip_name in (("k_pages", "k"),
-                                          ("v_pages", "v")):
+            pairs = [("k_pages", "k"), ("v_pages", "v")]
+            if "k_scale_pages" in new_cache:
+                # int8 pools: the prefill's quantized strips carry scale
+                # strips ([L,1,Hkv,plen,1]) that scatter through the same
+                # page ids into the parallel scale pools
+                pairs += [("k_scale_pages", "k_scale"),
+                          ("v_scale_pages", "v_scale")]
+            for pool_name, strip_name in pairs:
                 strip = cache1[strip_name][:, 0]        # [L,Hkv,plen,hd]
                 if pad:
                     strip = jnp.pad(

@@ -17,8 +17,14 @@ models drift unless pinned by measurement-shaped tests.
 
 Set ``REPRO_DIALECT=<name>`` to restrict the dialect axis (the CI matrix
 runs a dedicated ``uisa-universal10`` job so the no-shuffle profile is
-exercised on every PR).
+exercised on every PR).  Set ``REPRO_PRECISION=int8`` to run the same
+matrix under an int8 ExecutionPolicy: every op with a registered
+precision variant resolves to its quantized twin, and outputs are held
+to the shared int8 tolerance policy (tests/conftest.py::TOLERANCES)
+against the *f32* library reference — the dedicated CI job for the
+quantized dialect axis.
 """
+import dataclasses
 import os
 import warnings
 
@@ -26,6 +32,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from conftest import tolerance_for
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -44,6 +52,16 @@ settings.load_profile("conformance")
 
 _ENV_DIALECT = os.environ.get("REPRO_DIALECT")
 DIALECT_NAMES = [_ENV_DIALECT] if _ENV_DIALECT else sorted(DIALECTS)
+
+#: the env-restricted precision axis (None = f32 policies, "int8" = the
+#: quantized-dialect CI job); quantized ops are additionally always
+#: covered by their own _q8 CASES rows below, on every run
+_ENV_PRECISION = os.environ.get("REPRO_PRECISION")
+
+
+def _with_precision(pol: ExecutionPolicy,
+                    precision: str) -> ExecutionPolicy:
+    return dataclasses.replace(pol, precision=precision)
 
 KEY = jax.random.PRNGKey(17)
 
@@ -85,7 +103,26 @@ CASES = {
         _Q, _KV_K, _KV_V, _WO, causal=True, policy=pol),
     "rmsnorm_swiglu": lambda pol: ops.fused_rmsnorm_swiglu(
         _X, _W, _WCAT, policy=pol),
+    # quantized variants (ISSUE 7): the same hot pairs under an int8
+    # ExecutionPolicy — auto resolves the _q8 registry row, weights are
+    # quantized on the fly, and the pass criterion is the shared int8
+    # tolerance against the f32 library reference (conftest.TOLERANCES)
+    "rmsnorm_matmul_q8": lambda pol: ops.fused_rmsnorm_matmul(
+        _X, _W, _P, policy=_with_precision(pol, "int8")),
+    "rmsnorm_swiglu_q8": lambda pol: ops.fused_rmsnorm_swiglu(
+        _X, _W, _WCAT, policy=_with_precision(pol, "int8")),
+    "flash_attention_matmul_q8":
+        lambda pol: ops.fused_flash_attention_matmul(
+            _Q, _KV_K, _KV_V, _WO, causal=True,
+            policy=_with_precision(pol, "int8")),
 }
+
+#: each op's f32 reference case and tolerance bucket: a _q8 row is held
+#: to the int8 bounds against its BASE op's library output
+def _reference_case(op):
+    if op.endswith("_q8"):
+        return CASES[op[:-3]], "int8"
+    return CASES[op], "int8" if _ENV_PRECISION == "int8" else None
 
 
 def test_every_registered_op_has_a_conformance_case():
@@ -93,8 +130,20 @@ def test_every_registered_op_has_a_conformance_case():
     assert set(CASES) == set(REGISTRY.ops())
 
 
+def _matrix_policy(mode, dialect_name):
+    """The policy one matrix cell runs under: REPRO_PRECISION threads the
+    env-restricted precision axis into every cell (the int8 CI job)."""
+    pol = ExecutionPolicy(mode=mode, dialect=dialect_name)
+    if _ENV_PRECISION:
+        pol = _with_precision(pol, _ENV_PRECISION)
+    return pol
+
+
 def _select_auto(op, dialect_name):
-    pol = ExecutionPolicy(mode="auto", dialect=dialect_name)
+    pol = _matrix_policy("auto", dialect_name)
+    if op.endswith("_q8"):
+        pol = _with_precision(pol, "int8")
+        op = op[:-3]                  # select retargets base -> _q8
     with warnings.catch_warnings():
         warnings.simplefilter("ignore", LoweringFallbackWarning)
         return REGISTRY.select(op, pol, shape=ops.PROBE_SHAPES[op])
@@ -106,10 +155,15 @@ class TestConformance:
     def test_auto_resolves_contract_legal_variant(self, op, dialect_name):
         """auto must land on a variant whose contract validates on THIS
         dialect (library as the recorded escape), never on a variant
-        pinned to a foreign target."""
+        pinned to a foreign target.  A _q8 matrix row additionally pins
+        the precision retarget: an int8 policy must actually land on the
+        quantized twin (not silently serve the f32 row)."""
         dialect = get_dialect(dialect_name)
         low = _select_auto(op, dialect_name)
-        assert (REGISTRY.legal(op, low.mode, dialect)
+        if op.endswith("_q8") and low.mode is not IsaMode.LIBRARY:
+            assert low.op == op, \
+                f"int8 policy resolved {low.op}, not the quantized twin"
+        assert (REGISTRY.legal(low.op, low.mode, dialect)
                 or low.mode is IsaMode.LIBRARY), (op, low.mode.value)
         if low.target is not None:
             assert low.target == dialect.name, \
@@ -118,18 +172,22 @@ class TestConformance:
             assert low.mode is not IsaMode.ABSTRACT_SHUFFLE, op
 
     def test_auto_output_matches_library_reference(self, op, dialect_name):
-        """The selected variant computes the same numbers as the jnp
-        library row — the registry's correctness claim, checked on every
-        dialect instead of spot-checked on the target."""
+        """The selected variant computes the same numbers as the **f32**
+        jnp library row — the registry's correctness claim, checked on
+        every dialect instead of spot-checked on the target.  Bounds come
+        from the shared per-precision tolerance policy (conftest):
+        quantized rows earn the int8 bounds, everything else the f32
+        accumulation-order bounds."""
         run = CASES[op]
+        ref_run, tol_bucket = _reference_case(op)
         with warnings.catch_warnings():
             warnings.simplefilter("ignore", LoweringFallbackWarning)
-            got = run(ExecutionPolicy(mode="auto", dialect=dialect_name))
-            want = run(ExecutionPolicy(mode=IsaMode.LIBRARY.value,
-                                       dialect=dialect_name))
+            got = run(_matrix_policy("auto", dialect_name))
+            want = ref_run(ExecutionPolicy(mode=IsaMode.LIBRARY.value,
+                                           dialect=dialect_name))
         for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
             np.testing.assert_allclose(np.asarray(g), np.asarray(w),
-                                       rtol=2e-4, atol=2e-4)
+                                       **tolerance_for(tol_bucket, ref=w))
 
 
 # ---------------------------------------------------------------------------
@@ -174,6 +232,53 @@ class TestPagedDecodeConformance:
                                              dialect=dialect_name))
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=2e-4, atol=2e-4)
+
+    def test_paged_int8_kv_matches_f32_library(self, dialect_name):
+        """The int8 paged cache shape (ISSUE 7): pools quantized per
+        (token, head) with scale pools riding the same block table, the
+        kernel dequantizing gathered pages in VMEM.  Output must match
+        the f32 pools through the f32 library row within the shared int8
+        tolerance — on every dialect, including the sentinel/dead-block
+        corners the f32 paged test pins."""
+        from repro.models.attention import quantize_kv
+        k_q, k_s = quantize_kv(_PG_K)
+        v_q, v_s = quantize_kv(_PG_V)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", LoweringFallbackWarning)
+            got = ops.fused_flash_attention_matmul(
+                _PG_Q, k_q, v_q, _PG_WO, pos=_PG_POS,
+                block_tables=_PG_TBL, k_scale=k_s, v_scale=v_s,
+                policy=_with_precision(
+                    ExecutionPolicy(mode="auto", dialect=dialect_name),
+                    "int8"))
+            want = self._run(ExecutionPolicy(mode=IsaMode.LIBRARY.value,
+                                             dialect=dialect_name))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   **tolerance_for("int8", ref=want))
+
+    def test_paged_int8_cost_undercuts_f32_kv_stream(self, dialect_name):
+        """The quantized variant's registered structural cost must carry
+        the predicted kv-stream cut: int8 pages cost (d + 4)/page-token
+        per direction against f32's 4d — at least 2x less for any d >= 8,
+        and the full hbm_bytes undercuts the f32 row."""
+        pol = _with_precision(
+            ExecutionPolicy(mode="auto", dialect=dialect_name), "int8")
+        shape = dict(b=2, h=4, sq=1, skv=_PG_MAXP * _PG_PS, d=32, n=80,
+                     causal=False, page_size=_PG_PS, pages_occupied=4)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", LoweringFallbackWarning)
+            low = REGISTRY.select("flash_attention_matmul", pol,
+                                  shape=shape)
+            base = REGISTRY.select(
+                "flash_attention_matmul",
+                ExecutionPolicy(mode="auto", dialect=dialect_name),
+                shape=shape)
+        qc = low.structural_cost(**shape)
+        fc = base.structural_cost(**shape)
+        assert qc["kv_precision"] == "int8"
+        assert qc["kv_stream_bytes"] * 2 <= fc["kv_stream_bytes"], \
+            (qc["kv_stream_bytes"], fc["kv_stream_bytes"])
+        assert qc["hbm_bytes"] < fc["hbm_bytes"]
 
     def test_paged_cost_registered_for_resolved_mode(self, dialect_name):
         """Every dialect's auto-resolved variant carries the paged cost
@@ -266,6 +371,8 @@ _SEQS = (256, 512, 1024, 2048)
 
 
 def _fused_shape(op, rows, d, n, seq):
+    if op.endswith("_q8"):            # quantized twin: same shape space
+        op = op[:-3]
     if op == "rmsnorm_matmul":
         return dict(rows=rows, d=d, n=n)
     if op == "add_rmsnorm":
@@ -321,6 +428,33 @@ def test_declared_fallbacks_never_cheaper_property(rows, d, n, seq):
     variant it replaces (in cost_key order) — degrading is honest, never
     a secret win that would make the primary registration pointless."""
     _check_fallbacks_never_cheaper(rows, d, n, seq)
+
+
+@pytest.mark.parametrize("rows,d,n,seq",
+                         [(1, 512, 512, 512),      # decode rows
+                          (64, 128, 128, 256), (1024, 1024, 512, 1024)])
+@pytest.mark.parametrize("base", ["rmsnorm_matmul", "rmsnorm_swiglu",
+                                  "flash_attention_matmul"])
+def test_quantized_weight_stream_undercuts_f32(base, rows, d, n, seq):
+    """The acceptance bound of the quantized variants: at every mode and
+    shape, the registered weight stream is at least 2x below the f32
+    row's (int8 bytes + one f32 scale row vs f32 bytes), and total
+    hbm_bytes strictly undercuts — the registry-level guarantee the
+    bench ``--compare`` gate re-checks against emitted artifacts."""
+    shape = _fused_shape(base, rows, d, n, seq)
+    for mode in REGISTRY.modes(base + "_q8"):
+        qc = REGISTRY.structural_cost(base + "_q8", mode, **shape)
+        fc = REGISTRY.structural_cost(base, mode, **shape)
+        assert qc["weight_precision"] == "int8"
+        assert qc["weight_stream_bytes"] * 2 <= fc["weight_stream_bytes"], \
+            (base, mode, qc["weight_stream_bytes"],
+             fc["weight_stream_bytes"])
+        assert qc["hbm_bytes"] < fc["hbm_bytes"], (base, mode)
+        # the saving claimed against the unfused pair is the SAME saving
+        # (fusion) — quantization moves both sides of the ledger equally
+        assert (fc["hbm_bytes_unfused_pair"] - fc["hbm_bytes"]
+                == qc["hbm_bytes_unfused_pair"] - qc["hbm_bytes"]), \
+            (base, mode)
 
 
 @pytest.mark.parametrize("rows,d,n,seq",

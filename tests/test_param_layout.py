@@ -297,6 +297,100 @@ class TestCheckpointMigration:
             "attn_qkv": True, "mlp_swiglu": True}
 
 
+class TestPrecisionMigration:
+    """ISSUE 7 satellite: checkpoint precision migration.  f32 -> int8
+    -> f32 through migrate_layout is idempotent after the first
+    quantization — the second round trip is bitwise on the int8 bytes
+    AND the scales (power-of-two at-rest scales make requantization a
+    fixed point) — and the manifest records the precision."""
+
+    def _model_and_templates(self):
+        _, fused = models_pair()
+        params = fused.init_params(jax.random.PRNGKey(7))
+        qtmpl = jax.eval_shape(lambda: common.quantize_params(params))
+        ftmpl = jax.eval_shape(fused.init_params, KEY)
+        return params, qtmpl, ftmpl
+
+    def test_second_round_trip_bitwise_stable(self, tmp_path):
+        params, qtmpl, ftmpl = self._model_and_templates()
+        ck = CheckpointManager(str(tmp_path), keep=10)
+        ck.save(0, params)
+        assert ck.manifest(0)["precision"] == "f32"
+        q1 = ck.restore(0, qtmpl)            # quantize-on-restore
+        assert q1["blocks"]["attn"]["wqkv"].dtype == jnp.int8
+        ck.save(1, q1)
+        assert ck.manifest(1)["precision"] == "int8"
+        f1 = ck.restore(1, ftmpl)            # dequantize-on-restore
+        # first trip is lossy but bounded (tolerance policy, conftest)
+        from conftest import tolerance_for
+        for a, b in zip(jax.tree_util.tree_leaves(f1),
+                        jax.tree_util.tree_leaves(params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       **tolerance_for("int8", ref=b))
+        # second trip: requantizing the dequantized weights reproduces
+        # the SAME int8 bytes and scales, bit for bit
+        ck.save(2, f1)
+        q2 = ck.restore(2, qtmpl)
+        for a, b in zip(jax.tree_util.tree_leaves(q1),
+                        jax.tree_util.tree_leaves(q2)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    def test_quantize_on_save_matches_restore_path(self, tmp_path):
+        """save(migrate_to=<int8 template>) writes the same quantized
+        leaves restore-into-int8-template would produce."""
+        params, qtmpl, _ = self._model_and_templates()
+        ck = CheckpointManager(str(tmp_path), keep=10)
+        ck.save(0, params, migrate_to=qtmpl)
+        assert ck.manifest(0)["precision"] == "int8"
+        ck.save(1, params)
+        via_save = ck.restore(0, qtmpl)      # already int8: passthrough
+        via_restore = ck.restore(1, qtmpl)   # quantized at restore
+        for a, b in zip(jax.tree_util.tree_leaves(via_save),
+                        jax.tree_util.tree_leaves(via_restore)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    def test_int8_concat_restores_into_legacy_f32(self, tmp_path):
+        """Precision and layout migration compose: an int8 concat
+        checkpoint dequantizes FIRST, then splits toward a legacy
+        per-matrix f32 template (scales never split)."""
+        plain, _ = models_pair()
+        params, qtmpl, _ = self._model_and_templates()
+        ck = CheckpointManager(str(tmp_path), keep=10)
+        ck.save(0, params, migrate_to=qtmpl)
+        tmpl_l = jax.eval_shape(plain.init_params, KEY)
+        restored = ck.restore(0, tmpl_l)
+        attn = restored["blocks"]["attn"]
+        assert {"wq", "wk", "wv"} <= set(attn)
+        assert attn["wq"].dtype == jnp.float32
+        from conftest import tolerance_for
+        want = plain.init_params(jax.random.PRNGKey(7))
+        np.testing.assert_allclose(
+            np.asarray(restored["blocks"]["attn"]["wq"]),
+            np.asarray(want["blocks"]["attn"]["wq"]),
+            **tolerance_for("int8", ref=want["blocks"]["attn"]["wq"]))
+
+    def test_quantized_params_decode_close_to_f32(self):
+        """Model-level: the quantized tree the precision policy serves
+        produces logits within the int8 tolerance of the f32 tree (the
+        serve-tick equivalence claim at its smallest reproduction)."""
+        from conftest import tolerance_for
+        cfg = tiny_cfg()
+        par = ParallelConfig(remat="none", isa_mode="auto",
+                             weight_precision="int8")
+        model = build_model(cfg, par)
+        params = model.init_params(jax.random.PRNGKey(7))
+        qparams = common.quantize_params(params)
+        cache_f = model.init_cache(2, 16)
+        cache_q = model.init_cache(2, 16)
+        toks = jnp.array([3, 5], jnp.int32)
+        ref_model = build_model(cfg, ParallelConfig(remat="none",
+                                                    isa_mode="auto"))
+        want, _ = ref_model.decode_step(params, toks, cache_f)
+        got, _ = model.decode_step(qparams, toks, cache_q)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   **tolerance_for("int8", ref=want))
+
+
 class TestMixedDialectPlans:
     """The PR 4 jit-cache-key gap, closed: two policies at identical
     shapes bind *different* staging plans because plan_dialect is a
