@@ -69,6 +69,7 @@ def _cases(quick: bool):
         b, h, s, hd, blk = 1, 2, 256, 64, 128
         m = k = n = 256
         b_dec, b_att, s_att = 8, 4, 256
+        s_ssd, s_ssd2, p_ssd, p_ssd2, n_ssd, n_ssd2 = 256, 128, 32, 16, 32, 32
         warmup, iters = 1, 3
     else:
         n_red, rows_rms, d_rms = 1 << 21, 1024, 1024
@@ -80,6 +81,9 @@ def _cases(quick: bool):
         # mode pays per grid cell, and the structural columns (what the
         # gate pins) are computed from the recorded shape either way
         b_dec, b_att, s_att = 128, 16, 512
+        # the two canonical ssd tuning buckets (core/tuning.py): a long
+        # prefill bucket and a short one that fits in a single chunk
+        s_ssd, s_ssd2, p_ssd, p_ssd2, n_ssd, n_ssd2 = 1024, 256, 64, 64, 128, 64
         warmup, iters = 2, 5
 
     n_proj = d_rms                       # norm -> square projection
@@ -137,6 +141,23 @@ def _cases(quick: bool):
     # undercuts.  Weights are quantized once here: the timed region sees
     # the serving steady state (dequantize-in-VMEM), not the one-time
     # quantization.
+    # ssd streams (ISSUE 8): one fused chunked scan per (seq, p, n)
+    # tuning bucket — h heads over g groups, dt positive via softplus,
+    # A negative (decaying state), B/C scaled down so the chunk-boundary
+    # state stays O(1) across the scan
+    h_ssd, g_ssd = 4, 1
+    kss = jax.random.split(jax.random.fold_in(KEY, 4), 5)
+    x_ssd = jax.random.normal(kss[0], (1, s_ssd, h_ssd, p_ssd), jnp.float32)
+    dt_ssd = jax.nn.softplus(jax.random.normal(
+        kss[1], (1, s_ssd, h_ssd), jnp.float32))
+    a_ssd = -jnp.exp(jax.random.normal(kss[2], (h_ssd,), jnp.float32) * 0.5)
+    b_ssd = jax.random.normal(kss[3], (1, s_ssd, g_ssd, n_ssd),
+                              jnp.float32) * 0.3
+    c_ssd = jax.random.normal(kss[4], (1, s_ssd, g_ssd, n_ssd),
+                              jnp.float32) * 0.3
+    x_ssd2, dt_ssd2 = x_ssd[:, :s_ssd2, :, :p_ssd2], dt_ssd[:, :s_ssd2]
+    b_ssd2, c_ssd2 = b_ssd[:, :s_ssd2, :, :n_ssd2], c_ssd[:, :s_ssd2, :, :n_ssd2]
+
     p_q, p_s = quantize_weight(p_rms)
     wc_q, wc_s = quantize_weight(w_cat)
     wo_q, wo_s = quantize_weight(w_o)
@@ -215,6 +236,18 @@ def _cases(quick: bool):
          dict(b=b_att, h=h, sq=1, skv=maxp * page, d=hd, n=n_wo,
               causal=False, block_kv=page, page_size=page,
               pages_occupied=pages_occ)),
+        # fused chunked SSD scan (ISSUE 8): one grid, [N,P] state carried
+        # in VMEM scratch across the sequential chunk axis — the rows
+        # cover both canonical tuning buckets, and compare() gates each
+        # mode's modeled hbm_bytes below the unfused six-dot pair's
+        ("ssd_scan", "seq",
+         lambda mode: ops.fused_ssd_scan(x_ssd, dt_ssd, a_ssd, b_ssd,
+                                         c_ssd, mode=mode),
+         dict(b=1, seq=s_ssd, h=h_ssd, p=p_ssd, g=g_ssd, n=n_ssd)),
+        ("ssd_scan", "seq_short",
+         lambda mode: ops.fused_ssd_scan(x_ssd2, dt_ssd2, a_ssd, b_ssd2,
+                                         c_ssd2, mode=mode),
+         dict(b=1, seq=s_ssd2, h=h_ssd, p=p_ssd2, g=g_ssd, n=n_ssd2)),
         # quantized decode rows (ISSUE 7): int8 weights dequantized in
         # VMEM — weight_stream_bytes must undercut the matching f32
         # decode row by >= 2x (compare() gates this); the paged row adds
@@ -382,6 +415,25 @@ def compare(old: dict, new: dict, threshold: float = 1.5) -> list:
                 f"{kernel}[{mode}]: paged decode hbm_bytes "
                 f"{nr['hbm_bytes']} not below dense decode "
                 f"{dense['hbm_bytes']} — occupied-page saving lost")
+    # fused-vs-pair gate (ISSUE 8): every fused row that models an
+    # unfused pair must undercut it — a non-library mode whose fused
+    # hbm_bytes reaches the pair's has lost the round-trip saving the
+    # fusion exists for (the library row IS the pair, so it must match)
+    for (kernel, mode, case), nr in new_rows.items():
+        pair = nr["structural"].get("hbm_bytes_unfused_pair")
+        if pair is None:
+            continue
+        if mode == "library":
+            if nr["hbm_bytes"] != pair:
+                failures.append(
+                    f"{kernel}[library] ({case}): hbm_bytes "
+                    f"{nr['hbm_bytes']} != unfused pair {pair} — the "
+                    f"library row must BE the unfused pair")
+        elif nr["hbm_bytes"] >= pair:
+            failures.append(
+                f"{kernel}[{mode}] ({case}): fused hbm_bytes "
+                f"{nr['hbm_bytes']} not below unfused pair {pair} — "
+                f"fusion saving lost")
     # quantized-vs-f32 stream gate (ISSUE 7): every ``_q8`` row's modeled
     # weight stream must stay at or below HALF its f32 twin's (same mode,
     # same shape regime) — the int8-weights-dequantized-in-VMEM saving

@@ -1,22 +1,35 @@
-"""Fusion audit of the non-Pallas ``chunked_attention`` branch (ROADMAP).
+"""Fusion audit of the chunked jnp branches (ROADMAP / ISSUE 8).
 
-``attn_seq`` keeps a pure-jnp chunked-attention path for dry-runs and
-SPMD compilation (models/attention.py); unlike the Pallas flash path its
-epilogue projection is a separate einsum, and the open ROADMAP question
-was how much of that XLA already fuses on its own.  This script lowers
-the branch, compiles it, and uses the trip-count-aware HLO parser
-(roofline/hlo_parser.py) to count where every ``dot`` landed:
+Two auditable targets, both pure-jnp chunked scans XLA must fuse on its
+own (no Pallas by construction):
+
+- ``--target attention`` (default): ``attn_seq``'s chunked-attention
+  branch (models/attention.py) with its separate wo-einsum epilogue;
+- ``--target ssd``: the chunked SSD scan (kernels/ssd.py::
+  ssd_scan_reference, the ``ssd_scan`` registry's library row) — six
+  contractions per chunk step around a carried-state recurrence.
+
+The script lowers the branch, compiles it, and uses the trip-count-aware
+HLO parser (roofline/hlo_parser.py) to count where every ``dot`` landed:
 
 - **dots inside fusion computations** — contraction already fused with
   its neighbors (prologue/epilogue elementwise work rides along);
 - **surface dots** — contractions XLA left standalone: each one's
   operands/results are fusion-boundary HBM traffic, the quantity the
-  Pallas fused epilogue eliminates by construction.
+  Pallas fused lowerings eliminate by construction.
+
+``--fused`` compiles the *fused* Pallas path for the same target and
+shape instead (interpret mode off-TPU), closing the before/after loop:
+the chunk-scan contractions move inside the one kernel's computation and
+off the surface.
 
   PYTHONPATH=src python scripts/audit_chunked_fusion.py
   PYTHONPATH=src python scripts/audit_chunked_fusion.py --seq 512 --json
+  PYTHONPATH=src python scripts/audit_chunked_fusion.py --target ssd
+  PYTHONPATH=src python scripts/audit_chunked_fusion.py --target ssd --fused
 
-The result is recorded in EXPERIMENTS.md §Chunked-attention fusion audit.
+Results are recorded in EXPERIMENTS.md §Chunked-attention fusion audit
+and §Chunked-scan fusion (ssd).
 """
 from __future__ import annotations
 
@@ -68,22 +81,15 @@ def audit_hlo_fusions(text: str) -> dict:
     }
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--seq", type=int, default=256)
-    ap.add_argument("--d-model", type=int, default=128)
-    ap.add_argument("--heads", type=int, default=4)
-    ap.add_argument("--kv-heads", type=int, default=2)
-    ap.add_argument("--json", action="store_true")
-    args = ap.parse_args()
-
+def _attention_branch(args):
+    """The chunked-attention jnp branch (PR 5's original target)."""
     cfg = ModelConfig(name="audit", family="dense", num_layers=1,
                       d_model=args.d_model, num_heads=args.heads,
                       num_kv_heads=args.kv_heads, d_ff=2 * args.d_model,
                       vocab_size=128, dtype="float32")
     # the audited branch: use_pallas_attn=False -> chunked_attention +
-    # the separate wo einsum epilogue
-    par = ParallelConfig(remat="none", use_pallas_attn=False)
+    # the separate wo einsum epilogue (--fused flips it back on)
+    par = ParallelConfig(remat="none", use_pallas_attn=not args.fused)
     params, _ = transformer.init_attn(jax.random.PRNGKey(0), cfg,
                                       jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(1),
@@ -94,9 +100,57 @@ def main() -> int:
         return transformer.attn_seq(params, x, cfg, par, positions,
                                     ctx=None)
 
-    compiled = jax.jit(branch).lower(params, x).compile()
+    return branch, (params, x)
+
+
+def _ssd_branch(args):
+    """The chunked SSD scan: the jnp library row (six surface-candidate
+    contractions per chunk step), or with --fused the one-grid Pallas
+    kernel at the same shape."""
+    from repro.kernels import ops as kernel_ops
+    from repro.kernels import ssd as kernel_ssd
+    h, g, p, n, chunk = 4, 1, args.d_model // 2, args.d_model, 64
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    x = jax.random.normal(ks[0], (1, args.seq, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, args.seq, h),
+                                           jnp.float32))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,), jnp.float32) * 0.5)
+    b_mat = jax.random.normal(ks[3], (1, args.seq, g, n), jnp.float32) * 0.3
+    c_mat = jax.random.normal(ks[4], (1, args.seq, g, n), jnp.float32) * 0.3
+
+    if args.fused:
+        def branch(x, dt):
+            return kernel_ops.fused_ssd_scan(x, dt, a, b_mat, c_mat,
+                                             chunk=chunk, mode="native")
+    else:
+        def branch(x, dt):
+            return kernel_ssd.ssd_scan_reference(x, dt, a, b_mat, c_mat,
+                                                 chunk)
+
+    return branch, (x, dt)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--target", choices=("attention", "ssd"),
+                    default="attention")
+    ap.add_argument("--fused", action="store_true",
+                    help="compile the fused Pallas path instead of the "
+                    "jnp branch (the after-side of the audit delta)")
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--heads", type=int, default=4)
+    ap.add_argument("--kv-heads", type=int, default=2)
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+
+    build = _ssd_branch if args.target == "ssd" else _attention_branch
+    branch, operands = build(args)
+    compiled = jax.jit(branch).lower(*operands).compile()
     text = compiled.as_text()
     report = audit_hlo_fusions(text)
+    report["target"] = args.target
+    report["fused"] = args.fused
     report["backend"] = jax.default_backend()
     report["seq"] = args.seq
     report["unfused_fraction"] = (
@@ -105,7 +159,8 @@ def main() -> int:
     if args.json:
         print(json.dumps(report, indent=1))
     else:
-        print(f"[audit] backend={report['backend']} seq={args.seq}: "
+        print(f"[audit] target={args.target} fused={args.fused} "
+              f"backend={report['backend']} seq={args.seq}: "
               f"{report['dots_total']} dots, "
               f"{report['dots_fused']} inside "
               f"{report['fusions_with_dot']}/{report['fusion_ops']} "

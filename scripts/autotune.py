@@ -114,6 +114,17 @@ def build_runner(op: str, mode: str, shape: dict, dialect=None):
                               jnp.float32)
         return lambda: ops.fused_flash_attention_matmul(
             q, k, v, w, causal=True, policy=pol)
+    if op == "ssd_scan":
+        h, g = 4, 1
+        x = jax.random.normal(ks[0], (1, shape["seq"], h, shape["p"]),
+                              jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(
+            ks[1], (1, shape["seq"], h), jnp.float32))
+        a = -jnp.exp(jax.random.normal(ks[2], (h,), jnp.float32) * 0.5)
+        bc = jax.random.normal(ks[3], (2, 1, shape["seq"], g, shape["n"]),
+                               jnp.float32) * 0.3
+        return lambda: ops.fused_ssd_scan(x, dt, a, bc[0], bc[1],
+                                          policy=pol)
     raise ValueError(op)
 
 

@@ -95,6 +95,12 @@ def attention_matmul_bucket(sq: int, skv: int, d: int, n: int) -> str:
             f":n{next_pow2(n)}")
 
 
+def ssd_bucket(seq: int, p: int, n: int) -> str:
+    """ssd_scan: sequence length plus the head/state widths that size one
+    chunk step's working set (batch and head count only scale the grid)."""
+    return f"seq{next_pow2(seq)}:p{next_pow2(p)}:n{next_pow2(n)}"
+
+
 def parse_bucket(bucket: str) -> Dict[str, int]:
     """Inverse of the bucket formatters: field name -> representative
     (pow2 upper-edge) value.  The representative shape is what
@@ -289,6 +295,30 @@ def attention_matmul_candidates(sq: int, skv: int, d: int, n: int,
     return [params for *_rank, params in out]
 
 
+def ssd_candidates(seq: int, p: int, n: int, dialect: Dialect = TARGET,
+                   dtype=jnp.float32) -> List[Dict]:
+    """Legal chunk lengths for the fused SSD scan.
+
+    One (batch, head, chunk) step's working set: the x block (Q×P), the
+    B/C blocks (2·Q×N), the dt row, the carried [N,P] f32 state, the
+    Q×Q score tile, and the y tile.  Rank prefers fewer sequential chunk
+    steps (larger chunks), i.e. fewer state-carry iterations, with the
+    quadratic Q² tile as the occupancy limiter."""
+    itemsize = jnp.dtype(dtype).itemsize
+    out = []
+    for c in (64, 128, 256):
+        working = ((c * p + 2 * c * n + c) * itemsize
+                   + (n * p + c * c + c * p) * 4)
+        if dialect.buffer_occupancy(working, 2) < 2:
+            continue
+        steps = -(-seq // c)
+        out.append((steps, -c, {"chunk": c}))
+    out.sort(key=lambda t: t[:2])
+    if not out:
+        return [{"chunk": 64}]                         # Eq. 1 floor plan
+    return [params for *_rank, params in out]
+
+
 # ---------------------------------------------------------------------------
 # Per-op tuning spaces: kernels register how their parameters are derived,
 # so table validation and the autotune CLI share one source of truth.
@@ -337,6 +367,8 @@ def candidates_for(op: str, bucket: str,
     if space.kind == "attention_matmul":
         return attention_matmul_candidates(rep["sq"], rep["skv"], rep["d"],
                                            rep["n"], dialect)
+    if space.kind == "ssd":
+        return ssd_candidates(rep["seq"], rep["p"], rep["n"], dialect)
     raise ValueError(f"unknown tuning space kind {space.kind!r}")
 
 
@@ -560,6 +592,11 @@ CANONICAL_SHAPES: Dict[str, List[Dict[str, int]]] = {
                           dict(rows=64, d=256, f=256)],
     "flash_attention_matmul_q8": [dict(sq=1, skv=1024, d=64, n=256),
                                   dict(sq=1, skv=512, d=64, n=256)],
+    # the fused chunked SSD scan (ISSUE 8): two seq rows landing in two
+    # distinct buckets — the long-prefill shape (mamba2 defaults: P=64,
+    # N=128) and a short-sequence shape whose smaller state width admits
+    # a different chunk winner; matches the bench matrix's ssd rows
+    "ssd_scan": [dict(seq=1024, p=64, n=128), dict(seq=256, p=64, n=64)],
 }
 
 
@@ -585,6 +622,8 @@ def bucket_for(op: str, shape: Dict[str, int]) -> str:
     if kind == "attention_matmul":
         return attention_matmul_bucket(shape["sq"], shape["skv"],
                                        shape["d"], shape["n"])
+    if kind == "ssd":
+        return ssd_bucket(shape["seq"], shape["p"], shape["n"])
     raise ValueError(kind)
 
 

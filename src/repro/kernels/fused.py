@@ -1644,3 +1644,10 @@ for _base in ("rmsnorm_matmul", "rmsnorm_swiglu", "flash_attention_matmul"):
     REGISTRY.register_precision_variant(_base, "int8", _base + "_q8")
 
 FUSED_OPS = FUSED_OPS + QUANT_OPS
+
+# the fused chunked SSD scan (ISSUE 8) registers itself on import; pulling
+# it in here keeps FUSED_OPS authoritative for every consumer regardless
+# of import order (kernels/ssd.py depends only on repro.core — no cycle).
+from repro.kernels import ssd as _ssd  # noqa: E402,F401
+
+FUSED_OPS = FUSED_OPS + ("ssd_scan",)

@@ -37,6 +37,7 @@ from repro.kernels import gemm as _gemm
 from repro.kernels import histogram as _histogram
 from repro.kernels import reduction as _reduction
 from repro.kernels import rmsnorm as _rmsnorm
+from repro.kernels import ssd as _ssd
 from repro.kernels import ref as ref  # noqa: F401 (re-export for tests)
 
 # Kernel-layer mode strings (the registry's POLICY_MODES additionally
@@ -63,6 +64,8 @@ PROBE_SHAPES = {
     "flash_attention_matmul_q8": dict(b=1, h=4, sq=1024, skv=1024, d=64,
                                       n=256, causal=True),
     "rmsnorm_swiglu_q8": dict(rows=1024, d=1024, f=1024),
+    # the fused chunked SSD scan (ISSUE 8): mamba2-default head geometry
+    "ssd_scan": dict(b=1, seq=1024, h=8, p=64, g=1, n=128),
 }
 
 
@@ -291,6 +294,31 @@ def fused_rmsnorm_swiglu(x: jax.Array, weight: jax.Array,
                      interpret=interpret)
 
 
+def fused_ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array,
+                   B_mat: jax.Array, C_mat: jax.Array, *,
+                   chunk: Optional[int] = None,
+                   initial_state: Optional[jax.Array] = None, mode=None,
+                   policy: Optional[ExecutionPolicy] = None,
+                   interpret: Optional[bool] = None):
+    """The whole chunked SSD scan (`models/ssd.py`) in one kernel.
+
+    Intra-chunk quadratic dots, the carried-state contribution, and the
+    inter-chunk recurrence run in a single grid with the [N,P] state in
+    VMEM scratch across the sequential chunk axis; the per-chunk
+    intermediate tensors never stage through HBM.  Declared fallbacks:
+    shuffle -> scratch-tree prefix scan, native -> the unfused jnp chunk
+    path.  Returns the same ``(y, final_state)`` pair as the reference,
+    so the final state seeds the decode recurrence unchanged."""
+    pol, interpret = _resolve(mode, policy, interpret)
+    b, l, h, p = x.shape
+    g, n = B_mat.shape[2], B_mat.shape[3]
+    low = REGISTRY.select("ssd_scan", pol, shape=dict(
+        b=b, seq=l, h=h, p=p, g=g, n=n, chunk=chunk))
+    return _dispatch(low, pol, x, dt, A, B_mat, C_mat,
+                     initial_state=initial_state, chunk=chunk,
+                     interpret=interpret)
+
+
 STRUCTURAL_COSTS = {
     "gemm": _gemm.structural_cost,
     "reduction": _reduction.structural_cost,
@@ -305,6 +333,7 @@ STRUCTURAL_COSTS = {
     "flash_attention_matmul_q8":
         _fused.structural_cost_flash_attention_matmul_q8,
     "rmsnorm_swiglu_q8": _fused.structural_cost_rmsnorm_swiglu_q8,
+    "ssd_scan": _ssd.structural_cost_ssd_scan,
 }
 
 #: Pallas-variant contracts per op, in portability order (registry view;

@@ -20,6 +20,8 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.registry import LIBRARY_POLICY, resolve_policy
+from repro.kernels import ssd as kernel_ssd
 from repro.models import common
 from repro.models.config import ModelConfig, SSMConfig
 from repro.parallel.sharding import ShardCtx, shard
@@ -83,7 +85,7 @@ def _causal_conv(x, w, b):
 def ssd_scan(x, dt, A, B_mat, C_mat, chunk: int,
              initial_state: Optional[jax.Array] = None,
              ctx: Optional[ShardCtx] = None):
-    """Chunked SSD.
+    """Chunked SSD — the unfused jnp chunk path.
 
     x:     [B, L, H, P]   (H heads of dim P)
     dt:    [B, L, H]      (positive step sizes)
@@ -91,58 +93,22 @@ def ssd_scan(x, dt, A, B_mat, C_mat, chunk: int,
     B_mat: [B, L, G, N]
     C_mat: [B, L, G, N]
     Returns y [B, L, H, P] and final state [B, G, Hg, N, P] (Hg = H // G).
+
+    The chunk math lives in ``kernels/ssd.py::ssd_scan_reference`` (also
+    the lowering registry's library row for ``ssd_scan``); this wrapper
+    threads the mesh placement: ``ctx`` pins the carried [B,G,Hg,N,P]
+    state to its logical axes inside the scan body, so a sharded prefill
+    keeps the carry resident on the heads axis instead of letting GSPMD
+    re-derive its placement per chunk step.
     """
-    b, l, h, p = x.shape
-    g, n = B_mat.shape[2], B_mat.shape[3]
-    hg = h // g
-    chunk = min(chunk, l)
-    pad = (-l) % chunk
-    if pad:
-        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        dt = jnp.pad(dt, ((0, 0), (0, pad)) + ((0, 0),))
-        B_mat = jnp.pad(B_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        C_mat = jnp.pad(C_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    lp = x.shape[1]
-    nc = lp // chunk
-
-    xf = x.astype(jnp.float32).reshape(b, nc, chunk, g, hg, p)
-    dtf = dt.astype(jnp.float32).reshape(b, nc, chunk, g, hg)
-    Bf = B_mat.astype(jnp.float32).reshape(b, nc, chunk, g, n)
-    Cf = C_mat.astype(jnp.float32).reshape(b, nc, chunk, g, n)
-    dA = dtf * A.reshape(g, hg)                       # [B,nc,Q,G,Hg] (<=0)
-    ldec = jnp.cumsum(dA, axis=2)                     # inclusive within chunk
-
-    if initial_state is None:
-        h0 = jnp.zeros((b, g, hg, n, p), jnp.float32)
-    else:
-        h0 = initial_state.astype(jnp.float32)
-
-    causal = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])
-
-    def body(state, inp):
-        xq, dtq, ldq, Bq, Cq = inp                    # leading axis: nc
-        # ---- intra-chunk (quadratic / 'attention' form) ----
-        gts = jnp.einsum("bqgn,bsgn->bgqs", Cq, Bq)   # [B,G,Qt,Qs]
-        diff = ldq[:, :, None] - ldq[:, None]         # [B,Qt,Qs,G,Hg]
-        decay = jnp.exp(jnp.where(causal[None, :, :, None, None],
-                                  diff, -jnp.inf))
-        w = decay * jnp.moveaxis(gts, 1, 3)[..., None] \
-            * dtq[:, None]                            # [B,Qt,Qs,G,Hg]
-        y = jnp.einsum("bqsgh,bsghp->bqghp", w, xq)
-        # ---- contribution of carried state ----
-        y += jnp.einsum("bqgn,bghnp->bqghp", Cq, state) \
-            * jnp.exp(ldq)[..., None]
-        # ---- state update ----
-        total = ldq[:, -1]                            # [B,G,Hg]
-        wS = dtq * jnp.exp(total[:, None] - ldq)      # [B,Q,G,Hg]
-        s_c = jnp.einsum("bsgn,bsgh,bsghp->bghnp", Bq, wS, xq)
-        state = jnp.exp(total)[..., None, None] * state + s_c
-        return state, y
-
-    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xf, dtf, ldec, Bf, Cf))
-    final_state, ys = jax.lax.scan(body, h0, xs)
-    y = jnp.moveaxis(ys, 0, 1).reshape(b, lp, h, p)[:, :l]
-    return y.astype(x.dtype), final_state
+    hook = None
+    if ctx is not None:
+        def hook(state):
+            return shard(state, ("act_batch", None, "act_ssm_heads",
+                                 "act_ssm_state", None), ctx)
+    return kernel_ssd.ssd_scan_reference(x, dt, A, B_mat, C_mat, chunk,
+                                         initial_state=initial_state,
+                                         state_hook=hook)
 
 
 def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
@@ -194,8 +160,20 @@ def apply_mamba_block(params, x, cfg: SSMConfig, d_model: int,
     xh = xs.reshape(b, l, nh, cfg.head_dim)
     xh = shard(xh, ("act_batch", "act_seq_unsharded", "act_ssm_heads",
                     "act_ssm_state"), ctx)
-    y, state = ssd_scan(xh, dt, A, B_mat, C_mat, cfg.chunk_size,
-                        initial_state=initial_state, ctx=ctx)
+    pol = resolve_policy(policy=policy, default=LIBRARY_POLICY)
+    if pol.fuses():
+        # kernel-routed hot spot (same gate as the attention-path fusions
+        # in models/common.py): the whole chunk scan runs as one Pallas
+        # grid with the carried state in VMEM scratch — the per-chunk
+        # intermediates never stage through HBM.  Same (y, final_state)
+        # pair, so the decode cache seed is unchanged.
+        from repro.kernels import ops as kernel_ops
+        y, state = kernel_ops.fused_ssd_scan(
+            xh, dt, A, B_mat, C_mat, chunk=cfg.chunk_size,
+            initial_state=initial_state, policy=pol.kernel())
+    else:
+        y, state = ssd_scan(xh, dt, A, B_mat, C_mat, cfg.chunk_size,
+                            initial_state=initial_state, ctx=ctx)
     y = y + (params["D"].reshape(nh, 1)
              * xh.astype(jnp.float32)).astype(y.dtype)
     y = y.reshape(b, l, d_inner)

@@ -36,6 +36,13 @@ def rng():
 TOLERANCES = {
     None: dict(rtol=2e-4, atol=2e-4),
     "f32": dict(rtol=2e-4, atol=2e-4),
+    #: sequential f32-accumulator kernels (ISSUE 8: the fused SSD scan
+    #: carries its [N,P] state in VMEM across every chunk step): both
+    #: sides accumulate in f32, but the kernel's per-chunk dot order and
+    #: exp(decay) association differ from the jnp chunk path, and the
+    #: drift compounds with sequence length rather than staying at the
+    #: single-reduction bound above.
+    "f32_accum": dict(rtol=1e-3, atol=1e-3),
     "int8": dict(rtol=2e-2, atol=2e-2, atol_scale=2e-1),
 }
 

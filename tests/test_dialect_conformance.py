@@ -87,6 +87,15 @@ _KV_K = jnp.repeat(jax.random.normal(_k[1], (1, 2, 96, 32), jnp.float32),
 _KV_V = jnp.repeat(jax.random.normal(_k[2], (1, 2, 96, 32), jnp.float32),
                    2, axis=1)
 _WO = jax.random.normal(_k[9], (4 * 32, 80), jnp.float32)
+# ssd_scan (ISSUE 8): L=96 is deliberately NOT a multiple of the chunk
+# (64) — the matrix row exercises the padding path on every dialect
+_SSD_KEYS = jax.random.split(_k[5], 5)
+_SSD_X = jax.random.normal(_SSD_KEYS[0], (2, 96, 4, 16), jnp.float32)
+_SSD_DT = jax.nn.softplus(jax.random.normal(
+    _SSD_KEYS[1], (2, 96, 4), jnp.float32))
+_SSD_A = -jnp.exp(jax.random.normal(_SSD_KEYS[2], (4,), jnp.float32) * 0.5)
+_SSD_B = jax.random.normal(_SSD_KEYS[3], (2, 96, 2, 32), jnp.float32) * 0.3
+_SSD_C = jax.random.normal(_SSD_KEYS[4], (2, 96, 2, 32), jnp.float32) * 0.3
 
 CASES = {
     "gemm": lambda pol: ops.matmul(_A, _B, policy=pol),
@@ -115,14 +124,25 @@ CASES = {
         lambda pol: ops.fused_flash_attention_matmul(
             _Q, _KV_K, _KV_V, _WO, causal=True,
             policy=_with_precision(pol, "int8")),
+    # the fused chunked SSD scan (ISSUE 8): one Pallas grid, state
+    # carried in VMEM, vs the jnp chunk path as the library reference
+    "ssd_scan": lambda pol: ops.fused_ssd_scan(
+        _SSD_X, _SSD_DT, _SSD_A, _SSD_B, _SSD_C, chunk=64, policy=pol),
 }
+
+#: ops whose fused lowering is a *sequential* f32 accumulator rather
+#: than a single reduction — they earn the wider f32_accum bounds
+_TOL_BUCKETS = {"ssd_scan": "f32_accum"}
+
 
 #: each op's f32 reference case and tolerance bucket: a _q8 row is held
 #: to the int8 bounds against its BASE op's library output
 def _reference_case(op):
     if op.endswith("_q8"):
         return CASES[op[:-3]], "int8"
-    return CASES[op], "int8" if _ENV_PRECISION == "int8" else None
+    if _ENV_PRECISION == "int8":
+        return CASES[op], "int8"
+    return CASES[op], _TOL_BUCKETS.get(op)
 
 
 def test_every_registered_op_has_a_conformance_case():
@@ -297,6 +317,90 @@ class TestPagedDecodeConformance:
         assert half["blocks_visited"] < full["blocks_visited"]
 
 
+# ---------------------------------------------------------------------------
+# SSD scan corner shapes (ISSUE 8): the CASES row above covers the padding
+# path under auto-vs-library; these pin the carried-state seam — a non-None
+# initial_state must flow through the VMEM carry identically to the jnp
+# chunk path's scan carry, and the emitted final state must be the decode
+# seed on both paths.
+# ---------------------------------------------------------------------------
+
+_SSD_H0 = jax.random.normal(_SSD_KEYS[2], (2, 2, 2, 32, 16),
+                            jnp.float32) * 0.5
+
+
+@pytest.mark.parametrize("dialect_name", DIALECT_NAMES)
+class TestSSDScanConformance:
+    def _run(self, pol, **kw):
+        return ops.fused_ssd_scan(_SSD_X, _SSD_DT, _SSD_A, _SSD_B,
+                                  _SSD_C, policy=pol, **kw)
+
+    def _pair(self, dialect_name, **kw):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", LoweringFallbackWarning)
+            got = self._run(ExecutionPolicy(mode="auto",
+                                            dialect=dialect_name), **kw)
+            want = self._run(ExecutionPolicy(mode=IsaMode.LIBRARY.value,
+                                             dialect=dialect_name), **kw)
+        return got, want
+
+    def test_initial_state_carries_through_vmem(self, dialect_name):
+        """Prefill continuation: a non-None initial_state [B,G,Hg,N,P]
+        seeds the VMEM state scratch and must produce the same (y,
+        final_state) as the jnp scan carry — the chunked-prefill resume
+        path on every dialect."""
+        got, want = self._pair(dialect_name, initial_state=_SSD_H0,
+                               chunk=64)
+        for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_allclose(
+                np.asarray(g), np.asarray(w),
+                **tolerance_for("f32_accum", ref=w))
+
+    def test_final_state_is_f32_decode_seed(self, dialect_name):
+        """The emitted state is the decode cache seed: f32, shaped
+        [B,G,Hg,N,P], regardless of the activation dtype."""
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", LoweringFallbackWarning)
+            _, state = self._run(ExecutionPolicy(mode="auto",
+                                                 dialect=dialect_name),
+                                 chunk=64)
+        assert state.dtype == jnp.float32
+        assert state.shape == (2, 2, 2, 32, 16)
+
+    def test_chunk_multiple_seq_matches_library(self, dialect_name):
+        """The complement of the ragged CASES row: an exactly
+        chunk-multiple sequence (no padding lane anywhere) still agrees
+        with the library reference."""
+        lx = _SSD_X[:, :64]
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", LoweringFallbackWarning)
+            got = ops.fused_ssd_scan(
+                lx, _SSD_DT[:, :64], _SSD_A, _SSD_B[:, :64],
+                _SSD_C[:, :64], chunk=32,
+                policy=ExecutionPolicy(mode="auto", dialect=dialect_name))
+            want = ops.fused_ssd_scan(
+                lx, _SSD_DT[:, :64], _SSD_A, _SSD_B[:, :64],
+                _SSD_C[:, :64], chunk=32,
+                policy=ExecutionPolicy(mode=IsaMode.LIBRARY.value,
+                                       dialect=dialect_name))
+        for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_allclose(
+                np.asarray(g), np.asarray(w),
+                **tolerance_for("f32_accum", ref=w))
+
+    def test_auto_never_shuffles_on_no_shuffle_dialect(self, dialect_name):
+        """The §VII.C seam: the decay prefix scan's cross-lane stage must
+        resolve to the scratchpad ladder (not LANE_SHUFFLE) wherever the
+        dialect lacks warp shuffles."""
+        pol = ExecutionPolicy(mode="auto", dialect=dialect_name)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", LoweringFallbackWarning)
+            low = REGISTRY.select("ssd_scan", pol,
+                                  shape=ops.PROBE_SHAPES["ssd_scan"])
+        if not get_dialect(dialect_name).has_lane_shuffle:
+            assert low.mode is not IsaMode.ABSTRACT_SHUFFLE
+
+
 class TestPagePoolInvariants:
     """ISSUE 6 satellite: prefix-sharing refcount invariants — a page is
     freed only at refcount 0, and the copy-on-write discipline (fresh
@@ -381,6 +485,8 @@ def _fused_shape(op, rows, d, n, seq):
         return dict(rows=rows, d=d, f=n)
     if op == "flash_attention_matmul":
         return dict(b=1, h=4, sq=seq, skv=seq, d=64, n=n, causal=True)
+    if op == "ssd_scan":
+        return dict(b=1, seq=seq, h=4, p=64, g=1, n=n)
     raise ValueError(op)
 
 
