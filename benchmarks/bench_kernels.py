@@ -70,6 +70,7 @@ def _cases(quick: bool):
         m = k = n = 256
         b_dec, b_att, s_att = 8, 4, 256
         s_ssd, s_ssd2, p_ssd, p_ssd2, n_ssd, n_ssd2 = 256, 128, 32, 16, 32, 32
+        b_ssdd, p_ssdd, n_ssdd = 8, 32, 32
         warmup, iters = 1, 3
     else:
         n_red, rows_rms, d_rms = 1 << 21, 1024, 1024
@@ -84,6 +85,9 @@ def _cases(quick: bool):
         # the two canonical ssd tuning buckets (core/tuning.py): a long
         # prefill bucket and a short one that fits in a single chunk
         s_ssd, s_ssd2, p_ssd, p_ssd2, n_ssd, n_ssd2 = 1024, 256, 64, 64, 128, 64
+        # the canonical ssd_decode tuning bucket: a full serve batch of
+        # [N,P] states ticking one token (core/tuning.py ssd_decode rows)
+        b_ssdd, p_ssdd, n_ssdd = 16, 64, 128
         warmup, iters = 2, 5
 
     n_proj = d_rms                       # norm -> square projection
@@ -157,6 +161,20 @@ def _cases(quick: bool):
                               jnp.float32) * 0.3
     x_ssd2, dt_ssd2 = x_ssd[:, :s_ssd2, :, :p_ssd2], dt_ssd[:, :s_ssd2]
     b_ssd2, c_ssd2 = b_ssd[:, :s_ssd2, :, :n_ssd2], c_ssd[:, :s_ssd2, :, :n_ssd2]
+
+    # ssd decode stream (ISSUE 9): one serve-batch tick of the batched
+    # recurrence — b_ssdd resident [N,P] states, one token's x/dt/B/C
+    ksd = jax.random.split(jax.random.fold_in(KEY, 5), 5)
+    st_ssdd = jax.random.normal(
+        ksd[0], (b_ssdd, g_ssd, h_ssd // g_ssd, n_ssdd, p_ssdd),
+        jnp.float32) * 0.5
+    x_ssdd = jax.random.normal(ksd[1], (b_ssdd, h_ssd, p_ssdd), jnp.float32)
+    dt_ssdd = jax.nn.softplus(jax.random.normal(
+        ksd[2], (b_ssdd, h_ssd), jnp.float32))
+    a_ssdd = -jnp.exp(jax.random.normal(ksd[3], (h_ssd,), jnp.float32)
+                      * 0.5)
+    bc_ssdd = jax.random.normal(ksd[4], (2, b_ssdd, g_ssd, n_ssdd),
+                                jnp.float32) * 0.3
 
     p_q, p_s = quantize_weight(p_rms)
     wc_q, wc_s = quantize_weight(w_cat)
@@ -248,6 +266,11 @@ def _cases(quick: bool):
          lambda mode: ops.fused_ssd_scan(x_ssd2, dt_ssd2, a_ssd, b_ssd2,
                                          c_ssd2, mode=mode),
          dict(b=1, seq=s_ssd2, h=h_ssd, p=p_ssd2, g=g_ssd, n=n_ssd2)),
+        ("ssd_decode", "decode",
+         lambda mode: ops.fused_ssd_decode(st_ssdd, x_ssdd, dt_ssdd,
+                                           a_ssdd, bc_ssdd[0], bc_ssdd[1],
+                                           mode=mode),
+         dict(b=b_ssdd, h=h_ssd, p=p_ssdd, g=g_ssd, n=n_ssdd)),
         # quantized decode rows (ISSUE 7): int8 weights dequantized in
         # VMEM — weight_stream_bytes must undercut the matching f32
         # decode row by >= 2x (compare() gates this); the paged row adds

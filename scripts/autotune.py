@@ -62,7 +62,7 @@ def build_runner(op: str, mode: str, shape: dict, dialect=None):
     from repro.core.registry import ExecutionPolicy
     pol = ExecutionPolicy(
         mode=mode, dialect=(dialect or TARGET).name)
-    ks = jax.random.split(KEY, 4)
+    ks = jax.random.split(KEY, 5)
     if op == "reduction":
         x = jax.random.normal(ks[0], (shape["n"],), jnp.float32)
         return lambda: ops.reduce_sum(x, policy=pol)
@@ -125,6 +125,20 @@ def build_runner(op: str, mode: str, shape: dict, dialect=None):
                                jnp.float32) * 0.3
         return lambda: ops.fused_ssd_scan(x, dt, a, bc[0], bc[1],
                                           policy=pol)
+    if op == "ssd_decode":
+        h, g = 4, 1
+        st = jax.random.normal(
+            ks[0], (shape["b"], g, h // g, shape["n"], shape["p"]),
+            jnp.float32) * 0.5
+        x = jax.random.normal(ks[1], (shape["b"], h, shape["p"]),
+                              jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(
+            ks[2], (shape["b"], h), jnp.float32))
+        a = -jnp.exp(jax.random.normal(ks[3], (h,), jnp.float32) * 0.5)
+        bc = jax.random.normal(ks[4], (2, shape["b"], g, shape["n"]),
+                               jnp.float32) * 0.3
+        return lambda: ops.fused_ssd_decode(st, x, dt, a, bc[0], bc[1],
+                                            policy=pol)
     raise ValueError(op)
 
 

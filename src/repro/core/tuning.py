@@ -101,6 +101,12 @@ def ssd_bucket(seq: int, p: int, n: int) -> str:
     return f"seq{next_pow2(seq)}:p{next_pow2(p)}:n{next_pow2(n)}"
 
 
+def ssd_decode_bucket(b: int, p: int, n: int) -> str:
+    """ssd_decode: serve-batch width plus the head/state widths that size
+    one slot's resident [N,P] state (head count only scales the grid)."""
+    return f"b{next_pow2(b)}:p{next_pow2(p)}:n{next_pow2(n)}"
+
+
 def parse_bucket(bucket: str) -> Dict[str, int]:
     """Inverse of the bucket formatters: field name -> representative
     (pow2 upper-edge) value.  The representative shape is what
@@ -319,6 +325,30 @@ def ssd_candidates(seq: int, p: int, n: int, dialect: Dialect = TARGET,
     return [params for *_rank, params in out]
 
 
+def ssd_decode_candidates(b: int, p: int, n: int, dialect: Dialect = TARGET,
+                          dtype=jnp.float32) -> List[Dict]:
+    """Legal batch tiles for the fused SSD decode recurrence.
+
+    One (batch-tile, head) program's working set: ``block_b`` slots' worth
+    of incoming state, updated state, x/y rows, B/C rows and dt scalars,
+    plus one [N,P] f32 tree-scratch slab.  Rank prefers fewer grid steps
+    along the batch axis (larger tiles), i.e. fewer program launches per
+    tick, with the doubled state residency as the occupancy limiter."""
+    itemsize = jnp.dtype(dtype).itemsize
+    del itemsize  # state/intermediates are f32 regardless of storage dtype
+    out = []
+    for bb in (1, 2, 4, 8):
+        working = bb * (2 * n * p + 2 * p + 2 * n + 2) * 4 + n * p * 4
+        if dialect.buffer_occupancy(working, 2) < 2:
+            continue
+        steps = -(-b // bb)
+        out.append((steps, -bb, {"block_b": bb}))
+    out.sort(key=lambda t: t[:2])
+    if not out:
+        return [{"block_b": 1}]                        # Eq. 1 floor plan
+    return [params for *_rank, params in out]
+
+
 # ---------------------------------------------------------------------------
 # Per-op tuning spaces: kernels register how their parameters are derived,
 # so table validation and the autotune CLI share one source of truth.
@@ -369,6 +399,8 @@ def candidates_for(op: str, bucket: str,
                                            rep["n"], dialect)
     if space.kind == "ssd":
         return ssd_candidates(rep["seq"], rep["p"], rep["n"], dialect)
+    if space.kind == "ssd_decode":
+        return ssd_decode_candidates(rep["b"], rep["p"], rep["n"], dialect)
     raise ValueError(f"unknown tuning space kind {space.kind!r}")
 
 
@@ -597,6 +629,10 @@ CANONICAL_SHAPES: Dict[str, List[Dict[str, int]]] = {
     # N=128) and a short-sequence shape whose smaller state width admits
     # a different chunk winner; matches the bench matrix's ssd rows
     "ssd_scan": [dict(seq=1024, p=64, n=128), dict(seq=256, p=64, n=64)],
+    # the batched decode recurrence (ISSUE 9): b is the serve-batch width,
+    # p/n the mamba2 head/state widths; the two rows match the bench
+    # matrix's full and quick ssd_decode sizings
+    "ssd_decode": [dict(b=16, p=64, n=128), dict(b=8, p=32, n=32)],
 }
 
 
@@ -624,6 +660,8 @@ def bucket_for(op: str, shape: Dict[str, int]) -> str:
                                        shape["d"], shape["n"])
     if kind == "ssd":
         return ssd_bucket(shape["seq"], shape["p"], shape["n"])
+    if kind == "ssd_decode":
+        return ssd_decode_bucket(shape["b"], shape["p"], shape["n"])
     raise ValueError(kind)
 
 

@@ -1650,4 +1650,4 @@ FUSED_OPS = FUSED_OPS + QUANT_OPS
 # of import order (kernels/ssd.py depends only on repro.core — no cycle).
 from repro.kernels import ssd as _ssd  # noqa: E402,F401
 
-FUSED_OPS = FUSED_OPS + ("ssd_scan",)
+FUSED_OPS = FUSED_OPS + ("ssd_scan", "ssd_decode")

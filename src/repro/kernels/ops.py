@@ -66,6 +66,8 @@ PROBE_SHAPES = {
     "rmsnorm_swiglu_q8": dict(rows=1024, d=1024, f=1024),
     # the fused chunked SSD scan (ISSUE 8): mamba2-default head geometry
     "ssd_scan": dict(b=1, seq=1024, h=8, p=64, g=1, n=128),
+    # the batched decode recurrence (ISSUE 9): one serve-batch tick
+    "ssd_decode": dict(b=8, h=8, p=64, g=1, n=128),
 }
 
 
@@ -319,6 +321,28 @@ def fused_ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array,
                      interpret=interpret)
 
 
+def fused_ssd_decode(state: jax.Array, x_t: jax.Array, dt_t: jax.Array,
+                     A: jax.Array, B_t: jax.Array, C_t: jax.Array, *,
+                     block_b: Optional[int] = None, mode=None,
+                     policy: Optional[ExecutionPolicy] = None,
+                     interpret: Optional[bool] = None):
+    """One SSD decode tick (`models/ssd.py::ssd_decode_step`) in one kernel.
+
+    Batches the one-token recurrence ``h <- exp(dt*A)*h + dt*B(x)x`` and
+    the ``y = C*h`` readout across the serve batch with each slot's [N,P]
+    state resident in VMEM for the tick; the state-sized ``dt*B(x)x``
+    update tensor the unfused einsum trio materializes never stages
+    through HBM.  Declared fallbacks: shuffle -> scratch-tree C*h reduce,
+    native -> the unfused jnp einsum trio.  Returns the same
+    ``(state, y)`` pair as the reference."""
+    pol, interpret = _resolve(mode, policy, interpret)
+    b, g, hg, n, p = state.shape
+    low = REGISTRY.select("ssd_decode", pol, shape=dict(
+        b=b, h=g * hg, p=p, g=g, n=n, block_b=block_b))
+    return _dispatch(low, pol, state, x_t, dt_t, A, B_t, C_t,
+                     block_b=block_b, interpret=interpret)
+
+
 STRUCTURAL_COSTS = {
     "gemm": _gemm.structural_cost,
     "reduction": _reduction.structural_cost,
@@ -334,6 +358,7 @@ STRUCTURAL_COSTS = {
         _fused.structural_cost_flash_attention_matmul_q8,
     "rmsnorm_swiglu_q8": _fused.structural_cost_rmsnorm_swiglu_q8,
     "ssd_scan": _ssd.structural_cost_ssd_scan,
+    "ssd_decode": _ssd.structural_cost_ssd_decode,
 }
 
 #: Pallas-variant contracts per op, in portability order (registry view;

@@ -30,6 +30,17 @@ The §VII.C mode distinction lives in the within-chunk decay prefix scan
 - ``library``         — the jnp chunk path (`ssd_scan_reference`), which
                         is also the registered fallback for ``native``
                         on foreign dialects.
+
+``ssd_decode`` (ISSUE 9) is the decode-side twin: ONE Pallas kernel
+batching the one-token recurrence (``h ← exp(dt·A)·h + dt·B⊗x``,
+``y = C·h``) across the whole serve batch, grid ``(batch-tile, head)``
+with each program's ``[N, P]`` state slice resident in VMEM for the
+tick.  The jnp einsum trio (the library row, ``ssd_decode_reference``)
+round-trips the ``[B,G,Hg,N,P]``-sized update tensor through HBM per
+layer per token; the fused kernel's stream is the operand/result IO
+alone.  The §VII.C mode split lives in the cross-lane ``C·h``
+contraction over N: abstract stages a scratch-tree reduce, shuffle runs
+the lane rotate tree, native issues one MXU dot.
 """
 from __future__ import annotations
 
@@ -44,12 +55,17 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import (IsaMode, KernelContract, Primitive, REGISTRY)
 from repro.core.pipeline import CompilerParams
-from repro.core.shuffle import LANES, lane_shuffle_up
+from repro.core.shuffle import (LANES, lane_shuffle_up, lane_tree_reduce,
+                                scratch_tree_reduce)
 from repro.core.tuning import (active_dialect, register_op_space,
-                               ssd_bucket, ssd_candidates, tuned_entry)
+                               ssd_bucket, ssd_candidates,
+                               ssd_decode_bucket, ssd_decode_candidates,
+                               tuned_entry)
 
 __all__ = ["fused_ssd_scan", "ssd_scan_reference", "resolve_chunk",
-           "structural_cost_ssd_scan"]
+           "structural_cost_ssd_scan", "fused_ssd_decode",
+           "ssd_decode_reference", "resolve_decode_block",
+           "structural_cost_ssd_decode"]
 
 
 # ---------------------------------------------------------------------------
@@ -129,6 +145,26 @@ def ssd_scan_reference(x, dt, A, B_mat, C_mat, chunk: int,
     return y.astype(x.dtype), final_state
 
 
+def ssd_decode_reference(state, x_t, dt_t, A, B_t, C_t):
+    """One-token recurrence, jnp end to end (the unfused einsum trio).
+
+    state: [B,G,Hg,N,P] (any float dtype; carried in f32)
+    x_t:   [B,H,P]; dt_t: [B,H]; A: [H]; B_t/C_t: [B,G,N].
+    Returns ``(new_state f32 [B,G,Hg,N,P], y [B,H,P] in x_t's dtype)`` —
+    the registry's library row for ``ssd_decode`` and the math
+    ``models/ssd.py::ssd_decode_step`` delegates to.
+    """
+    b, g, hg, n, p = state.shape
+    xf = x_t.astype(jnp.float32).reshape(b, g, hg, p)
+    dtf = dt_t.astype(jnp.float32).reshape(b, g, hg)
+    da = jnp.exp(dtf * A.astype(jnp.float32).reshape(g, hg))  # [B,G,Hg]
+    upd = jnp.einsum("bgn,bgh,bghp->bghnp", B_t.astype(jnp.float32),
+                     dtf, xf)
+    state = da[..., None, None] * state.astype(jnp.float32) + upd
+    y = jnp.einsum("bgn,bghnp->bghp", C_t.astype(jnp.float32), state)
+    return state, y.reshape(b, g * hg, p).astype(x_t.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Chunk resolution: explicit wins, then the tuned table, then the ranked
 # candidate grid's structural winner (one source of truth with autotune).
@@ -147,6 +183,20 @@ def resolve_chunk(mode: str, seq: int, p: int, n: int,
         return max(1, min(int(entry["chunk"]), seq))
     cands = ssd_candidates(seq, p, n, active_dialect(plan_dialect))
     return max(1, min(int(cands[0]["chunk"]), seq))
+
+
+def resolve_decode_block(mode: str, b: int, p: int, n: int,
+                         block_b: Optional[int] = None,
+                         plan_dialect: Optional[str] = None,
+                         op: str = "ssd_decode") -> int:
+    """The effective decode batch tile: never wider than the batch."""
+    if block_b is not None:
+        return max(1, min(int(block_b), b))
+    entry = tuned_entry(op, mode, ssd_decode_bucket(b, p, n), plan_dialect)
+    if entry and "block_b" in entry:
+        return max(1, min(int(entry["block_b"]), b))
+    cands = ssd_decode_candidates(b, p, n, active_dialect(plan_dialect))
+    return max(1, min(int(cands[0]["block_b"]), b))
 
 
 # ---------------------------------------------------------------------------
@@ -323,13 +373,148 @@ def fused_ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array,
 
 
 def _ssd_scan_library(x, dt, A, B_mat, C_mat, initial_state=None, *,
-                      chunk=None, interpret=None, plan_dialect=None):
-    """jnp chunk-path reference (the unfused six-dot row of Table V)."""
+                      chunk=None, interpret=None, plan_dialect=None,
+                      tuning_op: str = "ssd_scan"):
+    """jnp chunk-path reference (the unfused six-dot row of Table V).
+
+    ``tuning_op`` threads through to :func:`resolve_chunk` exactly like
+    ``fused_ssd_scan``'s static argname does (ISSUE 9 bug fix: the call
+    used to drop ``op=``, so with a second ssd op space in the table a
+    library fallback would resolve its chunk from the wrong slice).
+    """
     del interpret
     q = resolve_chunk("library", x.shape[1], x.shape[3], B_mat.shape[3],
-                      chunk, plan_dialect)
+                      chunk, plan_dialect, op=tuning_op)
     return ssd_scan_reference(x, dt, A, B_mat, C_mat, q,
                               initial_state=initial_state)
+
+
+# ---------------------------------------------------------------------------
+# The decode kernel: one-token recurrence batched across the serve batch
+# ---------------------------------------------------------------------------
+
+
+def _ssd_decode_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref,
+                       y_ref, hf_ref, red_ref, *, bb: int, n: int, p: int,
+                       mode: str):
+    """One (batch-tile, head) program: ``bb`` slots' [N,P] states updated
+    in VMEM, then the cross-lane ``C·h`` contraction per §VII.C budget."""
+    x = x_ref[:, 0].astype(jnp.float32)               # [bb, P]
+    dt = dt_ref[...].astype(jnp.float32)              # [bb, 1]
+    a = a_ref[0, 0].astype(jnp.float32)               # scalar (negative)
+    Bv = b_ref[:, 0].astype(jnp.float32)              # [bb, N]
+    Cv = c_ref[:, 0].astype(jnp.float32)              # [bb, N]
+    h0 = h0_ref[:, 0].astype(jnp.float32)             # [bb, N, P]
+
+    # the recurrence: decay + rank-1 update, all register/VMEM arithmetic
+    da = jnp.exp(dt * a)                              # [bb, 1]
+    state = da[..., None] * h0 \
+        + (dt * Bv)[..., None] * x[:, None, :]        # [bb, N, P]
+    hf_ref[:, 0] = state
+
+    # cross-lane stage: y[p] = sum_n C[n] * state[n, p], per slot
+    if mode == "native":
+        y = jax.lax.dot_general(Cv, state, (((1,), (1,)), ((0,), (0,))),
+                                preferred_element_type=jnp.float32)
+    else:
+        u = Cv[..., None] * state                     # [bb, N, P]
+        rows = []
+        for i in range(bb):                           # static unroll
+            if mode == "abstract+shuffle":
+                # N in lanes: log2(N) rotate tree, zero scratch traffic
+                red = lane_tree_reduce(u[i].T, axis=-1)
+                rows.append(red[:, :1].T)             # [1, P]
+            else:
+                # abstract: halving stages through the VMEM scratch ref,
+                # program order playing the workgroup barrier
+                rows.append(scratch_tree_reduce(u[i], red_ref, axis=0))
+        y = jnp.concatenate(rows, axis=0)             # [bb, P]
+    y_ref[:, 0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_b", "mode", "interpret", "plan_dialect", "tuning_op"))
+def fused_ssd_decode(state: jax.Array, x_t: jax.Array, dt_t: jax.Array,
+                     A: jax.Array, B_t: jax.Array, C_t: jax.Array, *,
+                     block_b: Optional[int] = None, mode: str = "native",
+                     interpret: bool = True,
+                     plan_dialect: Optional[str] = None,
+                     tuning_op: str = "ssd_decode"):
+    """The batched one-token SSD recurrence as one Pallas kernel.
+
+    Same signature contract as :func:`ssd_decode_reference`: returns the
+    identical ``(new_state f32 [B,G,Hg,N,P], y [B,H,P])`` pair, so the
+    serve tick's cache carry is unchanged.  Grid ``(batch-tile, head)``
+    with each program's ``[bb, N, P]`` state slice resident in VMEM for
+    the tick — the jnp path's ``[B,G,Hg,N,P]`` update tensor never
+    stages through HBM.  ``block_b`` ``None`` defers to the tuned table
+    (then the candidate grid) via :func:`resolve_decode_block`; explicit
+    values pin.  N must be a power of two for the non-native tree
+    reduces (every registered mamba2 state width is).
+    """
+    b, g, hg, n, p = state.shape
+    h = g * hg
+    bb = resolve_decode_block(mode, b, p, n, block_b, plan_dialect,
+                              op=tuning_op)
+    if mode == "library":
+        return ssd_decode_reference(state, x_t, dt_t, A, B_t, C_t)
+
+    h0h = state.astype(jnp.float32).reshape(b, h, n, p)
+    a2 = A.astype(jnp.float32).reshape(h, 1)
+    pad = (-b) % bb
+    if pad:
+        # zero dt/x/B kill the padded slots' update (their state rows are
+        # zeros and sliced off before return)
+        h0h = jnp.pad(h0h, ((0, pad),) + ((0, 0),) * 3)
+        x_t = jnp.pad(x_t, ((0, pad), (0, 0), (0, 0)))
+        dt_t = jnp.pad(dt_t, ((0, pad), (0, 0)))
+        B_t = jnp.pad(B_t, ((0, pad), (0, 0), (0, 0)))
+        C_t = jnp.pad(C_t, ((0, pad), (0, 0), (0, 0)))
+    bp = b + pad
+
+    grid = (bp // bb, h)
+    params = None
+    if mode == "native":
+        params = CompilerParams(dimension_semantics=(
+            "parallel", "parallel"))
+
+    y, hf = pl.pallas_call(
+        functools.partial(_ssd_decode_kernel, bb=bb, n=n, p=p, mode=mode),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, 1, p), lambda bi, hh: (bi, hh, 0)),
+            pl.BlockSpec((bb, 1), lambda bi, hh: (bi, hh)),
+            pl.BlockSpec((1, 1), lambda bi, hh: (hh, 0)),
+            pl.BlockSpec((bb, 1, n),
+                         lambda bi, hh, g_=hg: (bi, hh // g_, 0)),
+            pl.BlockSpec((bb, 1, n),
+                         lambda bi, hh, g_=hg: (bi, hh // g_, 0)),
+            pl.BlockSpec((bb, 1, n, p), lambda bi, hh: (bi, hh, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, 1, p), lambda bi, hh: (bi, hh, 0)),
+            pl.BlockSpec((bb, 1, n, p), lambda bi, hh: (bi, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, h, p), x_t.dtype),
+            jax.ShapeDtypeStruct((bp, h, n, p), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n, p) if mode == "abstract" else (1, 8),
+                       jnp.float32),                  # tree-reduce stage
+        ],
+        compiler_params=params,
+        interpret=interpret,
+        name=f"uisa_ssd_decode_{mode.replace('+', '_')}",
+    )(x_t, dt_t, a2, B_t, C_t, h0h)
+    return hf[:b].reshape(b, g, hg, n, p), y[:b]
+
+
+def _ssd_decode_library(state, x_t, dt_t, A, B_t, C_t, *, block_b=None,
+                        interpret=None, plan_dialect=None):
+    """jnp einsum-trio reference — the per-layer state round trip row."""
+    del block_b, interpret, plan_dialect
+    return ssd_decode_reference(state, x_t, dt_t, A, B_t, C_t)
 
 
 # ---------------------------------------------------------------------------
@@ -429,6 +614,80 @@ def structural_cost_ssd_scan(b: int, seq: int, h: int, p: int, g: int,
     }
 
 
+def structural_cost_ssd_decode(b: int, h: int, p: int, g: int, n: int,
+                               mode: str,
+                               block_b: Optional[int] = None,
+                               dtype=jnp.float32,
+                               plan_dialect: Optional[str] = None) -> dict:
+    """Fused decode-tick traffic vs the unfused einsum trio's round trip.
+
+    ``hbm_bytes_unfused_pair`` is what the jnp recurrence stages per
+    layer per token: the operand/result stream (the state itself must
+    round-trip HBM once per tick either way — it lives in the decode
+    cache between ticks) **plus** the intermediates the separate einsums
+    materialize — the ``[B,G,Hg,N,P]`` update tensor ``dt·B⊗x`` (a full
+    state-sized HBM round trip, the §VII.C tail-latency tax ISSUE 9
+    removes) and the ``[B,G,Hg]`` decay row.  The fused kernel keeps
+    both in VMEM, so its ``hbm_bytes`` is the operand/result stream
+    alone; the identity ``hbm_bytes == hbm_bytes_unfused_pair -
+    hbm_bytes_saved`` is validated by scripts/validate_contracts.py.
+
+    The scratch columns account only the cross-lane ``C·h`` contraction
+    (the §VII.C mechanism): a log2(N) tree per slot, staged through VMEM
+    in abstract mode and through lane rotations in shuffle mode.
+    """
+    bb = resolve_decode_block(mode, b, p, n, block_b, plan_dialect)
+    itemsize = jnp.dtype(dtype).itemsize
+    f32 = 4
+    # fused operand/result stream (read x/dt/A/B/C + the cached state,
+    # write y + the updated state — the cache round trip both paths pay)
+    io = (b * h * p * itemsize                        # x_t read
+          + b * h * itemsize                          # dt read
+          + h * f32                                   # A
+          + 2 * b * g * n * itemsize                  # B_t + C_t reads
+          + b * h * n * p * f32                       # state read (cache)
+          + b * h * n * p * f32                       # state write (cache)
+          + b * h * p * itemsize)                     # y write
+    # intermediates the unfused einsum trio materializes per layer/token
+    inter = (b * h * n * p * f32                      # dt·B⊗x update tensor
+             + b * h * f32)                           # exp(dt·A) decay row
+    pair = io + 2 * inter                             # write + read back
+    saved = 0 if mode == "library" else 2 * inter
+    flops = b * h * (2 * n * p                        # decay scale + add
+                     + 2 * n * p                      # rank-1 update
+                     + 2 * n * p)                     # C·h contraction
+    stages = _scan_stages(n)
+    blocks = -(-b // bb) * h
+    if mode == "abstract":
+        round_trips = bb * stages
+        # per tree: stage k reads two (n >> k, P) slices and writes one
+        per_tree = p * sum(3 * (n >> k) * f32
+                           for k in range(1, stages + 1))
+        scratch_bytes = blocks * bb * per_tree
+        shuffles = 0
+    elif mode == "abstract+shuffle":
+        round_trips = 0
+        scratch_bytes = 0
+        shuffles = bb * stages
+    else:                                             # native / library
+        round_trips = 0
+        scratch_bytes = 0
+        shuffles = 0
+    return {
+        "hbm_bytes": pair - saved,
+        "hbm_bytes_unfused_pair": pair,
+        "hbm_bytes_saved": saved,
+        "flops": flops,
+        "block_b": bb,
+        "blocks_visited": blocks,
+        "state_bytes_resident": bb * n * p * f32,     # the VMEM residency
+        "scratch_round_trips_per_block": round_trips,
+        "scratch_bytes_total": scratch_bytes,
+        "lane_shuffles_per_block": shuffles,
+        "fused_epilogue": mode != "library",
+    }
+
+
 # ---------------------------------------------------------------------------
 # Contracts + registration (the full IsaMode matrix, six dialects)
 # ---------------------------------------------------------------------------
@@ -471,3 +730,37 @@ REGISTRY.declare_fallback(
     "ssd_scan", IsaMode.NATIVE, IsaMode.LIBRARY,
     reason="fused native chunk scan is target-pinned; the declared escape "
            "is the unfused jnp chunk path")
+
+_SSDD_ABSTRACT = KernelContract(
+    kernel="ssd_decode", mode=IsaMode.ABSTRACT,
+    primitives=_SSD_ABSTRACT.primitives)
+_SSDD_SHUFFLE = KernelContract(
+    kernel="ssd_decode", mode=IsaMode.ABSTRACT_SHUFFLE,
+    primitives=_SSD_ABSTRACT.primitives | {Primitive.LANE_SHUFFLE})
+_SSDD_NATIVE = KernelContract(
+    kernel="ssd_decode", mode=IsaMode.NATIVE,
+    primitives=frozenset(Primitive),
+    native_features=frozenset({"fused_epilogue", "mxu_aligned_tiles",
+                               "dimension_semantics", "multi_buffering"}))
+
+register_op_space("ssd_decode", "ssd_decode")
+
+for _mode, _contract in (("abstract", _SSDD_ABSTRACT),
+                         ("abstract+shuffle", _SSDD_SHUFFLE),
+                         ("native", _SSDD_NATIVE)):
+    REGISTRY.register("ssd_decode", _mode,
+                      functools.partial(fused_ssd_decode, mode=_mode),
+                      contract=_contract,
+                      cost=functools.partial(structural_cost_ssd_decode,
+                                             mode=_mode))
+REGISTRY.register("ssd_decode", IsaMode.LIBRARY, _ssd_decode_library,
+                  cost=functools.partial(structural_cost_ssd_decode,
+                                         mode="library"))
+REGISTRY.declare_fallback(
+    "ssd_decode", IsaMode.ABSTRACT_SHUFFLE, IsaMode.ABSTRACT,
+    reason="no lane shuffle: the C·h contraction reduces through the VMEM "
+           "scratch tree instead (§VII.C)")
+REGISTRY.declare_fallback(
+    "ssd_decode", IsaMode.NATIVE, IsaMode.LIBRARY,
+    reason="batched native decode recurrence is target-pinned; the declared "
+           "escape is the unfused jnp einsum trio")

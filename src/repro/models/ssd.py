@@ -73,13 +73,21 @@ def init_mamba_block(key, d_model: int, cfg: SSMConfig, dtype):
 
 
 def _causal_conv(x, w, b):
-    """Depthwise causal conv. x: [B,L,C]; w: [W,C]; b: [C]."""
+    """Depthwise causal conv. x: [B,L,C]; w: [W,C]; b: [C].
+
+    Returns f32: the silu that always follows must run in f32 on both the
+    prefill and decode paths (decode already did; prefill used to cast to
+    the storage dtype *before* the silu, so the same token picked up
+    numerically different activations per path — the ISSUE 9 precision
+    drift).  The caller applies the one cast back to storage dtype after
+    the activation.
+    """
     width, c = w.shape
     out = jax.lax.conv_general_dilated(
         x.astype(jnp.float32), w[:, None, :].astype(jnp.float32),
         window_strides=(1,), padding=[(width - 1, 0)],
         dimension_numbers=("NHC", "HIO", "NHC"), feature_group_count=c)
-    return (out + b.astype(jnp.float32)).astype(x.dtype)
+    return out + b.astype(jnp.float32)
 
 
 def ssd_scan(x, dt, A, B_mat, C_mat, chunk: int,
@@ -112,19 +120,13 @@ def ssd_scan(x, dt, A, B_mat, C_mat, chunk: int,
 
 
 def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
-    """One-token recurrence.
+    """One-token recurrence — the unfused jnp einsum trio.
 
     state: [B,G,Hg,N,P]; x_t: [B,H,P]; dt_t: [B,H]; B_t/C_t: [B,G,N].
+    The math lives in ``kernels/ssd.py::ssd_decode_reference`` (also the
+    lowering registry's library row for ``ssd_decode``).
     """
-    b, g, hg, n, p = state.shape
-    xf = x_t.astype(jnp.float32).reshape(b, g, hg, p)
-    dtf = dt_t.astype(jnp.float32).reshape(b, g, hg)
-    da = jnp.exp(dtf * A.reshape(g, hg))              # [B,G,Hg]
-    upd = jnp.einsum("bgn,bgh,bghp->bghnp", B_t.astype(jnp.float32),
-                     dtf, xf)
-    state = da[..., None, None] * state + upd
-    y = jnp.einsum("bgn,bghnp->bghp", C_t.astype(jnp.float32), state)
-    return state, y.reshape(b, g * hg, p).astype(x_t.dtype)
+    return kernel_ssd.ssd_decode_reference(state, x_t, dt_t, A, B_t, C_t)
 
 
 def _split_proj(z_xbc_dt, d_inner: int, gn2: int, nh: int):
@@ -147,7 +149,8 @@ def apply_mamba_block(params, x, cfg: SSMConfig, d_model: int,
 
     proj = jnp.einsum("bld,de->ble", x, params["in_proj"].astype(x.dtype))
     z, xbc, dt_raw = _split_proj(proj, d_inner, gn2, nh)
-    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"], params["conv_b"]))
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"], params["conv_b"])
+                      ).astype(x.dtype)                # silu in f32, one cast
     xs = xbc[..., :d_inner]
     B_mat = xbc[..., d_inner:d_inner + gn2 // 2].reshape(
         b, l, cfg.n_groups, cfg.state_dim)
@@ -228,7 +231,18 @@ def mamba_decode_step(params, x_t, cfg: SSMConfig, d_model: int,
     A = -jnp.exp(params["A_log"])
 
     xh = xs.reshape(b, nh, cfg.head_dim)
-    state, y = ssd_decode_step(state, xh, dt, A, B_t, C_t)
+    pol = resolve_policy(policy=policy, default=LIBRARY_POLICY)
+    if pol.fuses():
+        # kernel-routed hot spot (same gate as the prefill chunk scan
+        # above): the batched recurrence runs as one Pallas grid with each
+        # slot's [N,P] state resident in VMEM for the tick — the
+        # state-sized dt·B⊗x update tensor never stages through HBM, so
+        # the engine's compiled tick stays one program.
+        from repro.kernels import ops as kernel_ops
+        state, y = kernel_ops.fused_ssd_decode(
+            state, xh, dt, A, B_t, C_t, policy=pol.kernel())
+    else:
+        state, y = ssd_decode_step(state, xh, dt, A, B_t, C_t)
     y = y + (params["D"].reshape(nh, 1)
              * xh.astype(jnp.float32)).astype(y.dtype)
     y = y.reshape(b, d_inner)

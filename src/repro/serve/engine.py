@@ -173,6 +173,10 @@ class Request:
     slot: Optional[int] = None
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # admission verdict: the request's page reservation can never fit the
+    # pool (reserve > num_pages), so it is marked done without a slot
+    # instead of livelocking the run() loop (ISSUE 9)
+    rejected: bool = False
 
 
 class BatchedEngine:
@@ -279,7 +283,16 @@ class BatchedEngine:
         if self._paged:
             self._reap_done_pages()    # page budget current before admitting
         staged = []                    # (req, slot, first_token_device)
+        consumed = 0                   # prefix of reqs taken (staged+rejected)
         for req in reqs:
+            if self._paged and self._page_reserve(req) > self.num_pages:
+                # the reservation exceeds the pool's *total* — no amount
+                # of draining ever admits this request; reject it here so
+                # run() never spins on it (the ISSUE 9 livelock)
+                req.rejected = True
+                req.done = True
+                consumed += 1
+                continue
             slot = self._free_slot()
             if slot is None:
                 break
@@ -299,8 +312,9 @@ class BatchedEngine:
                 self._write_slot(slot, cache1, len(req.prompt))
             staged.append((req, slot,
                            jnp.argmax(logits[0]).astype(jnp.int32)))
+            consumed += 1
         if not staged:
-            return 0
+            return consumed
         idx = jnp.asarray([s for _, s, _ in staged], jnp.int32)
         firsts_dev = jnp.stack([t for _, _, t in staged])
         budgets = jnp.asarray(
@@ -316,7 +330,7 @@ class BatchedEngine:
         self.last_tokens = self.last_tokens.at[idx].set(firsts_dev)
         self.live = self.live.at[idx].set(jnp.asarray(alive))
         self.remaining = self.remaining.at[idx].set(budgets)
-        return len(staged)
+        return consumed
 
     def _write_slot(self, slot: int, cache1, prompt_len: int):
         """Copy a batch-1 prefill cache into batch slot ``slot``."""
@@ -360,6 +374,16 @@ class BatchedEngine:
             self.cache["block_tables"] = \
                 self.cache["block_tables"].at[slot].set(self.num_pages)
 
+    def _page_reserve(self, req: Request) -> int:
+        """Pages ``req``'s ``prompt + max_new_tokens - 1`` frontier can
+        ever reach (the :meth:`_plan_pages` reservation size) — admission
+        rejects outright when this exceeds the pool's total."""
+        ps = self.cfg.page_size
+        total = min(len(req.prompt) + max(req.max_new_tokens, 1) - 1,
+                    self.cfg.max_seq_len)
+        total = max(total, len(req.prompt))
+        return -(-total // ps)
+
     def _plan_pages(self, req: Request):
         """Reserve the pages ``req`` can ever reach, sharing leading full
         prompt pages by refcount.  Returns ``(page_ids, n_shared)`` or
@@ -373,10 +397,7 @@ class BatchedEngine:
         ``reserve - 1`` pages: the tail page is always exclusively owned,
         which is what makes decode writes alias-free by construction."""
         ps = self.cfg.page_size
-        total = min(len(req.prompt) + max(req.max_new_tokens, 1) - 1,
-                    self.cfg.max_seq_len)
-        total = max(total, len(req.prompt))
-        reserve = -(-total // ps)
+        reserve = self._page_reserve(req)
         shared: List[int] = []
         hashes = (PagePool.prefix_hashes(req.prompt, ps)[:reserve - 1]
                   if self.cfg.prefix_sharing else [])
@@ -456,7 +477,9 @@ class BatchedEngine:
         # slot count + pages actually reached by live frontiers.  A tiny
         # device vector appended to history — harvested by sync(), so the
         # tick stays transfer-free.
-        frontier = jnp.where(live, cache["pos"] // self.cfg.page_size + 1,
+        # ceil, not floor+1: a frontier sitting exactly on a page boundary
+        # (pos == k·ps) has written k pages, not k+1 (ISSUE 9 off-by-one)
+        frontier = jnp.where(live, -(-cache["pos"] // self.cfg.page_size),
                              0)
         stats = jnp.stack([jnp.sum(live.astype(jnp.int32)),
                            jnp.sum(frontier).astype(jnp.int32)])
@@ -520,6 +543,7 @@ class BatchedEngine:
         pending = list(requests)
         admitted: List[Request] = []
         while self.tick_count < max_ticks:
+            n = 0
             if pending:
                 n = self.admit(pending)       # syncs + reaps done slots
                 admitted.extend(pending[:n])
@@ -528,6 +552,12 @@ class BatchedEngine:
                 self.sync()
             active = [r for r in self.slots if r is not None and not r.done]
             if not pending and not active:
+                break
+            if pending and not active and n == 0:
+                # nothing running and nothing admissible: ticking cannot
+                # free capacity, so spinning to max_ticks would livelock.
+                # (Rejection above consumes never-admittable requests;
+                # this guards the residual stuck-admission case.)
                 break
             if pending:
                 # full house: tick once, then re-check for freed slots

@@ -128,6 +128,14 @@ CASES = {
     # carried in VMEM, vs the jnp chunk path as the library reference
     "ssd_scan": lambda pol: ops.fused_ssd_scan(
         _SSD_X, _SSD_DT, _SSD_A, _SSD_B, _SSD_C, chunk=64, policy=pol),
+    # the batched decode recurrence (ISSUE 9): one serve-batch tick (the
+    # [:, 0] token slices of the scan operands against the _SSD_H0 state)
+    # vs the jnp einsum trio as the library reference; b=2 deliberately
+    # does not divide the larger block_b candidates — the matrix row
+    # exercises the batch-padding path on every dialect
+    "ssd_decode": lambda pol: ops.fused_ssd_decode(
+        _SSD_H0, _SSD_X[:, 0], _SSD_DT[:, 0], _SSD_A, _SSD_B[:, 0],
+        _SSD_C[:, 0], policy=pol),
 }
 
 #: ops whose fused lowering is a *sequential* f32 accumulator rather
@@ -401,6 +409,58 @@ class TestSSDScanConformance:
             assert low.mode is not IsaMode.ABSTRACT_SHUFFLE
 
 
+@pytest.mark.parametrize("dialect_name", DIALECT_NAMES)
+class TestSSDDecodeConformance:
+    """ISSUE 9: the batched decode recurrence's corner shapes — the CASES
+    row covers auto-vs-library at b=2; these pin the state seam and the
+    §VII.C mode split of the C·h contraction."""
+
+    def _run(self, pol, **kw):
+        return ops.fused_ssd_decode(
+            _SSD_H0, _SSD_X[:, 0], _SSD_DT[:, 0], _SSD_A, _SSD_B[:, 0],
+            _SSD_C[:, 0], policy=pol, **kw)
+
+    def test_updated_state_is_f32_decode_cache(self, dialect_name):
+        """The emitted state re-enters the decode cache next tick: f32,
+        shaped [B,G,Hg,N,P], regardless of the activation dtype — on
+        every dialect's auto winner."""
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", LoweringFallbackWarning)
+            state, y = self._run(ExecutionPolicy(mode="auto",
+                                                 dialect=dialect_name))
+        assert state.dtype == jnp.float32
+        assert state.shape == _SSD_H0.shape
+        assert y.shape == _SSD_X[:, 0].shape
+
+    def test_explicit_block_b_matches_library(self, dialect_name):
+        """A block_b that does NOT divide the batch (3 over b=2 caps to
+        2; 1 runs one slot per program) still agrees with the jnp trio —
+        the batch-padding lanes must contribute nothing."""
+        for bb in (1, 3):
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", LoweringFallbackWarning)
+                got = self._run(ExecutionPolicy(mode="auto",
+                                                dialect=dialect_name),
+                                block_b=bb)
+                want = self._run(ExecutionPolicy(
+                    mode=IsaMode.LIBRARY.value, dialect=dialect_name))
+            for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+                np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                           **tolerance_for(None, ref=w))
+
+    def test_auto_never_shuffles_on_no_shuffle_dialect(self, dialect_name):
+        """The §VII.C seam: the C·h cross-lane contraction must resolve
+        to the scratchpad ladder (not LANE_SHUFFLE) wherever the dialect
+        lacks warp shuffles."""
+        pol = ExecutionPolicy(mode="auto", dialect=dialect_name)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", LoweringFallbackWarning)
+            low = REGISTRY.select("ssd_decode", pol,
+                                  shape=ops.PROBE_SHAPES["ssd_decode"])
+        if not get_dialect(dialect_name).has_lane_shuffle:
+            assert low.mode is not IsaMode.ABSTRACT_SHUFFLE
+
+
 class TestPagePoolInvariants:
     """ISSUE 6 satellite: prefix-sharing refcount invariants — a page is
     freed only at refcount 0, and the copy-on-write discipline (fresh
@@ -487,6 +547,8 @@ def _fused_shape(op, rows, d, n, seq):
         return dict(b=1, h=4, sq=seq, skv=seq, d=64, n=n, causal=True)
     if op == "ssd_scan":
         return dict(b=1, seq=seq, h=4, p=64, g=1, n=n)
+    if op == "ssd_decode":
+        return dict(b=8, h=4, p=64, g=1, n=n)
     raise ValueError(op)
 
 

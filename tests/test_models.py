@@ -156,6 +156,58 @@ class TestSSD:
                                    rtol=1e-4, atol=1e-4)
         np.testing.assert_allclose(s2, s_full, rtol=1e-4, atol=1e-4)
 
+    def test_conv_activation_prefill_matches_decode_path(self):
+        """ISSUE 9 precision-drift regression: prefill used to cast the
+        conv output to the storage dtype BEFORE the silu while decode
+        applied silu in f32 then cast — under bf16 storage the same token
+        got numerically different activations per path.  Both paths must
+        now silu in f32 with one cast, so the prefill activation of the
+        last token equals the decode-path activation of that token far
+        inside bf16 rounding (the pre-fix drift was ~bf16 eps)."""
+        width, c, l = 4, 8, 10
+        ks = jax.random.split(KEY, 3)
+        xw = jax.random.normal(ks[0], (1, l, c)).astype(jnp.bfloat16)
+        w = (jax.random.normal(ks[1], (width, c)) * 0.5
+             ).astype(jnp.bfloat16)
+        bias = (jax.random.normal(ks[2], (c,)) * 0.1).astype(jnp.bfloat16)
+        prefill = jax.nn.silu(
+            ssd._causal_conv(xw, w, bias)).astype(xw.dtype)
+        # the decode path for the final token: tap window einsum in f32
+        window = xw[:, l - width:, :]
+        conv = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          w.astype(jnp.float32)) \
+            + bias.astype(jnp.float32)
+        decode = jax.nn.silu(conv).astype(xw.dtype)
+        np.testing.assert_allclose(
+            np.asarray(prefill[:, -1], np.float32),
+            np.asarray(decode, np.float32), rtol=1e-5, atol=1e-6)
+
+    def test_library_chunk_resolver_threads_tuning_op(self, monkeypatch):
+        """ISSUE 9 regression: the library row used to drop ``op=`` when
+        resolving its chunk, so with a second ssd op space in the table a
+        library fallback would read the wrong slice.  The ``tuning_op``
+        argname must reach :func:`resolve_chunk` verbatim."""
+        from repro.kernels import ssd as kernel_ssd
+        seen = {}
+        real = kernel_ssd.resolve_chunk
+
+        def spy(mode, seq, p, n, chunk=None, plan_dialect=None,
+                op="ssd_scan"):
+            seen["op"] = op
+            return real(mode, seq, p, n, chunk, plan_dialect, op=op)
+
+        monkeypatch.setattr(kernel_ssd, "resolve_chunk", spy)
+        b, l, h, p, g, n = 1, 8, 2, 4, 1, 4
+        ks = jax.random.split(KEY, 5)
+        x = jax.random.normal(ks[0], (b, l, h, p), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h))) * 0.5
+        A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+        B_mat = jax.random.normal(ks[3], (b, l, g, n)) * 0.5
+        C_mat = jax.random.normal(ks[4], (b, l, g, n)) * 0.5
+        kernel_ssd._ssd_scan_library(x, dt, A, B_mat, C_mat,
+                                     tuning_op="ssd_scan_probe")
+        assert seen["op"] == "ssd_scan_probe"
+
 
 # ---------------------------------------------------------------------------
 # MoE routing invariants

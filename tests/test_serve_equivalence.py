@@ -513,3 +513,123 @@ class TestHostSyncFreeTick:
                 eng.step()
         eng.sync()
         assert len(eng.slots[0].generated) >= 11
+
+
+class TestSSDDecodeServe:
+    """ISSUE 9 tentpole: the mamba decode tick routed through the fused
+    ``ssd_decode`` kernel must emit token-for-token what the jnp einsum
+    trio emits, while the engine's tick stays ONE compiled program with
+    zero per-tick host transfers."""
+
+    def _cfg(self):
+        from repro.models.config import SSMConfig
+        return ModelConfig(name="t", family="ssm", num_layers=2,
+                           d_model=64, num_heads=0, num_kv_heads=0, d_ff=0,
+                           vocab_size=128, dtype="float32",
+                           ssm=SSMConfig(state_dim=16, head_dim=16,
+                                         chunk_size=8), subquadratic=True)
+
+    def _run(self, model, params, prompts, max_news):
+        eng = BatchedEngine(model, params, ServeConfig(
+            batch_slots=2, max_seq_len=CACHE_LEN, eos_id=-1))
+        done = eng.run([Request(rid=i, prompt=p, max_new_tokens=m)
+                        for i, (p, m) in enumerate(zip(prompts,
+                                                       max_news))])
+        return {r.rid: r.generated for r in done}, eng
+
+    def test_fused_decode_tick_matches_jnp_recurrence(self):
+        """Oversubscribed (4 requests, 2 slots, mid-stream admission):
+        the fused-ssd-decode engine and the library engine emit identical
+        token streams, and the fused tick compiles exactly once."""
+        cfg = self._cfg()
+        lib = build_model(cfg, ParallelConfig(remat="none"))
+        fused = build_model(cfg, ParallelConfig(remat="none",
+                                                fuse_epilogues=True))
+        assert fused.policy.fuses() and not lib.policy.fuses()
+        params = lib.init_params(KEY)
+        prompts = _prompts(cfg, 4)
+        max_news = [4, 7, 5, 6]
+        want, _ = self._run(lib, params, prompts, max_news)
+        got, eng = self._run(fused, params, prompts, max_news)
+        assert len(got) == 4
+        assert got == want
+        assert eng.trace_count == 1          # still ONE tick program
+
+    def test_fused_mamba_tick_is_transfer_free(self):
+        """The [B,G,Hg,N,P] state never leaves the device between ticks:
+        steps run under a disallow-all transfer guard with the fused
+        recurrence inside the one compiled program."""
+        cfg = self._cfg()
+        fused = build_model(cfg, ParallelConfig(remat="none",
+                                                fuse_epilogues=True))
+        params = fused.init_params(KEY)
+        eng = BatchedEngine(fused, params, ServeConfig(
+            batch_slots=2, max_seq_len=CACHE_LEN, eos_id=-1))
+        eng.add_request(Request(rid=0, prompt=[3, 5, 7],
+                                max_new_tokens=30))
+        eng.step()                       # compile outside the guard
+        with jax.transfer_guard("disallow"):
+            for _ in range(10):
+                eng.step()
+        eng.sync()
+        assert len(eng.slots[0].generated) >= 11
+        assert eng.trace_count == 1
+
+
+class TestAdmissionBugfixes:
+    """ISSUE 9 satellites: a never-admittable request is rejected instead
+    of livelocking run(), and frontier_pages uses ceil semantics at page
+    boundaries."""
+
+    PAGE = 8
+
+    def test_oversized_request_rejected_not_livelocked(
+            self, model_and_params):
+        """A request whose page reservation exceeds the pool's TOTAL is
+        marked done/rejected at admission; the rest of the stream is
+        served normally and run() returns promptly instead of burning
+        masked ticks to max_ticks."""
+        model, params, cfg = model_and_params
+        eng = BatchedEngine(model, params, ServeConfig(
+            batch_slots=2, max_seq_len=CACHE_LEN, eos_id=-1,
+            page_size=self.PAGE, num_pages=2))
+        # reserve = ceil((3 + 20 - 1) / 8) = 3 > 2 total pages
+        big = Request(rid=0, prompt=[3, 5, 7], max_new_tokens=20)
+        ok = Request(rid=1, prompt=[2, 4, 6], max_new_tokens=4)
+        done = eng.run([big, ok])
+        assert big.rejected and big.done and big.generated == []
+        assert big.slot is None              # never occupied a slot
+        assert not ok.rejected and ok.done
+        assert ok.generated == sequential_decode(model, params, ok.prompt,
+                                                 4, eos=-1)
+        assert {r.rid for r in done} == {0, 1}
+        assert eng.tick_count < 100          # bounded by real work
+
+    def test_all_unadmittable_returns_without_ticking(
+            self, model_and_params):
+        """The pure livelock case: nothing active, nothing admissible —
+        run() must return immediately, not spin to max_ticks."""
+        model, params, cfg = model_and_params
+        eng = BatchedEngine(model, params, ServeConfig(
+            batch_slots=2, max_seq_len=CACHE_LEN, eos_id=-1,
+            page_size=self.PAGE, num_pages=1))
+        big = Request(rid=0, prompt=[3, 5, 7], max_new_tokens=20)
+        done = eng.run([big])
+        assert big.rejected and big.done
+        assert eng.tick_count == 0
+        assert [r.rid for r in done] == [0]
+
+    def test_frontier_pages_exact_on_page_boundary(self, model_and_params):
+        """A frontier landing exactly on a page boundary (pos == k·ps)
+        has written k pages — the stats row must say k, not k+1 (the
+        pre-fix floor+1 overcount)."""
+        model, params, cfg = model_and_params
+        eng = BatchedEngine(model, params, ServeConfig(
+            batch_slots=1, max_seq_len=CACHE_LEN, eos_id=-1,
+            page_size=self.PAGE))
+        prompt = _prompts(cfg, 1)[0] * 3     # 9 tokens
+        eng.add_request(Request(rid=0, prompt=prompt[:7],
+                                max_new_tokens=12))
+        eng.step()                           # pos: 7 -> 8 == page_size
+        eng.sync()
+        assert eng.tick_stats[0]["frontier_pages"] == 1
