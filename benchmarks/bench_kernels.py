@@ -297,6 +297,30 @@ def _cases(quick: bool):
          dict(b=b_att, h=h, sq=1, skv=maxp * page, d=hd, n=n_wo,
               causal=False, block_kv=page, page_size=page,
               pages_occupied=pages_occ)),
+        # mesh-shaped TP rows (ISSUE 10): the same decode-regime work
+        # costed as its tensor-parallel twin over a 4-way model axis
+        # (tp=4 rides in the recorded shape).  The structural columns
+        # gain the collective_* keys (ring wire bytes, hops, the
+        # hbm-equivalent toll) and a 1/4 weight stream; compare() gates
+        # the declared term and the chip-side hbm cut against the
+        # replicated base recomputed at the same geometry
+        ("gemm_tp", "decode_tp",
+         lambda mode: ops.run_op("gemm_tp", x_dec, p_rms, mode=mode),
+         dict(m=b_dec, n=n_proj, k=d_rms, tp=4)),
+        ("rmsnorm_matmul_tp", "decode_tp",
+         lambda mode: ops.run_op("rmsnorm_matmul_tp", x_dec, w_rms,
+                                 p_rms, mode=mode),
+         dict(rows=b_dec, d=d_rms, n=n_proj, tp=4)),
+        ("rmsnorm_swiglu_tp", "decode_tp",
+         lambda mode: ops.run_op("rmsnorm_swiglu_tp", x_dec, w_rms,
+                                 w_cat, mode=mode),
+         dict(rows=b_dec, d=d_rms, f=f_ff, tp=4)),
+        ("flash_attention_matmul_tp", "decode_tp",
+         lambda mode: ops.run_op("flash_attention_matmul_tp", q_dec,
+                                 k_dec, v_dec, w_o, causal=False,
+                                 pos=pos_dec, block_kv=blk, mode=mode),
+         dict(b=b_att, h=h, sq=1, skv=s_att, d=hd, n=n_wo, causal=False,
+              block_kv=blk, tp=4)),
     ]
     return cases, warmup, iters
 
@@ -324,6 +348,8 @@ def run(quick: bool = False, out: str = "BENCH_kernels.json") -> dict:
                     "scratch_round_trips_per_block", 0),
                 "lane_shuffles": cost.get("lane_shuffles_per_block", 0),
                 "hbm_bytes": cost.get("hbm_bytes", 0),
+                # the ISSUE 10 interconnect column (0 on chip-local rows)
+                "collective_bytes": cost.get("collective_bytes", 0),
                 "structural": cost,
             })
             print(f"[bench_kernels] {kernel:16s} {case:6s} {mode:17s} "
@@ -349,10 +375,10 @@ def run(quick: bool = False, out: str = "BENCH_kernels.json") -> dict:
     print()
     print(fmt_table(
         ["kernel", "case", "mode", "median_ms", "scratch_bytes",
-         "round_trips", "shuffles"],
+         "round_trips", "shuffles", "coll_bytes"],
         [[r["kernel"], r["case"], r["mode"], f"{r['median_s'] * 1e3:.2f}",
           r["scratch_bytes"], r["scratch_round_trips"],
-          r["lane_shuffles"]] for r in rows]))
+          r["lane_shuffles"], r["collective_bytes"]] for r in rows]))
     print(f"\n[bench_kernels] wrote {out} "
           f"({len(rows)} kernel×mode rows)")
     return result
@@ -477,6 +503,31 @@ def compare(old: dict, new: dict, threshold: float = 1.5) -> list:
                     f"{kernel}[{mode}] ({case}): modeled {col} "
                     f"{st[col]} exceeds 0.5x the f32 row's "
                     f"{f32_st[col]} — int8 stream saving lost")
+    # collective-term gate (ISSUE 10): every mesh-shaped ``_tp`` row must
+    # declare its interconnect term (kind + positive wire/hbm-equivalent
+    # bytes at the recorded tp), and its chip-side hbm term must stay
+    # below the replicated base recomputed at the same geometry — losing
+    # either means "auto" can no longer see the TP-vs-replicated
+    # crossover the twins exist for
+    for (kernel, mode, case), nr in new_rows.items():
+        if not kernel.endswith("_tp"):
+            continue
+        st = nr["structural"]
+        if not st.get("collective") \
+                or st.get("collective_bytes", 0) <= 0 \
+                or st.get("collective_hbm_equiv_bytes", 0) <= 0:
+            failures.append(
+                f"{kernel}[{mode}] ({case}): mesh-shaped row declares "
+                f"no collective term at tp={nr['shape'].get('tp')}")
+            continue
+        base_shape = {k: v for k, v in nr["shape"].items() if k != "tp"}
+        base = dict(REGISTRY.structural_cost(kernel[:-3], mode,
+                                             **base_shape))
+        if nr["hbm_bytes"] >= base.get("hbm_bytes", 0):
+            failures.append(
+                f"{kernel}[{mode}] ({case}): sharded chip hbm "
+                f"{nr['hbm_bytes']} not below the replicated base's "
+                f"{base.get('hbm_bytes', 0)} — weight-shard saving lost")
     if deltas:
         print("\n[bench_kernels] timing deltas vs baseline:")
         print(fmt_table(["kernel", "case", "mode", "old_ms", "new_ms",

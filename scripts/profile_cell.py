@@ -1,13 +1,14 @@
-import os
 import sys
 
+from repro.launch.hostdev import ensure_host_devices
+
 # The 512-device host platform is for the collective profiler only; the
-# serve-stats mode runs a real tiny engine and must keep the default
+# serve-stats mode runs real tiny engines and must keep the default
 # single device.  (Either way this must precede jax import — see
-# launch/dryrun.py.)
+# launch/hostdev.py; REPRO_SIM_DEVICES overrides the count.)
 _SERVE_STATS = len(sys.argv) > 1 and sys.argv[1] == "serve-stats"
 if not _SERVE_STATS:
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    ensure_host_devices()
 
 """Per-op collective profile of one dry-run cell: the §Perf 'profiler'.
 
@@ -23,6 +24,14 @@ in sync(), zero per-tick transfers):
 
   PYTHONPATH=src python scripts/profile_cell.py serve-stats \\
       [page_size=8 num_pages=24 ticks=12]
+
+With ``--cells N`` (ISSUE 10) serve-stats runs the data-parallel
+CellRouter over N cells instead: per-group shared-prefix request waves
+are routed by affinity + least-loaded page budget, and the report shows
+per-cell occupancy/utilization/shared-prefix hits plus the fleet
+aggregate (one stacked harvest for all cells):
+
+  PYTHONPATH=src python scripts/profile_cell.py serve-stats --cells 3
 """
 import json
 from collections import defaultdict
@@ -30,6 +39,11 @@ from collections import defaultdict
 
 def parse_overrides(args):
     out = {}
+    args = list(args)
+    while "--cells" in args:                  # --cells N == cells=N
+        i = args.index("--cells")
+        out["cells"] = int(args[i + 1])
+        del args[i:i + 2]
     for a in args:
         k, v = a.split("=", 1)
         if v in ("True", "False"):
@@ -60,6 +74,9 @@ def serve_stats(overrides):
     scfg = ServeConfig(batch_slots=4, max_seq_len=64, eos_id=-1,
                        page_size=page_size,
                        num_pages=overrides.get("num_pages", 24))
+    if overrides.get("cells", 1) > 1:
+        serve_stats_fleet(model, params, scfg, overrides, ticks)
+        return
     eng = BatchedEngine(model, params, scfg)
 
     shared = list(range(2, 2 + 2 * page_size))   # common "system prompt"
@@ -82,6 +99,55 @@ def serve_stats(overrides):
               f"{row['pool_occupied_pages']:13d} "
               f"{row['pool_utilization']:9.2f} "
               f"{row['shared_prefix_hits']:11d}")
+
+
+def serve_stats_fleet(model, params, scfg, overrides, ticks):
+    """--cells N: the same tiny workload scaled out over a CellRouter.
+
+    One wave of 4 requests per cell, each wave sharing its own 2-page
+    prompt prefix: the wave's opener lands by least-loaded page budget,
+    the followers ride prefix affinity onto the opener's cell — so the
+    per-cell ``shared_hits`` column is the routing policy made visible.
+    Ticks run with zero per-tick transfers; ONE stacked harvest in
+    ``sync()`` drains the whole fleet."""
+    from repro.serve import Request
+    from repro.serve.router import make_cells
+
+    n_cells = overrides["cells"]
+    router = make_cells(model, params, scfg, n_cells)
+    ps = scfg.page_size
+    reqs, rid = [], 0
+    for g in range(n_cells):
+        shared = [2 + g * ps * 2 + i for i in range(2 * ps)]
+        for j in range(4):
+            reqs.append(Request(rid=rid, prompt=shared + [20 + j, 30 + g],
+                                max_new_tokens=6))
+            rid += 1
+    admitted = router.admit(reqs)
+    for _ in range(ticks):
+        router.step()
+    router.sync()
+
+    print(f"serve-stats cells={n_cells} page_size={ps} "
+          f"num_pages/cell={router.cells[0].num_pages} "
+          f"slots/cell={scfg.batch_slots} ticks={router.tick_count} "
+          f"admitted={admitted}/{len(reqs)}")
+    hdr = ("cell", "ticks", "live", "slots", "occ_pages", "pool_util",
+           "shared_hits")
+    print(f"{hdr[0]:>4s} {hdr[1]:>5s} {hdr[2]:>4s} {hdr[3]:>5s} "
+          f"{hdr[4]:>9s} {hdr[5]:>9s} {hdr[6]:>11s}")
+    rows = router.cell_stats()
+    for r in rows:
+        print(f"{r['cell']:4d} {r['ticks']:5d} {r['live_slots']:4d} "
+              f"{r['slots']:5d} {r['occupied_pages']:9d} "
+              f"{r['utilization']:9.2f} {r['shared_prefix_hits']:11d}")
+    occ = sum(r["occupied_pages"] for r in rows)
+    cap = sum(c.num_pages for c in router.cells)
+    hits = sum(r["shared_prefix_hits"] for r in rows)
+    live = sum(r["live_slots"] for r in rows)
+    print(f" agg {router.tick_count:5d} {live:4d} "
+          f"{sum(r['slots'] for r in rows):5d} {occ:9d} "
+          f"{occ / max(cap, 1):9.2f} {hits:11d}")
 
 
 def main():

@@ -17,7 +17,12 @@ contract-checked) and asserts, without needing a TPU:
 5. the committed tuning table (core/tuning_table.json) is in sync with
    the candidate grid *on every dialect present in the table*: stale
    ops/modes/dialects, params outside the legal Eq. 1 grid, a missing or
-   stale ``uisa-universal10`` entry — all fail the build.
+   stale ``uisa-universal10`` entry — all fail the build;
+6. every registered lowering with a TP collective twin declares its
+   interconnect term: at tp=4 the twin's cost carries the collective
+   keys with a positive wire/hbm-equivalent charge and a chip-side hbm
+   term no worse than the replicated base, and with no mesh it
+   collapses exactly onto the base (ISSUE 10).
 
   PYTHONPATH=src python scripts/validate_contracts.py
 """
@@ -67,6 +72,58 @@ def check_fused_costs() -> list:
             elif saved <= 0:
                 failures.append(f"{op}[{mode}]: no recorded round-trip "
                                 f"saving")
+    return failures
+
+
+def check_collective_terms() -> list:
+    """Gate 6 (ISSUE 10): every registered lowering with a TP collective
+    variant declares its collective term.  At tp=4 the twin's cost must
+    carry the collective keys (kind, group, wire bytes, hbm-equivalent),
+    keep its chip-side hbm term at or below the replicated base (the
+    sharded weight stream only subtracts), and preserve the fused-pair
+    identity; with no mesh the twin must collapse exactly onto its base
+    (zero collective term) so pinned modes never pay a phantom toll."""
+    from repro.core.registry import use_mesh_axes
+    failures = []
+    pairs = REGISTRY.collective_variants()
+    if not pairs:
+        failures.append("no collective variants registered (the TP "
+                        "twins in kernels/collective.py vanished)")
+    for base, twin in sorted(pairs.items()):
+        shape = PROBE_SHAPES.get(twin)
+        if shape is None:
+            failures.append(f"{twin}: no PROBE_SHAPES row")
+            continue
+        for mode in REGISTRY.modes(twin):
+            base_cost = REGISTRY.structural_cost(base, mode, **shape)
+            with use_mesh_axes({"model": 4}):
+                cost = REGISTRY.structural_cost(twin, mode, **shape)
+            if not cost.get("collective") \
+                    or cost.get("collective_bytes", 0) <= 0 \
+                    or cost.get("collective_hbm_equiv_bytes", 0) <= 0:
+                failures.append(f"{twin}[{mode}]: no declared collective "
+                                f"term at tp=4")
+                continue
+            if cost.get("collective_group") != 4 \
+                    or cost.get("tp_axis") != 4:
+                failures.append(f"{twin}[{mode}]: collective group/axis "
+                                f"disagree with the mesh (tp=4)")
+            if cost["hbm_bytes"] > base_cost["hbm_bytes"]:
+                failures.append(
+                    f"{twin}[{mode}]: sharded chip term "
+                    f"{cost['hbm_bytes']} exceeds the replicated base "
+                    f"{base_cost['hbm_bytes']}")
+            unfused = cost.get("hbm_bytes_unfused_pair")
+            saved = cost.get("hbm_bytes_saved")
+            if unfused is not None \
+                    and cost["hbm_bytes"] != unfused - saved:
+                failures.append(f"{twin}[{mode}]: fused-pair identity "
+                                f"broken under sharding")
+            flat = REGISTRY.structural_cost(twin, mode, **shape)
+            if flat.get("collective_bytes", 0) != 0 \
+                    or flat["hbm_bytes"] != base_cost["hbm_bytes"]:
+                failures.append(f"{twin}[{mode}]: tp=1 does not collapse "
+                                f"onto the base cost")
     return failures
 
 
@@ -126,6 +183,14 @@ def main() -> int:
             print(f"auto {dialect.name:18s} {op:16s} -> {low.mode.value}")
     # gate 4: fused-lowering round-trip accounting
     failures.extend(check_fused_costs())
+    # gate 6: TP collective variants declare their interconnect term
+    coll_failures = check_collective_terms()
+    if coll_failures:
+        failures.extend(coll_failures)
+    else:
+        pairs = REGISTRY.collective_variants()
+        print(f"\ncollective terms: {len(pairs)} TP twins "
+              f"({', '.join(sorted(pairs.values()))}) all declared")
     # gate 5: committed tuning table in sync with the candidate grid
     table_failures = tuning.check_table(REGISTRY)
     if table_failures:

@@ -18,6 +18,116 @@ from typing import Dict, Optional, Tuple
 # Register width w in bytes (paper Table I, "typically 4").
 REGISTER_WIDTH_BYTES = 4
 
+#: hbm-equivalent bytes assigned to a collective on a dialect with no
+#: multi-device interconnect (apple-g13 unified memory): large enough that
+#: a TP-fused lowering can never out-rank a replicated one, finite so the
+#: ranking tuple stays well-ordered and JSON-serializable.
+NO_INTERCONNECT_BYTES = 1 << 60
+
+
+@dataclasses.dataclass(frozen=True)
+class Interconnect:
+    """One vendor's chip-to-chip link profile (the below-the-chip-edge
+    half of the dialect: the paper's execution model is grounded in the
+    physical constraints of parallel computation — memory *and*
+    communication, §II).
+
+    ``link_bandwidth`` is bytes/s per link per direction (ICI for TPU,
+    PCIe/NVLink class for the GPU vendors); ``hop_latency_s`` is the α
+    term of the α-β model — per-hop launch + synchronization latency,
+    which is what makes large rings lose to replication even when the
+    per-byte term would break even."""
+
+    link_bandwidth: float          # bytes/s, per link per direction
+    hop_latency_s: float           # α: per-hop latency (seconds)
+    topology: str = "ring"
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveCost:
+    """Modeled cost of one collective under a dialect's interconnect.
+
+    ``wire_bytes`` follows the same ring formulas
+    ``roofline/analysis.py::parse_collectives`` applies to real HLO —
+    all-reduce ``2S(G-1)/G``, all-gather/reduce-scatter/all-to-all
+    ``S(G-1)/G``, permute ``S`` — so predicted-vs-modeled is an equality
+    check, not a re-derivation.  ``hbm_equiv_bytes`` converts the α-β
+    wire time into the registry's ranking currency (HBM bytes at the
+    dialect's HBM bandwidth):
+
+        t = wire/link_bw + hops·α
+        hbm_equiv = t · hbm_bw = wire·(hbm_bw/link_bw) + hops·α·hbm_bw
+
+    The α term grows linearly with the group while the sharding saving
+    saturates at (G-1)/G — that asymmetry is what gives "auto" a real
+    mesh-size crossover between TP-fused and replicated lowerings.
+    """
+
+    kind: str                      # all_reduce | all_gather | ...
+    payload_bytes: int             # S: logical tensor bytes at the boundary
+    group: int                     # G: devices participating
+    wire_bytes: int                # ring bytes actually moved per device
+    hops: int                      # ring steps (latency-bearing)
+    hbm_equiv_bytes: int           # ranking currency (see above)
+
+    def cost_keys(self) -> dict:
+        """The structural-cost columns a TP-variant cost dict carries."""
+        return {
+            "collective": self.kind,
+            "collective_group": self.group,
+            "collective_payload_bytes": self.payload_bytes,
+            "collective_bytes": self.wire_bytes,
+            "collective_hops": self.hops,
+            "collective_hbm_equiv_bytes": self.hbm_equiv_bytes,
+        }
+
+
+#: ring wire-byte factors, keyed like parse_collectives' op names
+_RING_WIRE = {
+    "all_reduce": lambda s, g: 2 * s * (g - 1) // g,
+    "all_gather": lambda s, g: s * (g - 1) // g,
+    "reduce_scatter": lambda s, g: s * (g - 1) // g,
+    "all_to_all": lambda s, g: s * (g - 1) // g,
+    "permute": lambda s, g: s,
+}
+
+_RING_HOPS = {
+    "all_reduce": lambda g: 2 * (g - 1),
+    "all_gather": lambda g: g - 1,
+    "reduce_scatter": lambda g: g - 1,
+    "all_to_all": lambda g: g - 1,
+    "permute": lambda g: 1,
+}
+
+
+def collective_cost(kind: str, payload_bytes: int, group: int,
+                    dialect: "Dialect") -> CollectiveCost:
+    """Model one collective's cost on ``dialect``'s interconnect.
+
+    ``group <= 1`` is the degenerate single-device case: every term is
+    zero and a TP twin's cost collapses onto its base — the property the
+    conformance matrix (which runs without a mesh) relies on."""
+    if kind not in _RING_WIRE:
+        raise KeyError(f"unknown collective kind {kind!r}; "
+                       f"known: {sorted(_RING_WIRE)}")
+    if group <= 1:
+        return CollectiveCost(kind=kind, payload_bytes=payload_bytes,
+                              group=max(group, 1), wire_bytes=0, hops=0,
+                              hbm_equiv_bytes=0)
+    wire = int(_RING_WIRE[kind](payload_bytes, group))
+    hops = int(_RING_HOPS[kind](group))
+    link = dialect.interconnect
+    if link is None:
+        return CollectiveCost(kind=kind, payload_bytes=payload_bytes,
+                              group=group, wire_bytes=wire, hops=hops,
+                              hbm_equiv_bytes=NO_INTERCONNECT_BYTES)
+    hbm_bw = dialect.hbm_bandwidth or TARGET.hbm_bandwidth
+    equiv = (wire * hbm_bw / link.link_bandwidth
+             + hops * link.hop_latency_s * hbm_bw)
+    return CollectiveCost(kind=kind, payload_bytes=payload_bytes,
+                          group=group, wire_bytes=wire, hops=hops,
+                          hbm_equiv_bytes=int(math.ceil(equiv)))
+
 
 @dataclasses.dataclass(frozen=True)
 class MatrixUnit:
@@ -63,6 +173,9 @@ class Dialect:
     has_lane_shuffle: bool = True         # the paper's 11th primitive
     hbm_bandwidth: Optional[float] = None  # bytes/s
     peak_flops_bf16: Optional[float] = None
+    #: chip-to-chip link profile (None = no multi-device interconnect:
+    #: collectives are modeled as never-profitable on this dialect)
+    interconnect: Optional[Interconnect] = None
     # TPU-only: VMEM plays the register-file role in the occupancy tradeoff
     # (DESIGN.md §2, primitive 3).
     notes: str = ""
@@ -151,6 +264,9 @@ NVIDIA_SM89 = Dialect(
     memory_levels=("reg", "shared", "L1", "L2", "DRAM"),
     divergence_mechanism="per-thread PC + predicates (hardware)",
     matrix_unit=MatrixUnit(tile=(16, 16, 16), dtypes=("f16", "bf16", "tf32", "i8")),
+    hbm_bandwidth=1008e9,                 # GDDR6X (AD102 class)
+    interconnect=Interconnect(link_bandwidth=32e9,   # PCIe 4.0 x16 (no
+                              hop_latency_s=3e-6),   # NVLink on Ada)
     notes="PTX virtual ISA; per-thread scalar semantics.",
 )
 
@@ -167,6 +283,9 @@ AMD_RDNA3 = Dialect(
     memory_levels=("reg", "LDS", "L0", "L1", "L2", "VRAM"),
     divergence_mechanism="EXEC mask (compiler-managed)",
     matrix_unit=MatrixUnit(tile=(16, 16, 16), dtypes=("f16", "bf16", "i8")),
+    hbm_bandwidth=960e9,                  # GDDR6 (Navi 31 class)
+    interconnect=Interconnect(link_bandwidth=32e9,   # PCIe 4.0 x16
+                              hop_latency_s=3e-6),
     notes="SALU/VALU split; compiler hoists uniform ops to scalar unit.",
 )
 
@@ -183,6 +302,9 @@ INTEL_XE_HPG = Dialect(
     memory_levels=("reg", "SLM", "L1", "L2", "DRAM"),
     divergence_mechanism="predicated SIMD (compiler-managed)",
     matrix_unit=MatrixUnit(tile=(8, 16, 16), dtypes=("f16", "bf16", "i8")),
+    hbm_bandwidth=560e9,                  # GDDR6 (DG2 class)
+    interconnect=Interconnect(link_bandwidth=32e9,   # PCIe 4.0 x16
+                              hop_latency_s=3e-6),
     notes="SIMD-register ISA; fixed-function via SEND messages.",
 )
 
@@ -199,8 +321,10 @@ APPLE_G13 = Dialect(
     memory_levels=("reg", "threadgroup", "L1", "L2", "L3", "DRAM"),
     divergence_mechanism="hardware execution stack in r0l",
     matrix_unit=None,  # absent capability (paper §VI): queryable as None
+    hbm_bandwidth=68e9,                   # unified LPDDR (M1 class)
+    interconnect=None,  # absent capability, same discipline as the
     notes="reverse-engineered (flagged confidence); unified memory.",
-)
+)  # missing matrix unit: queryable as None, never assumed
 
 # The framework's target dialect.  Same queryable schema, TPU semantics:
 #   - 'wave' = 128-lane vreg minor dimension (fetch amortization constraint)
@@ -226,6 +350,9 @@ TPU_V5E = Dialect(
     has_lane_shuffle=True,                # intra-vreg lane rotate/permute
     hbm_bandwidth=819e9,
     peak_flops_bf16=197e12,
+    # ICI: 50 GB/s per link per direction (launch/mesh.py::ICI_BW keeps
+    # the same constant for the roofline) with ~1 µs per ring hop
+    interconnect=Interconnect(link_bandwidth=50e9, hop_latency_s=1e-6),
     notes="systolic+VLIW; latency hidden by async DMA buffers, not waves.",
 )
 
@@ -249,6 +376,9 @@ UISA_UNIVERSAL10 = Dialect(
     matrix_unit=None,
     has_hw_atomics=False,
     has_lane_shuffle=False,
+    hbm_bandwidth=256e9,                  # conservative universal floor
+    interconnect=Interconnect(link_bandwidth=16e9,   # PCIe-class floor
+                              hop_latency_s=5e-6),   # every vendor meets
     notes="hypothetical minimum universal profile (paper §V, before the "
           "§VII.C shuffle finding promoted primitive 11 to mandatory)",
 )

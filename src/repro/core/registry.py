@@ -136,6 +136,48 @@ AUTO_POLICY = ExecutionPolicy(mode=AUTO)
 _policy_var: contextvars.ContextVar[Optional[ExecutionPolicy]] = \
     contextvars.ContextVar("uisa_execution_policy", default=None)
 
+#: ambient mesh axes installed by :func:`use_mesh_axes` — the axis-name ->
+#: size mapping the collective cost terms resolve their group size from
+_mesh_axes_var: contextvars.ContextVar[Optional[Mapping[str, int]]] = \
+    contextvars.ContextVar("uisa_mesh_axes", default=None)
+
+#: the tensor-parallel mesh axis the collective twins shard over
+TP_AXIS = "model"
+
+
+@contextlib.contextmanager
+def use_mesh_axes(axes: Mapping[str, int]):
+    """Install ``axes`` (axis name -> size) as the ambient mesh for the
+    dynamic extent.  This is the planner-side mirror of a ``jax.Mesh``
+    context: selection and cost modeling read axis sizes from here first,
+    so mesh-sensitive ranking can run without constructing devices."""
+    token = _mesh_axes_var.set(dict(axes))
+    try:
+        yield axes
+    finally:
+        _mesh_axes_var.reset(token)
+
+
+def ambient_mesh_axes() -> Dict[str, int]:
+    """The ambient mesh axis sizes: :func:`use_mesh_axes` first, else the
+    active ``jax.Mesh`` context (``with mesh:``), else empty."""
+    axes = _mesh_axes_var.get()
+    if axes is not None:
+        return dict(axes)
+    try:  # resolve from an active `with Mesh(...)` context, if any
+        from jax.interpreters import pxla
+        mesh = pxla.thread_resources.env.physical_mesh
+        if mesh is not None and not mesh.empty:
+            return dict(mesh.shape)
+    except Exception:
+        pass
+    return {}
+
+
+def tp_axis_size(axis: str = TP_AXIS) -> int:
+    """Size of the tensor-parallel axis in the ambient mesh (1 = no TP)."""
+    return int(ambient_mesh_axes().get(axis, 1))
+
 
 def current_policy() -> Optional[ExecutionPolicy]:
     """The ambient policy installed by :func:`use_policy`, if any."""
@@ -217,10 +259,15 @@ def cost_key(cost: Mapping, mode: IsaMode) -> Tuple:
     Scratch traffic is the §VII.C currency, round trips its latency proxy,
     HBM bytes the bandwidth term; the primitive-budget rank breaks ties in
     favor of the more portable variant (so abstract+shuffle beats native
-    when both model to zero scratch)."""
+    when both model to zero scratch).  Collective traffic (ISSUE 10) is
+    folded into the bandwidth term pre-converted to HBM-equivalent bytes
+    (wire bytes x hbm_bw/link_bw + hop latency x hbm_bw), so a TP-fused
+    variant's saved weight streams compete directly against the
+    all-reduce it pays."""
     return (cost.get("scratch_bytes_total", 0),
             cost.get("scratch_round_trips_per_block", 0),
-            cost.get("hbm_bytes", 0),
+            cost.get("hbm_bytes", 0)
+            + cost.get("collective_hbm_equiv_bytes", 0),
             _PORTABILITY[mode])
 
 
@@ -236,6 +283,10 @@ class LoweringRegistry:
         self._fallbacks: Dict[Tuple[str, IsaMode], Fallback] = {}
         #: (base op, precision) -> quantized op name (ISSUE 7)
         self._precision_variants: Dict[Tuple[str, str], str] = {}
+        #: base op -> TP twin op name (ISSUE 10): the sharded lowering
+        #: that pays a collective, competing under auto when the ambient
+        #: mesh carries a model axis
+        self._collective_variants: Dict[str, str] = {}
         self.fallback_events: "collections.deque[FallbackEvent]" = \
             collections.deque(maxlen=self.EVENT_LOG_MAXLEN)
 
@@ -318,6 +369,29 @@ class LoweringRegistry:
             return None
         return self._precision_variants.get((op, precision))
 
+    def register_collective_variant(self, base_op: str, tp_op: str) -> None:
+        """Declare that ``tp_op`` is the tensor-parallel twin of
+        ``base_op`` — a registered op whose structural cost carries a
+        ``collective_hbm_equiv_bytes`` term.  Under ``mode="auto"`` with a
+        model axis in the ambient mesh, the twin's legal variants join the
+        base op's candidate set, so replicated-vs-TP is decided by the
+        same cost ranking that decides everything else.  Both ops must
+        already be registered; every mode of the twin must declare its
+        collective term (validate_contracts.py gates this)."""
+        for name in (base_op, tp_op):
+            if name not in self._variants:
+                raise UnsupportedLowering(
+                    f"collective variant maps unknown op {name!r}")
+        self._collective_variants[base_op] = tp_op
+
+    def collective_variant(self, op: str) -> Optional[str]:
+        """The TP twin of ``op``, if declared."""
+        return self._collective_variants.get(op)
+
+    def collective_variants(self) -> Dict[str, str]:
+        """All declared base -> TP-twin pairs (drives the CI gate)."""
+        return dict(self._collective_variants)
+
     def unregister(self, op: str, mode=None) -> None:
         if mode is None:
             self._variants.pop(op, None)
@@ -326,6 +400,9 @@ class LoweringRegistry:
             for key in [k for k, v in self._precision_variants.items()
                         if k[0] == op or v == op]:
                 del self._precision_variants[key]
+            for key in [k for k, v in self._collective_variants.items()
+                        if k == op or v == op]:
+                del self._collective_variants[key]
         else:
             self._variants.get(op, {}).pop(IsaMode(mode), None)
 
@@ -410,6 +487,16 @@ class LoweringRegistry:
         candidates = [low for m, low in variants.items()
                       if m is not IsaMode.LIBRARY
                       and self.legal(op, m, dialect)]
+        # mesh-sensitive ranking (ISSUE 10): with a model axis in the
+        # ambient mesh, the declared TP twin's variants compete too — its
+        # cost trades sharded weight streams against the collective term,
+        # so the same shape picks TP-fused or replicated per mesh size
+        tp_op = self._collective_variants.get(op)
+        if tp_op is not None and tp_axis_size() > 1:
+            candidates += [low for m, low
+                           in self._variants.get(tp_op, {}).items()
+                           if m is not IsaMode.LIBRARY
+                           and self.legal(tp_op, m, dialect)]
         if candidates:
             shape = shape or {}
             return min(candidates,

@@ -1,0 +1,192 @@
+"""Tensor-parallel twin lowerings — the mesh-aware rows of the registry.
+
+ISSUE 10 extends the execution-policy cost model below the chip edge.
+Each fused projection op gets a ``_tp`` twin registered as its own op:
+same program structure (GSPMD owns the actual sharding — the twin rows
+change the *cost model*, not the kernel), but the structural cost prices
+the sharded execution:
+
+- the weight stream is divided across the tensor-parallel axis (each
+  device re-reads only its ``1/T`` slice of the projection weight), and
+- a :class:`repro.core.dialect.CollectiveCost` term is added — the
+  all-gather (column-parallel) or all-reduce (row-parallel) the sharded
+  projection pays, converted to HBM-equivalent bytes through the
+  dialect's interconnect profile so it competes in :func:`cost_key`
+  directly against the saved weight traffic.
+
+``REGISTRY.register_collective_variant`` wires each pair; under
+``mode="auto"`` with a model axis in the ambient mesh
+(:func:`repro.core.registry.use_mesh_axes` or an active ``jax.Mesh``),
+the twin's variants join the base op's candidate set and win exactly
+when ``saved weight bytes > collective HBM-equivalent bytes`` — small
+meshes with decode-shaped GEMMs pick TP-fused, large meshes (more hops,
+thinner shards) fall back to replicated.  Partitioning choices:
+
+- ``gemm_tp`` / ``rmsnorm_matmul_tp`` / ``rmsnorm_swiglu_tp``:
+  column-parallel — the ``[K, N]`` weight shards over ``N``, each device
+  produces an output column slice, one **all-gather** of the output.
+- ``flash_attention_matmul_tp``: row-parallel — heads (and the ``wo``
+  rows they feed) shard over the axis, each device holds a partial
+  ``[rows, N]`` sum, one **all-reduce** of the output.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax.numpy as jnp
+
+from repro.core import IsaMode, REGISTRY
+from repro.core.dialect import TARGET, collective_cost, get_dialect
+from repro.core.registry import tp_axis_size
+from repro.kernels import fused as _fused
+from repro.kernels import gemm as _gemm
+
+#: the tensor-parallel twins this module registers (base name + "_tp")
+TP_OPS = ("gemm_tp", "rmsnorm_matmul_tp", "rmsnorm_swiglu_tp",
+          "flash_attention_matmul_tp")
+
+
+def _resolve_tp(tp) -> int:
+    """Explicit ``tp=`` wins; None reads the ambient mesh's model axis."""
+    if tp is None:
+        tp = tp_axis_size()
+    return max(1, int(tp))
+
+
+def _apply_tp(cost: dict, *, kind: str, payload_bytes: int, tp: int,
+              ws_full: int, ws_shard: int,
+              plan_dialect: str | None) -> dict:
+    """Re-price a base cost dict for the sharded execution.
+
+    The weight-stream delta comes off ``hbm_bytes`` *and*
+    ``hbm_bytes_unfused_pair`` (both sides of the pair would shard the
+    same weight), preserving the ``hbm == pair - saved`` identity that
+    validate_contracts pins for the fused ops; the collective term lands
+    in the ``collective_*`` columns that :func:`cost_key` folds into the
+    bandwidth rank."""
+    delta = max(0, ws_full - ws_shard)
+    cost["hbm_bytes"] = cost["hbm_bytes"] - delta
+    if "hbm_bytes_unfused_pair" in cost:
+        cost["hbm_bytes_unfused_pair"] -= delta
+    if "weight_stream_bytes" in cost:
+        cost["weight_stream_bytes"] = ws_shard
+    dialect = TARGET if plan_dialect is None else get_dialect(plan_dialect)
+    cost.update(collective_cost(kind, payload_bytes, tp,
+                                dialect).cost_keys())
+    cost["tp_axis"] = tp
+    return cost
+
+
+def structural_cost_gemm_tp(m: int, n: int, k: int, mode: str,
+                            dtype=jnp.float32,
+                            plan_dialect: str | None = None,
+                            tp: int | None = None) -> dict:
+    """Column-parallel GEMM: ``[K, N]`` shards over N, all-gather of C."""
+    tp = _resolve_tp(tp)
+    cost = dict(_gemm.structural_cost(m=m, n=n, k=k, mode=mode,
+                                      dtype=dtype,
+                                      plan_dialect=plan_dialect))
+    itemsize = jnp.dtype(dtype).itemsize
+    ws_full, rereads = _fused._weight_stream(m, n, k, mode, dtype,
+                                             plan_dialect)
+    ws_shard = k * -(-n // tp) * itemsize * rereads
+    return _apply_tp(cost, kind="all_gather",
+                     payload_bytes=m * n * itemsize, tp=tp,
+                     ws_full=ws_full, ws_shard=ws_shard,
+                     plan_dialect=plan_dialect)
+
+
+def structural_cost_rmsnorm_matmul_tp(rows: int, d: int, n: int, mode: str,
+                                      dtype=jnp.float32,
+                                      plan_dialect: str | None = None,
+                                      tp: int | None = None) -> dict:
+    """Column-parallel fused norm+projection: all-gather of [rows, N]."""
+    tp = _resolve_tp(tp)
+    cost = dict(_fused.structural_cost_rmsnorm_matmul(
+        rows, d, n, mode, dtype=dtype, plan_dialect=plan_dialect))
+    itemsize = jnp.dtype(dtype).itemsize
+    _, rereads = _fused._weight_stream(rows, n, d, mode, dtype,
+                                       plan_dialect)
+    ws_shard = d * -(-n // tp) * itemsize * rereads
+    return _apply_tp(cost, kind="all_gather",
+                     payload_bytes=rows * n * itemsize, tp=tp,
+                     ws_full=cost["weight_stream_bytes"],
+                     ws_shard=ws_shard, plan_dialect=plan_dialect)
+
+
+def structural_cost_rmsnorm_swiglu_tp(rows: int, d: int, f: int, mode: str,
+                                      dtype=jnp.float32,
+                                      plan_dialect: str | None = None,
+                                      tp: int | None = None) -> dict:
+    """Column-parallel fused norm+SwiGLU: the ``[D, 2F]`` concat shards
+    over F (each device keeps matched wi/wg column slices, so the gate
+    stays local); all-gather of the gated ``[rows, F]`` output."""
+    tp = _resolve_tp(tp)
+    cost = dict(_fused.structural_cost_rmsnorm_swiglu(
+        rows, d, f, mode, dtype=dtype, plan_dialect=plan_dialect))
+    itemsize = jnp.dtype(dtype).itemsize
+    _, rereads = _fused._weight_stream(rows, 2 * f, d, mode, dtype,
+                                       plan_dialect)
+    ws_shard = d * -(-(2 * f) // tp) * itemsize * rereads
+    return _apply_tp(cost, kind="all_gather",
+                     payload_bytes=rows * f * itemsize, tp=tp,
+                     ws_full=cost["weight_stream_bytes"],
+                     ws_shard=ws_shard, plan_dialect=plan_dialect)
+
+
+def structural_cost_flash_attention_matmul_tp(
+        b: int, h: int, sq: int, skv: int, d: int, n: int, causal: bool,
+        mode: str, block_q=None, block_kv=None, dtype=jnp.float32,
+        plan_dialect: str | None = None, page_size: int | None = None,
+        pages_occupied: int | None = None,
+        tp: int | None = None) -> dict:
+    """Row-parallel fused attention+projection: heads (and the ``wo``
+    rows they feed) shard over the axis, all-reduce of the partial
+    ``[B·Sq, N]`` outputs.  Only the weight-stream shard is claimed (the
+    per-device kv stream also shrinks with heads, but that saving is not
+    pinned — same conservatism as the fused ops' ``hbm_bytes_saved``)."""
+    tp = _resolve_tp(tp)
+    cost = dict(_fused.structural_cost_flash_attention_matmul(
+        b, h, sq, skv, d, n, causal, mode, block_q=block_q,
+        block_kv=block_kv, dtype=dtype, plan_dialect=plan_dialect,
+        page_size=page_size, pages_occupied=pages_occupied))
+    itemsize = jnp.dtype(dtype).itemsize
+    _, rereads = _fused._weight_stream(b * sq, n, h * d, mode, dtype,
+                                       plan_dialect)
+    ws_shard = -(-(h * d) // tp) * n * itemsize * rereads
+    return _apply_tp(cost, kind="all_reduce",
+                     payload_bytes=b * sq * n * itemsize, tp=tp,
+                     ws_full=cost["weight_stream_bytes"],
+                     ws_shard=ws_shard, plan_dialect=plan_dialect)
+
+
+TP_COSTS = {
+    "gemm_tp": structural_cost_gemm_tp,
+    "rmsnorm_matmul_tp": structural_cost_rmsnorm_matmul_tp,
+    "rmsnorm_swiglu_tp": structural_cost_rmsnorm_swiglu_tp,
+    "flash_attention_matmul_tp": structural_cost_flash_attention_matmul_tp,
+}
+
+# --------------------------------------------------------------------------
+# Registration: each twin reuses the base lowering's impl (in this repo's
+# interpret/modeled setting GSPMD does the physical distribution — see the
+# subprocess mesh test) under a contract re-keyed to the twin name, with
+# the TP cost model above.  Fallback declarations mirror the base op's.
+# --------------------------------------------------------------------------
+
+for _twin, _cost_fn in TP_COSTS.items():
+    _base = _twin[:-len("_tp")]
+    for _mode_s in REGISTRY.modes(_base):
+        _mode = IsaMode(_mode_s)
+        _low = REGISTRY.variant(_base, _mode)
+        _contract = (None if _mode is IsaMode.LIBRARY else
+                     dataclasses.replace(_low.contract, kernel=_twin))
+        REGISTRY.register(_twin, _mode, _low.impl, contract=_contract,
+                          cost=functools.partial(_cost_fn, mode=_mode_s))
+    for _missing in IsaMode:
+        _fb = REGISTRY.fallback_for(_base, _missing)
+        if _fb is not None:
+            REGISTRY.declare_fallback(_twin, _fb.missing, _fb.to,
+                                      _fb.reason)
+    REGISTRY.register_collective_variant(_base, _twin)

@@ -33,6 +33,7 @@ from repro.core.registry import (DEFAULT_POLICY, ExecutionPolicy, REGISTRY,
 # importing the kernel modules installs their registry variants
 from repro.kernels import attention as _attention  # noqa: F401
 from repro.kernels import fused as _fused
+from repro.kernels import collective as _collective
 from repro.kernels import gemm as _gemm
 from repro.kernels import histogram as _histogram
 from repro.kernels import reduction as _reduction
@@ -68,6 +69,14 @@ PROBE_SHAPES = {
     "ssd_scan": dict(b=1, seq=1024, h=8, p=64, g=1, n=128),
     # the batched decode recurrence (ISSUE 9): one serve-batch tick
     "ssd_decode": dict(b=8, h=8, p=64, g=1, n=128),
+    # tensor-parallel twins (ISSUE 10): same geometry as their bases —
+    # the cost delta under probe is the sharded weight stream vs the
+    # collective term (zero at the ambient tp=1 these probes run at)
+    "gemm_tp": dict(m=1024, n=1024, k=1024),
+    "rmsnorm_matmul_tp": dict(rows=1024, d=1024, n=1024),
+    "rmsnorm_swiglu_tp": dict(rows=1024, d=1024, f=1024),
+    "flash_attention_matmul_tp": dict(b=1, h=4, sq=1024, skv=1024, d=64,
+                                      n=256, causal=True),
 }
 
 
@@ -106,6 +115,23 @@ def _dispatch(low, pol, *args, **kwargs):
     as before — nested registry dispatches still resolve against it."""
     with use_policy(pol):
         return low.impl(*args, plan_dialect=pol.dialect, **kwargs)
+
+
+def run_op(op: str, *args, mode=None,
+           policy: Optional[ExecutionPolicy] = None,
+           interpret: Optional[bool] = None,
+           shape: Optional[dict] = None, **kwargs):
+    """Generic dispatch by registered op name (no per-op shim needed).
+
+    ``shape`` feeds auto-selection's cost ranking (defaults to the op's
+    :data:`PROBE_SHAPES` row); remaining args/kwargs go to the selected
+    impl.  This is how the conformance suite and benchmarks run ops
+    without a dedicated wrapper — in particular the ``_tp`` twins, whose
+    selected impl *is* the base kernel (GSPMD owns physical sharding;
+    the twin rows change the cost model, not the program)."""
+    pol, interpret = _resolve(mode, policy, interpret)
+    low = REGISTRY.select(op, pol, shape=shape or PROBE_SHAPES.get(op))
+    return _dispatch(low, pol, *args, interpret=interpret, **kwargs)
 
 
 def matmul(a: jax.Array, b: jax.Array, *, mode=None,
@@ -359,6 +385,7 @@ STRUCTURAL_COSTS = {
     "rmsnorm_swiglu_q8": _fused.structural_cost_rmsnorm_swiglu_q8,
     "ssd_scan": _ssd.structural_cost_ssd_scan,
     "ssd_decode": _ssd.structural_cost_ssd_decode,
+    **_collective.TP_COSTS,
 }
 
 #: Pallas-variant contracts per op, in portability order (registry view;

@@ -98,7 +98,7 @@ def build_cell(arch: str, shape_name: str, mesh,
             f"{arch} × {shape_name}: inapplicable (full-attention arch; "
             f"long_500k needs sub-quadratic attention)")
     par = default_parallel(cfg, shape, mesh=mesh, **(par_overrides or {}))
-    ctx = make_ctx(mesh, par)
+    ctx = make_ctx(mesh, par, cfg)
     model = build_model(cfg, par, ctx)
     opt_cfg = opt_cfg or OptConfig(compression=par.grad_compression)
 
@@ -166,3 +166,23 @@ def build_cell(arch: str, shape_name: str, mesh,
                  donate_argnums=(2,))
     args = (param_specs, tokens_spec, cache_specs_tree)
     return Cell(arch, shape, cfg, par, ctx, model, fn, args, "decode")
+
+
+def build_serve_cells(arch: str, serve_cfg, n_cells: int = 1, *,
+                      mesh=None, reduced: bool = True,
+                      par_overrides: Optional[Dict] = None,
+                      seed: int = 0, policy=None):
+    """N data-parallel serving cells for ``arch`` behind one router.
+
+    Unlike :func:`build_cell` (ShapeDtypeStructs for AOT lowering), this
+    builds a *running* fleet: one param init whose device buffers every
+    cell shares, N ``BatchedEngine`` cells each sized by ``serve_cfg``
+    (so ``n_cells`` multiplies the fleet's slot and page capacity), one
+    :class:`~repro.serve.router.CellRouter` as the admission point."""
+    from repro.serve.router import make_cells
+    cfg = configs.get_reduced(arch) if reduced else configs.get_config(arch)
+    par = ParallelConfig(remat="none", **(par_overrides or {}))
+    ctx = make_ctx(mesh, par, cfg)
+    model = build_model(cfg, par, ctx)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    return make_cells(model, params, serve_cfg, n_cells, policy=policy)

@@ -1,9 +1,9 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# The two lines above MUST run before any other import: jax freezes the
+from repro.launch.hostdev import ensure_host_devices
+ensure_host_devices()
+# The two lines above MUST run before any jax import: jax freezes the
 # device count at first initialization, and the production-mesh dry-run
-# needs 512 placeholder host devices.  Only this entrypoint does this —
-# tests and benchmarks see the real single CPU device.
+# needs 512 placeholder host devices (REPRO_SIM_DEVICES overrides).
+# Only entrypoints do this — tests and benchmarks see the real device.
 
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 

@@ -1,0 +1,54 @@
+"""Simulated multi-device host platform — one place for the XLA_FLAGS hack.
+
+JAX freezes the device count at first initialization, so any entrypoint
+that wants N simulated CPU devices (the production-mesh dry-run, the
+collective profiler, the mesh-collective tests, router experiments) must
+set ``--xla_force_host_platform_device_count`` **before importing jax**.
+Three call sites used to each carry their own copy of that dance; they
+now all route through :func:`ensure_host_devices`, and the
+``REPRO_SIM_DEVICES`` env var overrides the requested count (``0``
+disables the flag entirely — the real single-device platform), so tests
+can spawn N simulated cells deterministically without editing scripts.
+
+This module deliberately imports nothing from jax.
+"""
+from __future__ import annotations
+
+import os
+
+#: env override: the simulated device count, "0" = leave XLA untouched
+ENV_VAR = "REPRO_SIM_DEVICES"
+
+#: the production dry-run's multi-pod placeholder count (2 x 16 x 16)
+DEFAULT_DEVICES = 512
+
+_FLAG = "--xla_force_host_platform_device_count"
+
+
+def sim_device_count(default: int = DEFAULT_DEVICES) -> int:
+    """The effective simulated device count: env override, else default."""
+    raw = os.environ.get(ENV_VAR)
+    if raw is None:
+        return default
+    try:
+        return max(0, int(raw))
+    except ValueError:
+        return default
+
+
+def ensure_host_devices(count: int | None = None) -> int:
+    """Install the forced host device count into ``XLA_FLAGS``.
+
+    Must run before the first jax import (jax snapshots the flag at
+    initialization); safe to call repeatedly — an existing forced count
+    in ``XLA_FLAGS`` is replaced, other flags are preserved.  Returns
+    the count installed (0 = nothing touched).
+    """
+    n = sim_device_count(DEFAULT_DEVICES if count is None else count)
+    if n <= 0:
+        return 0
+    flags = [f for f in os.environ.get("XLA_FLAGS", "").split()
+             if not f.startswith(_FLAG)]
+    flags.append(f"{_FLAG}={n}")
+    os.environ["XLA_FLAGS"] = " ".join(flags)
+    return n

@@ -31,10 +31,22 @@ def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
     return jax.make_mesh(shape, axes)
 
 
-def make_ctx(mesh: Optional[Mesh], par: ParallelConfig) -> ShardCtx:
+def make_ctx(mesh: Optional[Mesh], par: ParallelConfig,
+             cfg=None) -> ShardCtx:
+    """``cfg`` (a ModelConfig) gates the dedicated ``qkv_heads`` rule:
+    the persisted [wq|wk|wv] concat shards over the model axis only when
+    every segment's head count divides it — otherwise a shard boundary
+    would cut across the q/k/v seams (8 KV heads on a 16-way axis) and
+    the concat would stop being layout-neutral, so it replicates."""
+    qkv_ok = True
+    if cfg is not None and mesh is not None:
+        t = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+        hkv = cfg.num_kv_heads or cfg.num_heads
+        qkv_ok = (cfg.num_heads % t == 0 and hkv % t == 0)
     return ShardCtx(mesh=mesh, fsdp=par.fsdp,
                     seq_shard_acts=par.seq_shard_acts,
-                    cache_layout=par.cache_layout)
+                    cache_layout=par.cache_layout,
+                    qkv_heads_shardable=qkv_ok)
 
 
 # Hardware constants for the roofline (TPU v5e, per chip).

@@ -63,7 +63,7 @@ def main():
     dshape = tuple(int(x) for x in args.mesh.split("x"))
     n_dev = dshape[0] * dshape[1]
     mesh = make_mesh(dshape, ("data", "model")) if n_dev > 1 else None
-    ctx = make_ctx(mesh, par)
+    ctx = make_ctx(mesh, par, cfg)
     model = build_model(cfg, par, ctx)
 
     opt_cfg = OptConfig(lr=args.lr, total_steps=args.steps,

@@ -57,7 +57,7 @@ def init_attn(key, cfg: ModelConfig, dtype,
     specs = {"wo": ("q_heads", "embed")}
     if layout.attn_qkv:
         params["wqkv"] = jnp.concatenate([wq, wk, wv], axis=1)
-        specs["wqkv"] = ("embed", "q_heads")
+        specs["wqkv"] = ("embed", "qkv_heads")
     else:
         params.update(wq=wq, wk=wk, wv=wv)
         specs.update(wq=("embed", "q_heads"), wk=("embed", "kv_heads"),

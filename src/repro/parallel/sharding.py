@@ -22,7 +22,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 Axis = Union[str, Tuple[str, ...], None]
 
 
-def _rules(fsdp: bool, seq_shard_acts: bool, cache_layout: str):
+def _rules(fsdp: bool, seq_shard_acts: bool, cache_layout: str,
+           qkv_heads_shardable: bool = True):
     # cache_layout: how the decode KV cache maps onto the mesh —
     #   batch_heads  batch -> (pod,data), kv heads -> model
     #                (needs num_kv_heads divisible by the model axis)
@@ -56,6 +57,12 @@ def _rules(fsdp: bool, seq_shard_acts: bool, cache_layout: str):
         "vocab": "model",
         "q_heads": "model",
         "kv_heads": "model",
+        # the persisted [wq|wk|wv] concat (ISSUE 10, carried from PR 5):
+        # TP-shardable only when every segment's head count divides the
+        # model axis — otherwise a shard boundary would cut across the
+        # q/k/v seams and the concat would stop being layout-neutral
+        # against separately-sharded wq/wk/wv, so it replicates instead
+        "qkv_heads": "model" if qkv_heads_shardable else None,
         "heads_merged": "model",
         "head_dim": None,
         "mlp": "model",
@@ -82,9 +89,14 @@ class ShardCtx:
     fsdp: bool = True
     seq_shard_acts: bool = True
     cache_layout: str = "batch_heads"
+    #: whether the persisted [wq|wk|wv] concat may shard over the model
+    #: axis (launch/mesh.py::make_ctx computes this from the config:
+    #: num_heads AND num_kv_heads both divisible by the axis size)
+    qkv_heads_shardable: bool = True
 
     def spec(self, logical: Sequence[Optional[str]]) -> P:
-        rules = _rules(self.fsdp, self.seq_shard_acts, self.cache_layout)
+        rules = _rules(self.fsdp, self.seq_shard_acts, self.cache_layout,
+                       self.qkv_heads_shardable)
         axes = []
         used = set()
         for name in logical:

@@ -1,5 +1,7 @@
-"""Serving substrate: batched engine with continuous batching."""
+"""Serving substrate: batched engine + data-parallel cell router."""
 from repro.serve.engine import (BatchedEngine, PagePool, Request,
                                 ServeConfig)
+from repro.serve.router import CellRouter, make_cells
 
-__all__ = ["ServeConfig", "BatchedEngine", "Request", "PagePool"]
+__all__ = ["ServeConfig", "BatchedEngine", "Request", "PagePool",
+           "CellRouter", "make_cells"]

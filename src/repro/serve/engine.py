@@ -501,27 +501,41 @@ class BatchedEngine:
         self._history.append(nxt)
         self.tick_count += 1
 
-    def sync(self) -> None:
-        """Drain the device-side token history into the Request objects
-        with a single stacked device->host transfer (plus one more for
-        the paged per-tick stats vectors)."""
-        if not self._history:
-            return
-        hist = np.asarray(jnp.stack(self._history))   # [T, B], one transfer
-        self._history = []
-        for t in range(hist.shape[0]):
-            for slot, req in enumerate(self.slots):
-                if req is None or req.done:
-                    continue
-                tok = int(hist[t, slot])
-                req.generated.append(tok)
-                if tok == self.cfg.eos_id or \
-                        len(req.generated) >= req.max_new_tokens:
-                    req.done = True
+    def _pending_harvest(self) -> dict:
+        """The device half of :meth:`sync`: stack the token history (and
+        the paged per-tick stats vectors) into device arrays and clear
+        the buffers.  Nothing is transferred here — the caller fetches
+        the returned dict (this engine's own :meth:`sync`, or a
+        :class:`~repro.serve.router.CellRouter` stacking *every* cell's
+        pending harvest into one ``device_get``)."""
+        pending: dict = {}
+        if self._history:
+            pending["hist"] = jnp.stack(self._history)   # [T, B]
+            self._history = []
         if self._stats_history:
-            rows = np.asarray(jnp.stack(self._stats_history))  # [T, 2]
+            pending["stats"] = jnp.stack(self._stats_history)   # [T, 2]
+            pending["stats_base"] = self.tick_count \
+                - len(self._stats_history)
             self._stats_history = []
-            base = self.tick_count - rows.shape[0]
+        return pending
+
+    def _apply_harvest(self, harvest: dict) -> None:
+        """The host half of :meth:`sync`: replay a fetched harvest into
+        the Request objects and the tick_stats rows."""
+        hist = harvest.get("hist")
+        if hist is not None:
+            for t in range(hist.shape[0]):
+                for slot, req in enumerate(self.slots):
+                    if req is None or req.done:
+                        continue
+                    tok = int(hist[t, slot])
+                    req.generated.append(tok)
+                    if tok == self.cfg.eos_id or \
+                            len(req.generated) >= req.max_new_tokens:
+                        req.done = True
+        rows = harvest.get("stats")
+        if rows is not None:
+            base = int(harvest["stats_base"])
             for i in range(rows.shape[0]):
                 # device columns are per-tick; the pool columns are the
                 # host allocator's view at harvest time (admission-grain)
@@ -534,6 +548,14 @@ class BatchedEngine:
                         self.pool.occupied_pages / max(self.num_pages, 1),
                     "shared_prefix_hits": self.pool.shared_hits,
                 })
+
+    def sync(self) -> None:
+        """Drain the device-side token history into the Request objects
+        with a single stacked device->host transfer (the paged per-tick
+        stats vectors ride in the same fetch)."""
+        pending = self._pending_harvest()
+        if pending:
+            self._apply_harvest(jax.device_get(pending))
 
     def run(self, requests: List[Request],
             max_ticks: int = 10_000) -> List[Request]:

@@ -17,6 +17,19 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _bound_jit_memory_per_module():
+    """Drop XLA's compiled-executable caches once a module finishes.
+
+    The full suite compiles hundreds of distinct programs in one
+    process; letting every executable stay resident can segfault the
+    CPU backend's JIT late in the run.  Compiled programs are never
+    shared across test modules (each builds its own tiny models), so
+    clearing between modules costs nothing but the crash."""
+    yield
+    jax.clear_caches()
+
+
 #: Shared per-precision numeric tolerance policy (ISSUE 7): every suite
 #: that checks a lowering against the f32 library reference draws its
 #: bounds from this one table instead of ad-hoc per-test constants.

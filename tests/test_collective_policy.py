@@ -1,0 +1,197 @@
+"""Mesh-sensitive auto selection (ISSUE 10).
+
+Pins the tentpole acceptance criterion: the same op at the same shape
+selects a *different* lowering under two mesh configurations — TP-fused
+on a small ring (sharded weight streams beat the all-gather), replicated
+on a large one (more hops, thinner shards) — with both costs recomputed
+by hand from the dialect's interconnect profile, not by trusting the
+cost functions under test.
+"""
+import math
+
+import pytest
+
+from repro.core.dialect import (NO_INTERCONNECT_BYTES, TARGET,
+                                collective_cost, get_dialect)
+from repro.core.registry import (AUTO_POLICY, REGISTRY, ExecutionPolicy,
+                                 ambient_mesh_axes, cost_key,
+                                 tp_axis_size, use_mesh_axes)
+from repro.kernels import ops  # noqa: F401  (installs every variant)
+from repro.kernels.collective import TP_COSTS
+
+# the decode-regime projection shape the crossover is pinned at: small
+# row count (a serve batch), large contraction/output dims — the regime
+# where the weight stream dominates and TP has something to save
+SHAPE = dict(m=128, n=4096, k=4096)
+SMALL_TP, LARGE_TP = 4, 64
+
+
+# ---------------------------------------------------------------------------
+# ambient mesh plumbing
+# ---------------------------------------------------------------------------
+
+def test_ambient_mesh_axes_default_empty():
+    assert ambient_mesh_axes() == {}
+    assert tp_axis_size() == 1
+
+
+def test_use_mesh_axes_scopes_the_axis():
+    with use_mesh_axes({"data": 2, "model": 8}):
+        assert tp_axis_size() == 8
+        with use_mesh_axes({"model": 4}):
+            assert tp_axis_size() == 4
+        assert tp_axis_size() == 8
+    assert tp_axis_size() == 1
+
+
+# ---------------------------------------------------------------------------
+# the collective cost model itself, recomputed by hand
+# ---------------------------------------------------------------------------
+
+def test_ring_all_gather_terms_by_hand():
+    """wire = S·(G-1)/G, hops = G-1, HBM-equivalent = wire·(hbm/link)
+    + hops·latency·hbm — recomputed from the dialect constants."""
+    dialect = TARGET  # tpu-v5e
+    link = dialect.interconnect
+    payload, group = 2_097_152, 4
+    cc = collective_cost("all_gather", payload, group, dialect)
+    wire = payload * (group - 1) // group
+    assert cc.wire_bytes == wire
+    assert cc.hops == group - 1
+    expected = (wire * dialect.hbm_bandwidth / link.link_bandwidth
+                + cc.hops * link.hop_latency_s * dialect.hbm_bandwidth)
+    assert cc.hbm_equiv_bytes == int(math.ceil(expected))
+
+
+def test_ring_all_reduce_doubles_the_wire():
+    dialect = TARGET
+    cc = collective_cost("all_reduce", 1 << 20, 8, dialect)
+    assert cc.wire_bytes == 2 * (1 << 20) * 7 // 8
+    assert cc.hops == 2 * 7
+
+
+def test_group_of_one_is_free():
+    cc = collective_cost("all_gather", 1 << 30, 1, TARGET)
+    assert cc.wire_bytes == 0 and cc.hops == 0
+    assert cc.hbm_equiv_bytes == 0
+
+
+def test_no_interconnect_dialect_prices_collectives_prohibitively():
+    """apple-g13 declares no interconnect: a TP twin can never win."""
+    g13 = get_dialect("apple-g13")
+    assert g13.interconnect is None
+    cc = collective_cost("all_gather", 4096, 4, g13)
+    assert cc.hbm_equiv_bytes == NO_INTERCONNECT_BYTES
+
+
+# ---------------------------------------------------------------------------
+# the crossover, recomputed by hand
+# ---------------------------------------------------------------------------
+
+def _hand_costs(tp):
+    """Replicated-vs-TP hbm+collective totals for the abstract gemm row
+    at SHAPE, from first principles (tile model + ring model)."""
+    m, n, k = SHAPE["m"], SHAPE["n"], SHAPE["k"]
+    base = REGISTRY.structural_cost("gemm", "abstract", **SHAPE)
+    bm = base["block"][0]
+    rereads = max(1, -(-m // bm))
+    itemsize = 4
+    ws_full = k * n * itemsize * rereads
+    ws_shard = k * (-(-n // tp)) * itemsize * rereads
+    tp_hbm = base["hbm_bytes"] - (ws_full - ws_shard)
+    # ring all-gather of the [m, n] output across tp devices
+    payload = m * n * itemsize
+    wire = payload * (tp - 1) // tp
+    hops = tp - 1
+    link = TARGET.interconnect
+    equiv = int(math.ceil(wire * TARGET.hbm_bandwidth / link.link_bandwidth
+                          + hops * link.hop_latency_s
+                          * TARGET.hbm_bandwidth))
+    return base["hbm_bytes"], tp_hbm + equiv
+
+
+def test_hand_model_matches_registered_tp_cost():
+    for tp in (SMALL_TP, LARGE_TP):
+        _, hand_total = _hand_costs(tp)
+        cost = REGISTRY.structural_cost("gemm_tp", "abstract",
+                                        tp=tp, **SHAPE)
+        assert (cost["hbm_bytes"] + cost["collective_hbm_equiv_bytes"]
+                == hand_total)
+
+
+def test_crossover_exists_between_the_two_meshes():
+    """The hand-recomputed totals themselves flip between the meshes —
+    the selection flip below is forced by arithmetic, not by accident."""
+    base_small, tp_small = _hand_costs(SMALL_TP)
+    base_large, tp_large = _hand_costs(LARGE_TP)
+    assert tp_small < base_small, "TP must win the small ring"
+    assert tp_large > base_large, "replicated must win the large ring"
+
+
+def test_auto_is_mesh_sensitive():
+    """Same op, same shape, two meshes -> two different lowerings."""
+    with use_mesh_axes({"model": SMALL_TP}):
+        small = REGISTRY.select("gemm", AUTO_POLICY, shape=SHAPE)
+    with use_mesh_axes({"model": LARGE_TP}):
+        large = REGISTRY.select("gemm", AUTO_POLICY, shape=SHAPE)
+    assert small.op == "gemm_tp", "small mesh must pick the TP twin"
+    assert large.op == "gemm", "large mesh must pick replicated"
+
+
+def test_no_mesh_keeps_the_replicated_lowering():
+    low = REGISTRY.select("gemm", AUTO_POLICY, shape=SHAPE)
+    assert low.op == "gemm"
+
+
+def test_pinned_mode_never_retargets_to_the_twin():
+    """TP retarget is an auto-ranking decision only: a policy pinning an
+    explicit mode keeps the base op."""
+    with use_mesh_axes({"model": SMALL_TP}):
+        low = REGISTRY.select("gemm", ExecutionPolicy(mode="native"),
+                              shape=SHAPE)
+    assert low.op == "gemm"
+
+
+def test_no_interconnect_mesh_never_picks_tp():
+    pol = ExecutionPolicy(mode="auto", dialect="apple-g13")
+    with use_mesh_axes({"model": SMALL_TP}):
+        low = REGISTRY.select("gemm", pol, shape=SHAPE)
+    assert low.op == "gemm"
+
+
+# ---------------------------------------------------------------------------
+# twin cost invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("twin", sorted(TP_COSTS))
+def test_tp_cost_degenerates_at_axis_size_one(twin):
+    """tp=1: no shard saving, no collective — byte-identical ranking."""
+    base = twin[:-len("_tp")]
+    shape = ops.PROBE_SHAPES[twin]
+    for mode in REGISTRY.modes(twin):
+        b = REGISTRY.structural_cost(base, mode, **shape)
+        t = REGISTRY.structural_cost(twin, mode, tp=1, **shape)
+        assert t["hbm_bytes"] == b["hbm_bytes"], (twin, mode)
+        assert t["collective_hbm_equiv_bytes"] == 0
+        assert cost_key(t, REGISTRY.variant(twin, mode).mode)[:3] \
+            == cost_key(b, REGISTRY.variant(base, mode).mode)[:3]
+
+
+@pytest.mark.parametrize("twin", sorted(TP_COSTS))
+def test_tp_cost_preserves_the_fused_pair_identity(twin):
+    """hbm == unfused_pair - saved survives the shard re-pricing."""
+    shape = ops.PROBE_SHAPES[twin]
+    for mode in REGISTRY.modes(twin):
+        t = REGISTRY.structural_cost(twin, mode, tp=SMALL_TP, **shape)
+        if "hbm_bytes_unfused_pair" in t:
+            assert t["hbm_bytes"] == (t["hbm_bytes_unfused_pair"]
+                                      - t["hbm_bytes_saved"]), (twin, mode)
+        assert t["collective_bytes"] > 0
+        assert t["tp_axis"] == SMALL_TP
+
+
+def test_every_declared_twin_is_registered_both_ways():
+    pairs = REGISTRY.collective_variants()
+    assert set(pairs.values()) == set(TP_COSTS)
+    for base, twin in pairs.items():
+        assert set(REGISTRY.modes(twin)) == set(REGISTRY.modes(base))

@@ -136,6 +136,18 @@ CASES = {
     "ssd_decode": lambda pol: ops.fused_ssd_decode(
         _SSD_H0, _SSD_X[:, 0], _SSD_DT[:, 0], _SSD_A, _SSD_B[:, 0],
         _SSD_C[:, 0], policy=pol),
+    # tensor-parallel twins (ISSUE 10): same impls as their bases (the
+    # twin rows change the cost model, not the program — GSPMD owns the
+    # physical sharding), dispatched by twin name through the generic
+    # run_op helper so the matrix pins the twins' own contracts/fallbacks
+    "gemm_tp": lambda pol: ops.run_op("gemm_tp", _A, _B, policy=pol),
+    "rmsnorm_matmul_tp": lambda pol: ops.run_op(
+        "rmsnorm_matmul_tp", _X, _W, _P, policy=pol),
+    "rmsnorm_swiglu_tp": lambda pol: ops.run_op(
+        "rmsnorm_swiglu_tp", _X, _W, _WCAT, policy=pol),
+    "flash_attention_matmul_tp": lambda pol: ops.run_op(
+        "flash_attention_matmul_tp", _Q, _KV_K, _KV_V, _WO, causal=True,
+        policy=pol),
 }
 
 #: ops whose fused lowering is a *sequential* f32 accumulator rather
@@ -148,6 +160,13 @@ _TOL_BUCKETS = {"ssd_scan": "f32_accum"}
 def _reference_case(op):
     if op.endswith("_q8"):
         return CASES[op[:-3]], "int8"
+    if op.endswith("_tp"):
+        # the TP twin runs the base impl — the base library case is its
+        # reference at the base op's tolerance bucket
+        base = op[:-len("_tp")]
+        bucket = "int8" if _ENV_PRECISION == "int8" \
+            else _TOL_BUCKETS.get(base)
+        return CASES[base], bucket
     if _ENV_PRECISION == "int8":
         return CASES[op], "int8"
     return CASES[op], _TOL_BUCKETS.get(op)

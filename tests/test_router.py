@@ -1,0 +1,317 @@
+"""Fleet-level serving (ISSUE 10): the data-parallel CellRouter over N
+BatchedEngine cells must be token-for-token equivalent to a single cell,
+keep every cell's zero-per-tick-transfer invariant (one stacked harvest
+for the whole fleet in sync()), admit by least-loaded page budget with
+prefix-sharing affinity, and accept strictly more concurrent requests
+than one cell holding the same total page budget."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import build_model
+from repro.models.config import ModelConfig, ParallelConfig
+from repro.serve import (BatchedEngine, CellRouter, Request, ServeConfig,
+                         make_cells)
+
+KEY = jax.random.PRNGKey(0)
+CACHE_LEN = 32
+
+
+def tiny_model():
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=256, dtype="float32")
+    return build_model(cfg, ParallelConfig(remat="none")), cfg
+
+
+def sequential_decode(model, params, prompt, max_new, eos):
+    """Ground truth: hand-rolled prefill + one-at-a-time greedy decode
+    (same helper the single-engine equivalence suite pins against)."""
+    toks = jnp.asarray(prompt, jnp.int32)[None, :]
+    logits, cache = model.prefill(params, {"tokens": toks})
+    pad = CACHE_LEN - cache["k"].shape[3]
+    cache = {
+        "k": jnp.pad(cache["k"], ((0, 0),) * 3 + ((0, pad), (0, 0))),
+        "v": jnp.pad(cache["v"], ((0, 0),) * 3 + ((0, pad), (0, 0))),
+        "pos": cache["pos"],
+    }
+    out = [int(jnp.argmax(logits[0]))]
+    while out[-1] != eos and len(out) < max_new:
+        lg, cache = model.decode_step(
+            params, jnp.asarray([out[-1]], jnp.int32), cache)
+        out.append(int(jnp.argmax(lg[0])))
+    return out
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    model, cfg = tiny_model()
+    return model, model.init_params(KEY), cfg
+
+
+def _prompts(cfg, n, rng_key=KEY):
+    keys = jax.random.split(rng_key, n)
+    return [[int(t) for t in jax.random.randint(
+        k, (3 + i % 3,), 2, cfg.vocab_size)] for i, k in enumerate(keys)]
+
+
+def _cell_of(router: CellRouter, req: Request):
+    """Index of the cell whose slots hold ``req`` (None if unplaced)."""
+    for i, c in enumerate(router.cells):
+        if req in c.slots:
+            return i
+    return None
+
+
+class TestRouterTokenEquivalence:
+    """Same requests in, same tokens out — regardless of cell count."""
+
+    @pytest.mark.parametrize("n_cells", [1, 2, 3])
+    def test_paged_fleet_matches_sequential(self, model_and_params,
+                                            n_cells):
+        """6 requests over n cells × 2 slots: admissions spread across
+        the fleet mid-stream, yet every request matches its solo
+        decode (placement must never leak into tokens)."""
+        model, params, cfg = model_and_params
+        prompts = _prompts(cfg, 6)
+        max_news = [4, 7, 5, 6, 4, 6]
+        want = [sequential_decode(model, params, p, m, eos=-1)
+                for p, m in zip(prompts, max_news)]
+        router = make_cells(model, params, ServeConfig(
+            batch_slots=2, max_seq_len=CACHE_LEN, eos_id=-1,
+            page_size=8), n_cells)
+        done = router.run(
+            [Request(rid=i, prompt=p, max_new_tokens=m)
+             for i, (p, m) in enumerate(zip(prompts, max_news))])
+        assert len(done) == 6
+        for r in done:
+            assert not r.rejected
+            assert r.generated == want[r.rid], r.rid
+
+    def test_dense_fleet_matches_sequential(self, model_and_params):
+        """The router's dense (non-paged) path: load is free slots."""
+        model, params, cfg = model_and_params
+        prompts = _prompts(cfg, 4)
+        want = [sequential_decode(model, params, p, 5, eos=-1)
+                for p in prompts]
+        router = make_cells(model, params, ServeConfig(
+            batch_slots=1, max_seq_len=CACHE_LEN, eos_id=-1), 2)
+        done = router.run([Request(rid=i, prompt=p, max_new_tokens=5)
+                           for i, p in enumerate(prompts)])
+        assert len(done) == 4
+        for r in done:
+            assert r.generated == want[r.rid], r.rid
+
+
+class TestAdmissionPolicy:
+    def _fleet(self, model_and_params, n_cells=2, batch_slots=4,
+               num_pages=8, prefix_affinity=True):
+        model, params, cfg = model_and_params
+        scfg = ServeConfig(batch_slots=batch_slots, max_seq_len=CACHE_LEN,
+                           eos_id=-1, page_size=8, num_pages=num_pages)
+        cells = [BatchedEngine(model, params, scfg)
+                 for _ in range(n_cells)]
+        return CellRouter(cells, prefix_affinity=prefix_affinity), cfg
+
+    def test_least_loaded_by_free_pages_under_skew(self, model_and_params):
+        """Skewed page reservations (alternating 3-page and 1-page
+        requests): every admission must land on the cell that had the
+        most free pages at that moment (ties to the lowest index)."""
+        router, cfg = self._fleet(model_and_params)
+        prompts = _prompts(cfg, 6)
+        # skew the reservation via max_new: 3+20-1=22 tokens -> 3 pages,
+        # 3+4-1=6 tokens -> 1 page (page_size 8)
+        max_news = [20, 4, 20, 4, 20, 4]
+        for i, (p, m) in enumerate(zip(prompts, max_news)):
+            expect = min(range(router.num_cells), key=router._load_key)
+            req = Request(rid=i, prompt=p[:3], max_new_tokens=m)
+            assert router.admit([req]) == 1
+            assert _cell_of(router, req) == expect, i
+
+    def test_fleet_admits_strictly_more_than_one_cell(self,
+                                                      model_and_params):
+        """Acceptance: N cells splitting one cell's page budget admit
+        strictly more concurrent requests — capacity scales with slots
+        while the page budget stays fixed."""
+        model, params, cfg = model_and_params
+        prompts = _prompts(cfg, 6)
+        reqs = lambda: [Request(rid=i, prompt=p[:3], max_new_tokens=4)
+                        for i, p in enumerate(prompts)]
+        single = BatchedEngine(model, params, ServeConfig(
+            batch_slots=2, max_seq_len=CACHE_LEN, eos_id=-1,
+            page_size=8, num_pages=6))
+        n_single = single.admit(reqs())
+        router, _ = self._fleet(model_and_params, n_cells=3,
+                                batch_slots=2, num_pages=2)
+        n_fleet = router.admit(reqs())
+        assert n_single == 2            # slot-bound
+        assert n_fleet == 6             # same 6-page budget, 3x the slots
+        assert n_fleet > n_single
+
+    def test_fleet_wide_reject_of_never_admittable(self, model_and_params):
+        """A reservation exceeding EVERY cell's total pool is rejected
+        outright (consumed, done, no slot) — the single-engine
+        never-admittable rule applied fleet-wide."""
+        router, cfg = self._fleet(model_and_params, num_pages=2)
+        giant = Request(rid=0, prompt=_prompts(cfg, 1)[0],
+                        max_new_tokens=CACHE_LEN)     # 4 pages > 2
+        after = Request(rid=1, prompt=_prompts(cfg, 2)[1][:3],
+                        max_new_tokens=4)
+        assert router.admit([giant, after]) == 2
+        assert giant.rejected and giant.done and giant.slot is None
+        assert not after.rejected and _cell_of(router, after) is not None
+
+    def test_failover_walks_to_cell_with_free_slot(self, model_and_params):
+        """The least-loaded cell is slot-saturated but still has the most
+        free pages: admission must fail over to the next candidate
+        instead of dropping the request."""
+        model, params, cfg = model_and_params
+        mk = lambda pages: BatchedEngine(model, params, ServeConfig(
+            batch_slots=1, max_seq_len=CACHE_LEN, eos_id=-1,
+            page_size=8, num_pages=pages))
+        router = CellRouter([mk(4), mk(8)])
+        prompts = _prompts(cfg, 3)
+        r0 = Request(rid=0, prompt=prompts[0], max_new_tokens=8)
+        assert router.admit([r0]) == 1
+        assert _cell_of(router, r0) == 1          # bigger pool wins load
+        r1 = Request(rid=1, prompt=prompts[1], max_new_tokens=8)
+        assert router.admit([r1]) == 1
+        assert _cell_of(router, r1) == 0          # cell 1 full: failover
+        # both slots taken: FIFO stop, nothing consumed
+        r2 = Request(rid=2, prompt=prompts[2], max_new_tokens=8)
+        assert router.admit([r2]) == 0
+        assert r2.slot is None and not r2.rejected
+
+    def test_drain_removes_cell_from_admission(self, model_and_params):
+        router, cfg = self._fleet(model_and_params)
+        prompts = _prompts(cfg, 3)
+        router.drain(0)
+        r0 = Request(rid=0, prompt=prompts[0], max_new_tokens=4)
+        r1 = Request(rid=1, prompt=prompts[1], max_new_tokens=4)
+        assert router.admit([r0, r1]) == 2
+        assert _cell_of(router, r0) == 1 and _cell_of(router, r1) == 1
+        router.undrain(0)
+        r2 = Request(rid=2, prompt=prompts[2], max_new_tokens=4)
+        assert router.admit([r2]) == 1
+        assert _cell_of(router, r2) == 0          # now the least loaded
+        router.drain(0)
+        router.drain(1)
+        held = Request(rid=3, prompt=prompts[0], max_new_tokens=4)
+        assert router.admit([held]) == 0          # all drained: hold queue
+        assert not held.rejected and held.slot is None
+
+
+class TestPrefixAffinity:
+    PAGE = 4
+
+    def _shared_reqs(self, cfg):
+        shared = [7, 11, 13, 17, 19, 23, 29, 31]      # 2 full pages
+        return (Request(rid=0, prompt=shared + [41], max_new_tokens=4),
+                Request(rid=1, prompt=shared + [43], max_new_tokens=4))
+
+    def _fleet(self, model_and_params, prefix_affinity=True):
+        model, params, cfg = model_and_params
+        scfg = ServeConfig(batch_slots=2, max_seq_len=CACHE_LEN,
+                           eos_id=-1, page_size=self.PAGE)
+        cells = [BatchedEngine(model, params, scfg) for _ in range(2)]
+        return (CellRouter(cells, prefix_affinity=prefix_affinity),
+                model, params, cfg)
+
+    def test_shared_prefix_stays_on_owner_cell(self, model_and_params):
+        """The second request sharing a 2-page prompt prefix must follow
+        the pages to the first request's cell — refcount sharing only
+        works within a cell's device-resident pool — and still decode
+        its own tokens exactly."""
+        router, model, params, cfg = self._fleet(model_and_params)
+        ra, rb = self._shared_reqs(cfg)
+        assert router.admit([ra]) == 1
+        owner = _cell_of(router, ra)
+        assert router.admit([rb]) == 1
+        assert _cell_of(router, rb) == owner
+        hits = [c.pool.shared_hits for c in router.cells]
+        assert hits[owner] == 2                      # both prefix pages
+        assert hits[1 - owner] == 0
+        done = router.run([])
+        assert router.active_requests() == []
+        for r in (ra, rb):
+            assert r.generated == sequential_decode(
+                model, params, r.prompt, 4, eos=-1), r.rid
+
+    def test_affinity_off_spreads_by_load(self, model_and_params):
+        """Same two requests with affinity disabled: the second goes to
+        the emptier cell and shares nothing."""
+        router, model, params, cfg = self._fleet(model_and_params,
+                                                 prefix_affinity=False)
+        ra, rb = self._shared_reqs(cfg)
+        assert router.admit([ra]) == 1
+        assert router.admit([rb]) == 1
+        assert _cell_of(router, rb) != _cell_of(router, ra)
+        assert sum(c.pool.shared_hits for c in router.cells) == 0
+
+
+class TestTransferFreeFleet:
+    def test_tick_loop_transfer_free_one_stacked_harvest(
+            self, model_and_params, monkeypatch):
+        """Acceptance: N cells tick under ``transfer_guard('disallow')``
+        (the router adds no per-tick host sync), and the whole fleet's
+        pending history drains in exactly ONE ``jax.device_get``."""
+        model, params, cfg = model_and_params
+        router = make_cells(model, params, ServeConfig(
+            batch_slots=2, max_seq_len=CACHE_LEN, eos_id=-1,
+            page_size=8), 2)
+        prompts = _prompts(cfg, 4)
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=12)
+                for i, p in enumerate(prompts)]
+        assert router.admit(reqs) == 4
+
+        with jax.transfer_guard("disallow"):
+            for _ in range(10):
+                router.step()
+
+        calls = []
+        real = jax.device_get
+        monkeypatch.setattr(jax, "device_get",
+                            lambda x: calls.append(1) or real(x))
+        router.sync()
+        assert len(calls) == 1
+        for c in router.cells:
+            assert c._history == [] and c._stats_history == []
+            assert len(c.tick_stats) == 10
+            for r in c.slots:
+                assert r is not None and len(r.generated) >= 11
+        # idempotent: nothing pending -> no transfer at all
+        router.sync()
+        assert len(calls) == 1
+
+    def test_cell_stats_snapshot(self, model_and_params):
+        """cell_stats() (the profile script's rows) reports per-cell
+        occupancy, utilization and shared-prefix hits."""
+        model, params, cfg = model_and_params
+        router = make_cells(model, params, ServeConfig(
+            batch_slots=2, max_seq_len=CACHE_LEN, eos_id=-1,
+            page_size=8), 2)
+        router.admit([Request(rid=0, prompt=_prompts(cfg, 1)[0],
+                              max_new_tokens=8)])
+        rows = router.cell_stats()
+        assert [r["cell"] for r in rows] == [0, 1]
+        loaded = rows[0]
+        assert loaded["live_slots"] == 1 and loaded["occupied_pages"] > 0
+        assert 0 < loaded["utilization"] <= 1
+        assert rows[1]["occupied_pages"] == 0
+        assert all(not r["drained"] for r in rows)
+
+
+class TestBuildServeCells:
+    def test_launch_builder_shares_params(self):
+        """launch.cells.build_serve_cells: one param init, N cells whose
+        ``params`` are the same device buffers (data parallelism over
+        requests, not N copies of the model)."""
+        from repro.launch.cells import build_serve_cells
+        router = build_serve_cells(
+            "granite-8b",
+            ServeConfig(batch_slots=2, max_seq_len=CACHE_LEN, eos_id=-1,
+                        page_size=8),
+            n_cells=2)
+        assert isinstance(router, CellRouter) and router.num_cells == 2
+        p0, p1 = (jax.tree.leaves(c.params) for c in router.cells)
+        assert all(a is b for a, b in zip(p0, p1))
